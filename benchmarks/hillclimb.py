@@ -1,0 +1,115 @@
+"""§Perf system-side hillclimb driver: re-lowers the three chosen cells with
+one candidate change at a time and prints before/after roofline terms.
+
+Run AFTER the baseline sweep:
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell stablelm_mb4
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+# ruff: noqa: E402
+import argparse
+import json
+
+from repro.launch.dryrun import (lower_cell, lower_saif_screen,
+                                 make_production_mesh)
+from repro.configs import get_config
+
+
+def show(tag, rec):
+    print(f"{tag}: dominant={rec['dominant']} "
+          f"compute={rec['compute_s']:.3e}s memory={rec['memory_s']:.3e}s "
+          f"coll={rec['collective_s']:.3e}s "
+          f"coll_bytes={rec['collective_bytes']:.3e} "
+          f"peak_mem={rec['peak_memory_per_device']/2**30:.2f}GiB "
+          f"useful={rec.get('useful_flops_frac')}")
+    return rec
+
+
+CELLS = {}
+
+
+def cell(name):
+    def deco(f):
+        CELLS[name] = f
+        return f
+    return deco
+
+
+@cell("stablelm_base")
+def stablelm_base(mesh):
+    return lower_cell("stablelm_3b", "train_4k", mesh)
+
+
+@cell("stablelm_mb2")
+def stablelm_mb2(mesh):
+    return lower_cell("stablelm_3b", "train_4k", mesh, microbatch=2)
+
+
+@cell("stablelm_mb4")
+def stablelm_mb4(mesh):
+    return lower_cell("stablelm_3b", "train_4k", mesh, microbatch=4)
+
+
+@cell("stablelm_mb4_fsdp")
+def stablelm_mb4_fsdp(mesh):
+    return lower_cell("stablelm_3b", "train_4k", mesh, microbatch=4,
+                      fsdp=True)
+
+
+@cell("dbrx_base")
+def dbrx_base(mesh):
+    return lower_cell("dbrx_132b", "train_4k", mesh)
+
+
+@cell("dbrx_fsdp")
+def dbrx_fsdp(mesh):
+    return lower_cell("dbrx_132b", "train_4k", mesh, fsdp=True)
+
+
+@cell("dbrx_fsdp_mb4")
+def dbrx_fsdp_mb4(mesh):
+    return lower_cell("dbrx_132b", "train_4k", mesh, fsdp=True, microbatch=4)
+
+
+@cell("dbrx_fsdp_bf16grad")
+def dbrx_fsdp_bf16grad(mesh):
+    # bf16 params (compute dtype f32 master elsewhere): halves param/grad
+    # traffic + collectives — posture experiment
+    cfg = get_config("dbrx_132b").scaled(param_dtype="bfloat16")
+    return lower_cell("dbrx_132b", "train_4k", mesh, cfg_override=cfg,
+                      fsdp=True)
+
+
+@cell("screen_f32")
+def screen_f32(mesh):
+    return lower_saif_screen(mesh, dtype="float32")
+
+
+@cell("screen_bf16")
+def screen_bf16(mesh):
+    return lower_saif_screen(mesh, dtype="bfloat16")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    help=f"one of {sorted(CELLS)} or comma list")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    mesh = make_production_mesh()
+    recs = []
+    for name in args.cell.split(","):
+        rec = show(name, CELLS[name](mesh))
+        rec["cell"] = name
+        recs.append(rec)
+    if args.out:
+        with open(args.out, "a") as f:
+            for r in recs:
+                f.write(json.dumps(r) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

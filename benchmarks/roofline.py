@@ -1,0 +1,70 @@
+"""Roofline report (deliverable g): renders the dry-run JSONL records into
+the EXPERIMENTS.md tables and picks the hillclimb cells.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline \
+      --records results/dryrun_single_pod.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+
+def load(path: str) -> List[Dict]:
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def fmt_table(records: List[Dict]) -> str:
+    hdr = ("| arch | shape | dominant | compute s | memory s | coll s | "
+           "coll bytes | peak mem/dev | useful/HLO flops |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in records:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| — | {r['status'][:60]} |")
+            continue
+        uf = r.get("useful_flops_frac")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | **{r['dominant']}** "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | {r['collective_bytes']:.2e} "
+            f"| {r['peak_memory_per_device']/2**30:.1f} GiB "
+            f"| {uf:.3f} |" if uf else
+            f"| {r['arch']} | {r['shape']} | **{r['dominant']}** "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | {r['collective_bytes']:.2e} "
+            f"| {r['peak_memory_per_device']/2**30:.1f} GiB | n/a |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb(records: List[Dict]) -> Dict[str, Dict]:
+    ok = [r for r in records if r.get("status") == "ok"]
+    # worst roofline fraction: dominant term much larger than compute term
+    # => furthest from the compute roofline
+    def roofline_frac(r):
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        return r["compute_s"] / dom if dom else 1.0
+    worst = min(ok, key=roofline_frac)
+    coll = max(ok, key=lambda r: r["collective_s"] /
+               max(r["compute_s"], r["memory_s"], 1e-30))
+    return {"worst_roofline": worst, "most_collective_bound": coll}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", required=True)
+    args = ap.parse_args(argv)
+    recs = load(args.records)
+    print(fmt_table(recs))
+    picks = pick_hillclimb(recs)
+    print("\nHillclimb candidates:")
+    for k, r in picks.items():
+        print(f"  {k}: {r['arch']} x {r['shape']} (dominant {r['dominant']})")
+
+
+if __name__ == "__main__":
+    main()

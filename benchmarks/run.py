@@ -1,0 +1,48 @@
+"""Benchmark runner (deliverable d): one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--full`` runs the paper-scale
+shapes (slow on CPU); the default is a reduced sweep suitable for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: runtime,trajectory,heatmap,logistic,"
+                         "path,fused,complexity")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_complexity, bench_fused, bench_heatmap,
+                            bench_logistic, bench_path, bench_runtime,
+                            bench_trajectory)
+
+    suites = {
+        "runtime": bench_runtime,        # Fig 2
+        "trajectory": bench_trajectory,  # Fig 3
+        "heatmap": bench_heatmap,        # Fig 4
+        "logistic": bench_logistic,      # Fig 5
+        "path": bench_path,              # Fig 6 + Table 1
+        "fused": bench_fused,            # Fig 7
+        "complexity": bench_complexity,  # Thm 4/5
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    for name, mod in suites.items():
+        rows = mod.run(full=args.full)
+        for i, row in enumerate(rows):
+            t = row.get("saif_s") or row.get("saif_path_s") or 0.0
+            derived = ";".join(f"{k}={v}" for k, v in row.items())
+            print(f"{name}[{i}],{t*1e6:.1f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,28 @@
+"""Patch EXPERIMENTS.md with the rendered roofline table + hillclimb rows."""
+import json
+import sys
+
+from benchmarks.roofline import fmt_table, load, pick_hillclimb
+
+
+def main():
+    recs = load("results/dryrun_single_pod.jsonl")
+    try:
+        screen = load("results/dryrun_saif_screen.jsonl")
+    except FileNotFoundError:
+        screen = []
+    table = fmt_table(recs + screen)
+    picks = pick_hillclimb(recs)
+    pick_txt = "\n".join(
+        f"* **{k}**: `{r['arch']} x {r['shape']}` (dominant {r['dominant']})"
+        for k, r in picks.items())
+    md = open("EXPERIMENTS.md").read()
+    block = (table + "\n\nHillclimb picks (plus the paper-representative "
+             "`saif_screen` row):\n" + pick_txt)
+    md = md.replace("<!-- ROOFLINE_TABLE -->", block)
+    open("EXPERIMENTS.md", "w").write(md)
+    print("patched EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: solve a LASSO problem with SAIF and verify the safe guarantee.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import SaifConfig, get_loss, saif, solve_lasso_cm
+from repro.core.duality import lambda_max
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, p = 100, 2000
+    X = rng.uniform(-10, 10, (n, p))
+    beta_true = np.zeros(p)
+    beta_true[rng.choice(p, p // 5, replace=False)] = rng.uniform(-1, 1, p // 5)
+    y = X @ beta_true + rng.normal(0, 1, n)
+
+    loss = get_loss("least_squares")
+    lmax = float(lambda_max(loss, jnp.asarray(X), jnp.asarray(y)))
+    lam = 0.05 * lmax
+    print(f"LASSO: n={n} p={p} lambda={lam:.1f} (lambda_max={lmax:.1f})")
+
+    res = saif(X, y, lam, SaifConfig(eps=1e-7))
+    print(f"SAIF: {int(res.n_outer)} outer iters, "
+          f"|A|={int(res.n_active)}, gap={float(res.gap):.2e}")
+
+    beta_ref = solve_lasso_cm(loss, jnp.asarray(X), jnp.asarray(y), lam,
+                              tol=1e-9)
+    sup_saif = set(np.where(np.abs(np.asarray(res.beta)) > 1e-9)[0])
+    sup_ref = set(np.where(np.abs(np.asarray(beta_ref)) > 1e-9)[0])
+    print(f"support: SAIF={len(sup_saif)} reference={len(sup_ref)} "
+          f"symmetric-difference={len(sup_saif ^ sup_ref)}  <- safe == 0")
+    P = lambda b: float(loss.primal_objective(jnp.asarray(X), jnp.asarray(y),
+                                              b, lam))
+    print(f"objective: SAIF={P(res.beta):.6f} reference={P(beta_ref):.6f}")
+
+
+if __name__ == "__main__":
+    main()

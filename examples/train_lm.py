@@ -1,0 +1,27 @@
+"""End-to-end LM training driver (deliverable b): trains a reduced-config
+zoo model for a few hundred steps with checkpointing + fault tolerance.
+
+    PYTHONPATH=src python examples/train_lm.py            # ~25M params, CPU
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm_350m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    return train_main([
+        "--arch", args.arch, "--smoke", "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128", "--lr", "3e-3",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+        "--log-every", "20",
+    ])
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,2 @@
+"""repro: SAIF sparse-learning framework (JAX, multi-pod)."""
+__version__ = "0.1.0"

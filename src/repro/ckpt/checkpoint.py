@@ -1,0 +1,140 @@
+"""Checkpointing: atomic, resumable, elastic.
+
+Layout: <dir>/step_<N>/  with one .npy per flattened leaf + meta.json
+(treedef paths, step, data cursor, config digest). Writes go to a temp dir
+then os.replace() — a crash mid-flush never corrupts the latest checkpoint.
+``save_async`` flushes on a daemon thread (training continues).
+
+Elastic resume: arrays are restored host-side then ``jax.device_put`` onto
+whatever sharding the *current* mesh prescribes — restoring a 512-chip
+checkpoint onto 256 chips (or vice versa) is just a different device_put.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(ckpt_dir: str, step: int, tree: Any,
+         extra: Optional[Dict[str, Any]] = None) -> str:
+    """Synchronous atomic checkpoint write. Returns the final path."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat, _ = _flatten_with_paths(tree)
+    names = []
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(tmp, f"arr_{i:05d}.npy"), arr)
+        names.append(key)
+    meta = {"step": step, "names": names, "extra": extra or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _gc(ckpt_dir, keep=3)
+    return final
+
+
+_pending: list[threading.Thread] = []
+
+
+def save_async(ckpt_dir: str, step: int, tree: Any,
+               extra: Optional[Dict[str, Any]] = None) -> threading.Thread:
+    """Device->host copy happens now; disk flush on a daemon thread."""
+    host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+    t = threading.Thread(target=save, args=(ckpt_dir, step, host_tree, extra),
+                         daemon=True)
+    t.start()
+    _pending.append(t)
+    return t
+
+
+def wait_pending():
+    for t in _pending:
+        t.join()
+    _pending.clear()
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any,
+            shardings: Any = None) -> tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``like``; reshard onto ``shardings``
+    (a matching pytree of NamedSharding, or None for default placement)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    flat_like, treedef = _flatten_with_paths(like)
+    order = {k: i for i, k in enumerate(sorted(flat_like))}
+    assert set(meta["names"]) == set(order), (
+        "checkpoint structure mismatch: "
+        f"{set(meta['names']) ^ set(order)}")
+    arrays = {}
+    for i, key in enumerate(sorted(flat_like)):
+        arr = np.load(os.path.join(path, f"arr_{i:05d}.npy"))
+        arrays[key] = arr
+
+    leaves_sorted_keys = sorted(flat_like)
+    flat_sh = None
+    if shardings is not None:
+        flat_sh, _ = _flatten_with_paths(shardings)
+
+    restored = {}
+    for key in leaves_sorted_keys:
+        a = arrays[key]
+        like_leaf = flat_like[key]
+        a = a.astype(like_leaf.dtype) if hasattr(like_leaf, "dtype") else a
+        if flat_sh is not None:
+            restored[key] = jax.device_put(a, flat_sh[key])
+        else:
+            restored[key] = jax.device_put(a)
+
+    # rebuild in original tree order
+    flat_paths, treedef2 = jax.tree_util.tree_flatten_with_path(like)
+    out_leaves = []
+    for p, _ in flat_paths:
+        key = "/".join(_path_str(x) for x in p)
+        out_leaves.append(restored[key])
+    return jax.tree_util.tree_unflatten(treedef2, out_leaves), meta["extra"]
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+                   and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)

@@ -1,0 +1,32 @@
+"""Core SAIF library — the paper's contribution in JAX.
+
+Public API:
+  saif, SaifConfig, SaifResult           — Algorithm 1/2
+  saif_path                              — warm-started lambda path (Sec 5.3)
+  dynamic_screening                      — gap-safe dynamic baseline
+  sequential_path                        — DPP-style sequential baseline
+  homotopy_path                          — unsafe strong-rule baseline (Table 1)
+  saif_fused / fused_baseline_cm         — tree fused LASSO (Sec 4)
+  solve_lasso_cm                         — unscreened oracle solver
+"""
+from repro.core.cm import solve_lasso_cm, soft_threshold
+from repro.core.dynamic import DynConfig, dynamic_screening
+from repro.core.group import (GroupSaifConfig, group_lambda_max, group_saif,
+                              solve_group_lasso_bcd)
+from repro.core.fused import (build_tree, fused_baseline_cm, fused_objective,
+                              recover_beta, saif_fused, transform_design)
+from repro.core.homotopy import HomotopyConfig, homotopy_path, support_metrics
+from repro.core.losses import get_loss, least_squares, logistic
+from repro.core.path import lambda_grid, saif_path
+from repro.core.saif import SaifConfig, SaifResult, saif
+from repro.core.sequential import SeqConfig, sequential_path
+
+__all__ = [
+    "saif", "SaifConfig", "SaifResult", "saif_path", "lambda_grid",
+    "dynamic_screening", "DynConfig", "sequential_path", "SeqConfig",
+    "homotopy_path", "HomotopyConfig", "support_metrics",
+    "group_saif", "GroupSaifConfig", "group_lambda_max",
+    "solve_group_lasso_bcd", "saif_fused", "fused_baseline_cm", "fused_objective", "build_tree",
+    "transform_design", "recover_beta", "solve_lasso_cm", "soft_threshold",
+    "get_loss", "least_squares", "logistic",
+]

@@ -1,0 +1,124 @@
+"""Fixed-capacity active-set state (TPU adaptation of the paper's A_t / R_t).
+
+Matlab grows/shrinks arrays freely; XLA requires static shapes. The active set
+is therefore a capacity-``k_max`` buffer of feature indices plus a validity
+mask. ADD/DEL are masked scatters — the whole SAIF outer loop compiles to a
+single XLA program with no retraces.
+
+Overflow policy (documented in DESIGN.md §2): if an ADD wants more slots than
+are free, we add as many as fit and set ``overflowed``; the non-jitted driver
+in ``saif.py`` doubles capacity and re-enters (warm-started) — an explicit,
+rare recompile event, analogous to elastic resharding.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ActiveSet(NamedTuple):
+    idx: jax.Array        # int32 (k_max,) feature ids; padding slots hold 0
+    mask: jax.Array       # bool  (k_max,) slot validity
+    beta: jax.Array       # f32   (k_max,) coefficients (0 on padding)
+    in_active: jax.Array  # bool  (p,)     global membership mask
+    overflowed: jax.Array  # bool scalar — an ADD ran out of slots
+
+
+def init_active_set(p: int, k_max: int, init_idx: jax.Array,
+                    dtype=jnp.float32,
+                    init_beta: jax.Array | None = None,
+                    count: jax.Array | None = None) -> ActiveSet:
+    """Seed the buffer with ``init_idx``.
+
+    Two modes:
+      * static  (count=None): init_idx has shape (m,), m <= k_max.
+      * padded  (count given): init_idx/init_beta have shape (k_max,), the
+        first ``count`` entries are live. Keeps the shape jit-static across
+        warm-started lambda paths (no per-lambda recompiles, §Perf it. 1).
+    """
+    if count is None:
+        m = init_idx.shape[0]
+        idx = jnp.zeros((k_max,), jnp.int32).at[:m].set(
+            init_idx.astype(jnp.int32))
+        mask = jnp.zeros((k_max,), bool).at[:m].set(True)
+        beta = jnp.zeros((k_max,), dtype)
+        if init_beta is not None:
+            beta = beta.at[:m].set(init_beta.astype(dtype))
+        in_active = jnp.zeros((p,), bool).at[init_idx].set(True)
+    else:
+        slots = jnp.arange(k_max)
+        mask = slots < count
+        idx = jnp.where(mask, init_idx.astype(jnp.int32), 0)
+        beta = (jnp.where(mask, init_beta.astype(dtype), 0)
+                if init_beta is not None else jnp.zeros((k_max,), dtype))
+        in_active = jnp.zeros((p,), bool).at[
+            jnp.where(mask, idx, p)].set(True, mode="drop")
+    return ActiveSet(idx, mask, beta, in_active,
+                     overflowed=jnp.asarray(False))
+
+
+def gather_columns(X: jax.Array, aset: ActiveSet) -> jax.Array:
+    """(n, k_max) active design block; padded columns zeroed."""
+    Xa = jnp.take(X, aset.idx, axis=1)
+    return jnp.where(aset.mask[None, :], Xa, 0.0)
+
+
+def delete_features(aset: ActiveSet, drop_slot_mask: jax.Array) -> ActiveSet:
+    """DEL: clear slots flagged in ``drop_slot_mask`` (bool (k_max,))."""
+    p = aset.in_active.shape[0]
+    drop = drop_slot_mask & aset.mask
+    new_mask = aset.mask & ~drop
+    new_beta = jnp.where(drop, 0.0, aset.beta)
+    # Only dropped slots write (False) to the membership mask; padding and
+    # surviving slots scatter out-of-bounds (mode="drop" discards them).
+    write_idx = jnp.where(drop, aset.idx, p)
+    new_in_active = aset.in_active.at[write_idx].set(False, mode="drop")
+    return aset._replace(mask=new_mask, beta=new_beta,
+                         in_active=new_in_active)
+
+
+def add_features(aset: ActiveSet, cand_idx: jax.Array,
+                 cand_keep: jax.Array) -> ActiveSet:
+    """ADD: scatter kept candidates into free slots.
+
+    Args:
+      cand_idx:  int32 (h,) candidate feature ids (descending score order).
+      cand_keep: bool  (h,) which candidates to actually add.
+    """
+    k_max = aset.mask.shape[0]
+    h = cand_idx.shape[0]
+    free = ~aset.mask                                   # (k_max,)
+    # Rank free slots: free_rank[s] = number of free slots strictly before s.
+    free_rank = jnp.cumsum(free.astype(jnp.int32)) - free.astype(jnp.int32)
+    n_free = jnp.sum(free.astype(jnp.int32))
+    # Rank candidates among kept ones.
+    keep = cand_keep
+    cand_rank = jnp.cumsum(keep.astype(jnp.int32)) - keep.astype(jnp.int32)
+    n_want = jnp.sum(keep.astype(jnp.int32))
+    placed = keep & (cand_rank < n_free)
+
+    # slot for candidate c: the (cand_rank[c])-th free slot. Build a map
+    # free_order -> slot id via argsort of (free ? rank : big).
+    big = jnp.asarray(k_max + 1, jnp.int32)
+    order_key = jnp.where(free, free_rank, big)
+    slot_of_rank = jnp.argsort(order_key)               # (k_max,)
+    target_slot = slot_of_rank[jnp.clip(cand_rank, 0, k_max - 1)]
+    target_slot = jnp.where(placed, target_slot, k_max)  # k_max => dropped
+
+    new_idx = aset.idx.at[target_slot].set(cand_idx, mode="drop")
+    new_mask = aset.mask.at[target_slot].set(True, mode="drop")
+    new_beta = aset.beta.at[target_slot].set(0.0, mode="drop")
+    p = aset.in_active.shape[0]
+    new_in_active = aset.in_active.at[jnp.where(placed, cand_idx, p)].set(
+        True, mode="drop")
+    return ActiveSet(new_idx, new_mask, new_beta, new_in_active,
+                     overflowed=aset.overflowed | (n_want > n_free))
+
+
+def scatter_beta(aset: ActiveSet, p: int) -> jax.Array:
+    """Inflate the compact beta back to (p,) (Algorithm 1 last line)."""
+    out = jnp.zeros((p,), aset.beta.dtype)
+    vals = jnp.where(aset.mask, aset.beta, 0.0)
+    return out.at[jnp.where(aset.mask, aset.idx, p)].add(vals, mode="drop")

@@ -1,0 +1,132 @@
+"""Cyclic coordinate minimization ("shooting", Fu 1998) — the inner solver.
+
+This is the pure-JAX reference path; the Pallas VMEM-resident kernel in
+``repro.kernels.cm`` implements the same epoch and is tested against
+:func:`cm_epoch` as its oracle.
+
+For least squares the coordinate step is the exact minimizer
+    beta_j <- S(beta_j + x_j^T r / ||x_j||^2,  lam / ||x_j||^2),   r = y - z
+For a general alpha-smooth loss we take the standard prox-Newton-majorized
+coordinate step with per-coordinate Lipschitz L_j = alpha ||x_j||^2:
+    beta_j <- S(beta_j - x_j^T f'(z) / L_j,  lam / L_j)
+which for LS coincides with the exact step. The model vector z = Xa beta is
+maintained incrementally (rank-1 updates), exactly as the paper's C shooting
+implementation does.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import Loss
+
+
+def soft_threshold(x: jax.Array, t: jax.Array) -> jax.Array:
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+def cm_epoch(loss: Loss, Xa: jax.Array, y: jax.Array, beta: jax.Array,
+             z: jax.Array, mask: jax.Array, lam: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+    """One full cyclic sweep over the (masked) coordinates.
+
+    Args:
+      Xa:   (n, k) active design block (padded columns are arbitrary).
+      beta: (k,) current coefficients (padded entries must be 0).
+      z:    (n,) current model vector Xa @ beta.
+      mask: (k,) bool validity of each column.
+    Returns updated (beta, z).
+    """
+    alpha = loss.smoothness
+    col_sq = jnp.sum(Xa * Xa, axis=0)  # (k,)
+    k = beta.shape[0]
+
+    def body(j, carry):
+        beta, z = carry
+        xj = Xa[:, j]
+        lj = jnp.maximum(alpha * col_sq[j], 1e-30)
+        g = jnp.dot(xj, loss.grad(z, y))
+        bj_new = soft_threshold(beta[j] - g / lj, lam / lj)
+        bj_new = jnp.where(mask[j], bj_new, 0.0)
+        delta = bj_new - beta[j]
+        z = z + delta * xj
+        beta = beta.at[j].set(bj_new)
+        return beta, z
+
+    return jax.lax.fori_loop(0, k, body, (beta, z))
+
+
+def cm_epoch_compact(loss: Loss, Xa: jax.Array, y: jax.Array,
+                     beta: jax.Array, z: jax.Array, mask: jax.Array,
+                     lam: jax.Array, order: jax.Array, count: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """cm_epoch that sweeps only the ``count`` live slots listed first in
+    ``order`` (an argsort putting mask=True slots first). With a capacity
+    buffer k_max ~ 8x the live size this is ~8x fewer coordinate steps per
+    epoch (§Perf iteration 3)."""
+    alpha = loss.smoothness
+    col_sq = jnp.sum(Xa * Xa, axis=0)
+
+    def body(jj, carry):
+        beta, z = carry
+        j = order[jj]
+        xj = Xa[:, j]
+        lj = jnp.maximum(alpha * col_sq[j], 1e-30)
+        g = jnp.dot(xj, loss.grad(z, y))
+        bj_new = soft_threshold(beta[j] - g / lj, lam / lj)
+        bj_new = jnp.where(mask[j], bj_new, 0.0)
+        delta = bj_new - beta[j]
+        z = z + delta * xj
+        beta = beta.at[j].set(bj_new)
+        return beta, z
+
+    return jax.lax.fori_loop(0, count, body, (beta, z))
+
+
+def cm_epochs(loss: Loss, Xa: jax.Array, y: jax.Array, beta: jax.Array,
+              mask: jax.Array, lam: jax.Array, n_epochs: int
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Run ``n_epochs`` cyclic sweeps; returns (beta, z)."""
+    z = Xa @ jnp.where(mask, beta, 0.0)
+
+    def body(_, carry):
+        beta, z = carry
+        return cm_epoch(loss, Xa, y, beta, z, mask, lam)
+
+    beta, z = jax.lax.fori_loop(0, n_epochs, body, (beta, z))
+    return beta, z
+
+
+def solve_lasso_cm(loss: Loss, X: jax.Array, y: jax.Array, lam: float,
+                   tol: float = 1e-9, max_epochs: int = 100_000
+                   ) -> jax.Array:
+    """Unscreened full LASSO solve to duality gap <= tol (the "No Scr." baseline).
+
+    Used both as the paper's no-screening baseline and as the ground-truth
+    oracle in tests (safety checks compare active sets against this solve).
+    """
+    from repro.core.duality import dual_point, duality_gap, feasible_dual
+
+    p = X.shape[1]
+    mask = jnp.ones((p,), dtype=bool)
+    lam = jnp.asarray(lam, X.dtype)
+
+    def cond(state):
+        beta, z, gap, epoch = state
+        return (gap > tol) & (epoch < max_epochs)
+
+    def body(state):
+        beta, z, _, epoch = state
+        beta, z = cm_epoch(loss, X, y, beta, z, mask, lam)
+        hat = -loss.grad(z, y) / lam
+        theta = feasible_dual(loss, X, y, hat, lam)
+        gap = duality_gap(loss, X, y, beta, theta, lam)
+        return beta, z, gap, epoch + 1
+
+    beta0 = jnp.zeros((p,), X.dtype)
+    z0 = jnp.zeros_like(y)
+    state = (beta0, z0, jnp.asarray(jnp.inf, X.dtype), jnp.asarray(0))
+    beta, *_ = jax.lax.while_loop(cond, body, state)
+    return beta

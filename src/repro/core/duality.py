@@ -1,0 +1,153 @@
+"""Dual-variable machinery: feasibility projection, duality gap, ball regions.
+
+Implements, in order of appearance in the paper:
+  * the primal->dual map and scaled feasibility projection (Lemma 2's theta_k)
+  * the gap-safe ball   B(theta, r),  r^2 = 2*alpha*gap/lam^2        (Eq. 6/11)
+  * the sequential-style ball from lambda_max(t)                     (Thm 2)
+  * the covering ball of the intersection of two balls               (Eq. 12)
+
+All functions operate on a *sub-problem* defined by an explicit design matrix
+``Xa`` (n x k, the gathered active columns) so the same code serves SAIF
+sub-problems, dynamic screening (Xa = X), and fused LASSO (transformed X).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import Loss
+
+
+class Ball(NamedTuple):
+    center: jax.Array  # (n,)
+    radius: jax.Array  # scalar
+
+
+def dual_point(loss: Loss, Xa: jax.Array, y: jax.Array, beta: jax.Array,
+               lam: jax.Array) -> jax.Array:
+    """hat_theta = -f'(Xa beta) / lam  (the unscaled dual candidate)."""
+    z = Xa @ beta
+    return -loss.grad(z, y) / lam
+
+
+def feasible_dual(loss: Loss, X_for_constraints: jax.Array, y: jax.Array,
+                  hat_theta: jax.Array, lam: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Scale hat_theta into Omega = {theta : |x_i^T theta| <= 1 for i in set}.
+
+    Lemma 2: theta = tau * hat_theta with tau = 1 / max_i |x_i^T hat_theta|
+    (only when that max exceeds 1 — otherwise already feasible). For least
+    squares we additionally use the DPP-style optimal scaling
+    tau* = y^T hat_theta / (lam ||hat_theta||^2) clipped into the feasible
+    range, which is the projection of theta* direction (paper Thm 7 logic).
+
+    ``mask`` marks valid columns of ``X_for_constraints`` (padded actives).
+    """
+    corr = X_for_constraints.T @ hat_theta  # (k,)
+    if mask is not None:
+        corr = jnp.where(mask, corr, 0.0)
+    max_corr = jnp.max(jnp.abs(corr))
+    denom = jnp.maximum(max_corr, 1.0)
+    bound = 1.0 / jnp.maximum(max_corr, 1e-30)
+
+    if loss.name == "least_squares":
+        sq = jnp.sum(hat_theta * hat_theta)
+        tau_star = jnp.dot(y, hat_theta) / (lam * jnp.maximum(sq, 1e-30))
+        tau = jnp.clip(tau_star, -bound, bound)
+        # Fall back to simple scaling if tau* degenerate (e.g. hat_theta ~ 0).
+        tau = jnp.where(jnp.isfinite(tau), tau, 1.0 / denom)
+        return tau * hat_theta
+    # General smooth loss: plain rescale, then clamp into dom f*.
+    theta = hat_theta / denom
+    return -loss.dual_clip(-lam * theta, y) / lam
+
+
+def duality_gap(loss: Loss, Xa: jax.Array, y: jax.Array, beta: jax.Array,
+                theta: jax.Array, lam: jax.Array,
+                mask: jax.Array | None = None) -> jax.Array:
+    """P_t(beta) - D_t(theta) for the sub-problem restricted to ``Xa``."""
+    if mask is not None:
+        beta = jnp.where(mask, beta, 0.0)
+    p_val = loss.primal_objective(Xa, y, beta, lam)
+    d_val = loss.dual_objective(y, theta, lam)
+    return p_val - d_val
+
+
+def gap_ball(loss: Loss, theta: jax.Array, gap: jax.Array,
+             lam: jax.Array) -> Ball:
+    """Gap-safe ball (Eq. 6 generalized): r^2 = 2*alpha*gap / lam^2.
+
+    f is alpha-smooth => f* is (1/alpha)-strongly convex => the dual objective
+    is (lam^2/alpha)-strongly concave, giving the radius below. For least
+    squares alpha=1 recovers Eq. (6) exactly.
+    """
+    gap = jnp.maximum(gap, 0.0)
+    r = jnp.sqrt(2.0 * loss.smoothness * gap) / lam
+    return Ball(center=theta, radius=r)
+
+
+def sequential_ball(loss: Loss, y: jax.Array, theta0: jax.Array,
+                    lam0: jax.Array, lam: jax.Array) -> Ball:
+    """Theorem 2 ball around (lam0/lam) * theta0, for lam < lam0.
+
+    r^2 = (2 alpha / lam^2) [ f*(-(lam^2/lam0) theta0) - f*(-lam0 theta0)
+                              + (lam - lam0) <f*'(-lam0 theta0), theta0> ].
+
+    For least squares with theta0 = theta*(lam_max) = -f'(0)/lam_max = y/lam_max
+    this reproduces the DPP-style initial ball.
+    """
+    alpha = loss.smoothness
+    u0 = -lam0 * theta0
+    # f*'(u) for least squares is u + y; for logistic we use autodiff-free form.
+    if loss.name == "least_squares":
+        fstar_grad = u0 + y
+    else:
+        fstar_grad = jax.grad(lambda u: jnp.sum(loss.conj(u, y)))(u0)
+    term = (jnp.sum(loss.conj(-(lam * lam / lam0) * theta0, y))
+            - jnp.sum(loss.conj(u0, y))
+            + (lam - lam0) * jnp.dot(fstar_grad, theta0))
+    r2 = jnp.maximum(2.0 * alpha / (lam * lam) * term, 0.0)
+    return Ball(center=(lam0 / lam) * theta0, radius=jnp.sqrt(r2))
+
+
+def intersect_balls(b1: Ball, b2: Ball) -> Ball:
+    """Smallest ball covering B1 ∩ B2 (paper Eq. 12), robustly.
+
+    Degenerate cases (disjoint, containment, identical centers) fall back to
+    the smaller input ball, which is always a valid (if looser) cover given
+    both balls are valid containers of theta*.
+    """
+    d = jnp.linalg.norm(b1.center - b2.center)
+    r1, r2 = b1.radius, b2.radius
+    safe_d = jnp.maximum(d, 1e-30)
+    # Signed distance from b1.center to the radical plane. The paper's Eq. 12
+    # writes d1 = sqrt(r1^2 - rt^2), which drops the sign — when one center
+    # lies beyond the chord plane that formula places the cover on the wrong
+    # side and the "cover" no longer contains the lens (observed as unsafe
+    # DELs). We use the signed radical-plane form instead.
+    d1 = (d * d + r1 * r1 - r2 * r2) / (2.0 * safe_d)
+    rt = jnp.sqrt(jnp.maximum(r1 * r1 - d1 * d1, 0.0))  # half-chord radius
+    center_t = (1.0 - d1 / safe_d) * b1.center + (d1 / safe_d) * b2.center
+
+    # Ball(center_t, rt) covers B1 ∩ B2 iff the spheres genuinely intersect
+    # AND the radical center lies between the two centers (0 <= d1 <= d);
+    # otherwise one lens cap bulges past the chord disk. Require improvement
+    # too, else fall back to the smaller input ball (always a valid cover).
+    intersects = (d <= r1 + r2) & (d >= jnp.abs(r1 - r2))
+    between = (d1 >= 0.0) & (d1 <= d)
+    use_lens = intersects & between & (rt < jnp.minimum(r1, r2))
+
+    small_is_1 = r1 <= r2
+    fallback_c = jnp.where(small_is_1, b1.center, b2.center)
+    fallback_r = jnp.minimum(r1, r2)
+    center = jnp.where(use_lens, center_t, fallback_c)
+    radius = jnp.where(use_lens, rt, fallback_r)
+    return Ball(center=center, radius=radius)
+
+
+def lambda_max(loss: Loss, X: jax.Array, y: jax.Array) -> jax.Array:
+    """Smallest lam with beta* = 0:  max_i |x_i^T f'(0)|   (paper Sec 2.2)."""
+    g0 = loss.grad(jnp.zeros_like(y), y)
+    return jnp.max(jnp.abs(X.T @ g0))

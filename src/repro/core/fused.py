@@ -1,0 +1,152 @@
+"""Tree fused LASSO via the column transform of Theorem 6.
+
+Problem (17):  min_beta  sum_j f(x_j. beta, y_j) + lam ||D beta||_1,
+where D has one row per edge of a tree G(F, E).
+
+Theorem 6 construction, concretely: root the tree; new variables are
+  beta_tilde_e = beta_child(e) - beta_parent(e)   (one per edge, penalized)
+  b            = beta_root                        (unpenalized)
+so beta_v = b + sum of beta_tilde along the root->v path, giving
+  x_tilde_e = sum of x_v over the subtree below edge e      (transformed col)
+  x_tilde_p = sum of all x_v                                (the b column)
+and D T = [I 0]: the fused problem becomes a plain LASSO (18) in beta_tilde
+with one unpenalized coordinate b.
+
+For least squares the unpenalized b is eliminated *exactly* by projecting y
+and every transformed column orthogonal to the b-column (standard partialled-
+out regression), after which ANY LASSO solver — SAIF included — applies
+unchanged and retains its safe guarantee. Theorem 7's tau-projection is what
+`duality.feasible_dual` already performs on the reduced problem.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.saif import SaifConfig, saif
+from repro.core.cm import solve_lasso_cm
+from repro.core.losses import get_loss
+
+
+class TreeTransform(NamedTuple):
+    """Static description of the Theorem-6 transform for a given tree."""
+    parent: np.ndarray        # (p,) parent[v] = parent node id, -1 at root
+    edge_child: np.ndarray    # (p-1,) child node of edge e
+    topo: np.ndarray          # (p,) nodes in topological (root-first) order
+    root: int
+
+
+def build_tree(parent: np.ndarray) -> TreeTransform:
+    parent = np.asarray(parent, np.int64)
+    (roots,) = np.where(parent < 0)
+    if len(roots) != 1:
+        raise ValueError("parent array must encode exactly one root")
+    root = int(roots[0])
+    p = len(parent)
+    # topological order via BFS from root
+    children: list[list[int]] = [[] for _ in range(p)]
+    for v, pa in enumerate(parent):
+        if pa >= 0:
+            children[pa].append(v)
+    topo, stack = [], [root]
+    while stack:
+        v = stack.pop()
+        topo.append(v)
+        stack.extend(children[v])
+    if len(topo) != p:
+        raise ValueError("parent array does not encode a connected tree")
+    edge_child = np.asarray([v for v in range(p) if v != root], np.int64)
+    return TreeTransform(parent=parent, edge_child=edge_child,
+                         topo=np.asarray(topo, np.int64), root=root)
+
+
+def transform_design(X: np.ndarray, tree: TreeTransform
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (X_bar (n, p-1) edge columns, xb (n,) the b column).
+
+    x_tilde for edge e = subtree sum of X columns below e: accumulate child
+    into parent in reverse topological order.
+    """
+    X = np.asarray(X)
+    sub = X.copy()                      # sub[:, v] accumulates subtree sums
+    for v in tree.topo[::-1]:
+        pa = tree.parent[v]
+        if pa >= 0:
+            sub[:, pa] += sub[:, v]
+    xb = sub[:, tree.root].copy()
+    X_bar = sub[:, tree.edge_child]
+    return X_bar, xb
+
+
+def recover_beta(beta_tilde: np.ndarray, b: float,
+                 tree: TreeTransform) -> np.ndarray:
+    """beta = T [beta_tilde; b]: prefix-sum the edge deltas down the tree."""
+    p = len(tree.parent)
+    edge_of_child = np.full(p, -1, np.int64)
+    edge_of_child[tree.edge_child] = np.arange(p - 1)
+    beta = np.zeros(p)
+    for v in tree.topo:
+        pa = tree.parent[v]
+        if pa < 0:
+            beta[v] = b
+        else:
+            beta[v] = beta[pa] + beta_tilde[edge_of_child[v]]
+    return beta
+
+
+def eliminate_b_ls(X_bar: np.ndarray, xb: np.ndarray, y: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Least-squares exact elimination of the unpenalized coordinate b.
+
+    min_b 0.5||X_bar bt + xb b - y||^2 is quadratic in b; substituting the
+    minimizer projects everything orthogonal to xb.
+    """
+    q = xb / max(np.linalg.norm(xb), 1e-30)
+    Xp = X_bar - np.outer(q, q @ X_bar)
+    yp = y - q * (q @ y)
+    return Xp, yp
+
+
+def recover_b_ls(X_bar, xb, y, beta_tilde) -> float:
+    r = y - X_bar @ beta_tilde
+    return float((xb @ r) / max(xb @ xb, 1e-30))
+
+
+def saif_fused(X, y, parent, lam: float,
+               config: SaifConfig = SaifConfig()) -> Tuple[np.ndarray, object]:
+    """Solve tree fused LASSO (least squares) with SAIF. Returns (beta, result)."""
+    if config.loss != "least_squares":
+        raise NotImplementedError(
+            "fused LASSO is wired for least squares (see DESIGN.md §6); "
+            "the transform itself is loss-agnostic")
+    tree = build_tree(np.asarray(parent))
+    X_bar, xb = transform_design(np.asarray(X), tree)
+    Xp, yp = eliminate_b_ls(X_bar, xb, np.asarray(y, X_bar.dtype))
+    res = saif(jnp.asarray(Xp), jnp.asarray(yp), lam, config)
+    beta_tilde = np.asarray(res.beta)
+    b = recover_b_ls(X_bar, xb, np.asarray(y, X_bar.dtype), beta_tilde)
+    return recover_beta(beta_tilde, b, tree), res
+
+
+def fused_baseline_cm(X, y, parent, lam: float, tol: float = 1e-9
+                      ) -> np.ndarray:
+    """Unscreened fused solve (the 'CVX' stand-in baseline for Fig 7)."""
+    tree = build_tree(np.asarray(parent))
+    X_bar, xb = transform_design(np.asarray(X), tree)
+    Xp, yp = eliminate_b_ls(X_bar, xb, np.asarray(y, X_bar.dtype))
+    beta_tilde = np.asarray(
+        solve_lasso_cm(get_loss("least_squares"), jnp.asarray(Xp),
+                       jnp.asarray(yp), lam, tol=tol))
+    b = recover_b_ls(X_bar, xb, np.asarray(y, X_bar.dtype), beta_tilde)
+    return recover_beta(beta_tilde, b, tree)
+
+
+def fused_objective(X, y, parent, beta, lam) -> float:
+    """Direct evaluation of (17) for validation."""
+    tree = build_tree(np.asarray(parent))
+    r = np.asarray(X) @ beta - np.asarray(y)
+    pen = np.abs(beta[tree.edge_child] -
+                 beta[tree.parent[tree.edge_child]]).sum()
+    return float(0.5 * (r @ r) + lam * pen)

@@ -1,0 +1,116 @@
+"""Unsafe strong-rule homotopy baseline (Tibshirani et al. 2012; Zhao 2017).
+
+Reproduces the paper's Table-1 antagonist: a pathwise coordinate-descent
+solver whose active set is initialized per-lambda by the *strong rule*
+    |x_i^T f'(X beta(lam_prev))| >= 2 lam - lam_prev
+plus warm start, WITHOUT a safe convergence check on the discarded set.
+It can therefore miss true active features (recall < 1) and retain spurious
+ones (precision < 1) — exactly the failure mode Table 1 quantifies.
+
+A ``kkt_check`` switch turns the method into its safe variant (violations
+re-enter the active set until none remain) so tests can demonstrate both
+behaviours.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cm import cm_epoch
+from repro.core.duality import duality_gap, feasible_dual
+from repro.core.losses import get_loss
+from repro.core.sequential import _solve_reduced
+
+
+@dataclasses.dataclass(frozen=True)
+class HomotopyConfig:
+    eps: float = 1e-6
+    inner_epochs: int = 10
+    max_outer: int = 5000
+    kkt_check: bool = False   # False = paper's unsafe baseline
+    # Greedy active-set truncation (Zhao 2017-style pathwise CD keeps only
+    # the top-scoring candidates, "no safe convergence stopping criteria for
+    # the active set" — the failure source Table 1 quantifies). 0 = off
+    # (pure strong rule); k>0 caps the set at warm-support + k candidates.
+    greedy_cap: int = 0
+    loss: str = "least_squares"
+
+
+class HomotopyResult(NamedTuple):
+    lams: np.ndarray
+    betas: List[jax.Array]
+    supports: List[np.ndarray]
+    coord_updates: int
+
+
+def homotopy_path(X, y, lams: Sequence[float],
+                  config: HomotopyConfig = HomotopyConfig()) -> HomotopyResult:
+    loss = get_loss(config.loss)
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    n, p = X.shape
+    g0 = loss.grad(jnp.zeros_like(y), y)
+    lam_max = float(jnp.max(jnp.abs(X.T @ g0)))
+
+    lams = np.asarray(sorted([float(l) for l in lams], reverse=True))
+    betas, supports = [], []
+    coord_updates = 0
+
+    lam_prev = lam_max
+    beta_full = jnp.zeros((p,), X.dtype)
+
+    for lam_f in lams:
+        lam = jnp.asarray(min(lam_f, lam_max * (1 - 1e-12)), X.dtype)
+        # strong rule on the residual correlations at the previous solution
+        corr = jnp.abs(X.T @ loss.grad(X @ beta_full, y))
+        strong = np.array(corr >= 2.0 * float(lam) - lam_prev)
+        if config.greedy_cap > 0:
+            # truncated pathwise variant: keep only the top-`cap` strong
+            # candidates by correlation (plus the warm support)
+            cand = np.where(strong)[0]
+            if len(cand) > config.greedy_cap:
+                order = np.argsort(-np.asarray(corr)[cand])
+                keep = cand[order[:config.greedy_cap]]
+                strong[:] = False
+                strong[keep] = True
+        strong |= np.array(jnp.abs(beta_full) > 0)   # warm-start support
+        if not strong.any():
+            strong[int(jnp.argmax(corr))] = True
+
+        while True:
+            idx = np.where(strong)[0]
+            Xr = X[:, idx]
+            beta_r, z, gap, t = _solve_reduced(
+                loss, Xr, y, lam, beta_full[idx],
+                jnp.asarray(config.eps, X.dtype),
+                config.inner_epochs, config.max_outer)
+            coord_updates += int(t) * config.inner_epochs * len(idx)
+            beta_full = jnp.zeros((p,), X.dtype).at[idx].set(beta_r)
+            if not config.kkt_check:
+                break
+            # safe variant: re-admit KKT violators among discarded features
+            corr_all = jnp.abs(X.T @ loss.grad(X @ beta_full, y))
+            viol = np.asarray(corr_all > float(lam) * (1 + 1e-9)) & ~strong
+            if not viol.any():
+                break
+            strong |= viol
+
+        betas.append(beta_full)
+        supports.append(np.where(np.asarray(jnp.abs(beta_full) > 1e-8))[0])
+        lam_prev = float(lam)
+
+    return HomotopyResult(lams=lams, betas=betas, supports=supports,
+                          coord_updates=coord_updates)
+
+
+def support_metrics(est_support: np.ndarray, true_support: np.ndarray):
+    """Recall / precision of a recovered support vs the safe ground truth."""
+    est, true = set(est_support.tolist()), set(true_support.tolist())
+    tp = len(est & true)
+    recall = tp / len(true) if true else 1.0     # vacuous: nothing to recall
+    precision = tp / len(est) if est else 1.0    # vacuous: nothing spurious
+    return recall, precision

@@ -1,0 +1,134 @@
+"""Loss functions for the general LASSO problem (paper Eq. 1-3).
+
+The paper works with an ``alpha``-smooth, ``gamma``-convex loss ``f`` whose
+conjugate ``f*`` is (1/alpha)-strongly-convex (Kakade et al. 2009, Thm 6).
+We implement the two losses the paper evaluates:
+
+* least-squares  f(z, y) = 0.5 (z - y)^2          (alpha = 1)
+* logistic       f(z, y) = log(1 + exp(-y z))     (alpha = 1/4, labels y in {-1, +1})
+
+Each loss exposes the pieces the SAIF machinery needs:
+  value(z, y)        elementwise loss
+  grad(z, y)         f'(z, y) w.r.t. z  (the "residual" vector up to sign)
+  conj(u, y)         f*(u, y) elementwise conjugate
+  smoothness         alpha such that f'' <= alpha (dual strong convexity 1/alpha)
+  dual_domain(u, y)  clamp u into dom f* (identity for LS)
+
+Everything is pure jnp so it vmaps/jits/shards transparently.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Loss:
+    """Bundle of the loss-specific callables used throughout core/."""
+
+    name: str
+    value: Callable[[jax.Array, jax.Array], jax.Array]
+    grad: Callable[[jax.Array, jax.Array], jax.Array]
+    conj: Callable[[jax.Array, jax.Array], jax.Array]
+    smoothness: float  # alpha: f is alpha-smooth  =>  f* is (1/alpha)-strongly convex
+    dual_clip: Callable[[jax.Array, jax.Array], jax.Array]
+
+    def primal_objective(self, X: jax.Array, y: jax.Array, beta: jax.Array,
+                         lam: jax.Array) -> jax.Array:
+        """P(beta) = sum_j f(x_j. beta, y_j) + lam ||beta||_1."""
+        z = X @ beta
+        return jnp.sum(self.value(z, y)) + lam * jnp.sum(jnp.abs(beta))
+
+    def dual_objective(self, y: jax.Array, theta: jax.Array,
+                       lam: jax.Array) -> jax.Array:
+        """D(theta) = -sum_j f*(-lam theta_j, y_j)   (paper Eq. 2)."""
+        return -jnp.sum(self.conj(-lam * theta, y))
+
+
+# --------------------------------------------------------------------------
+# Least squares: f(z, y) = 0.5 (z - y)^2
+#   f'(z, y)  = z - y
+#   f*(u, y)  = 0.5 u^2 + u y     (since f*(u) = sup_z uz - 0.5(z-y)^2)
+# --------------------------------------------------------------------------
+
+def _ls_value(z, y):
+    d = z - y
+    return 0.5 * d * d
+
+
+def _ls_grad(z, y):
+    return z - y
+
+
+def _ls_conj(u, y):
+    return 0.5 * u * u + u * y
+
+
+def _ls_dual_clip(u, y):
+    return u
+
+
+least_squares = Loss(
+    name="least_squares",
+    value=_ls_value,
+    grad=_ls_grad,
+    conj=_ls_conj,
+    smoothness=1.0,
+    dual_clip=_ls_dual_clip,
+)
+
+
+# --------------------------------------------------------------------------
+# Logistic: f(z, y) = log(1 + exp(-y z)), y in {-1, +1}
+#   f'(z, y)  = -y sigma(-y z)
+#   f*(u, y): with s = -u y in [0, 1],
+#       f*(u, y) = s log s + (1 - s) log(1 - s)   (negative entropy), else +inf
+# --------------------------------------------------------------------------
+
+def _xlogx(s):
+    return jnp.where(s > 0, s * jnp.log(jnp.where(s > 0, s, 1.0)), 0.0)
+
+
+def _logit_value(z, y):
+    # log(1 + exp(-yz)) computed stably.
+    m = -y * z
+    return jnp.logaddexp(0.0, m)
+
+
+def _logit_grad(z, y):
+    return -y * jax.nn.sigmoid(-y * z)
+
+
+def _logit_conj(u, y):
+    s = -u * y
+    return _xlogx(s) + _xlogx(1.0 - s)
+
+
+def _logit_dual_clip(u, y):
+    # dom f* is { u : -u y in [0, 1] } ; clip to the interior for finiteness.
+    eps = 1e-12
+    s = jnp.clip(-u * y, eps, 1.0 - eps)
+    return -s * y
+
+
+logistic = Loss(
+    name="logistic",
+    value=_logit_value,
+    grad=_logit_grad,
+    conj=_logit_conj,
+    smoothness=0.25,
+    dual_clip=_logit_dual_clip,
+)
+
+
+LOSSES = {"least_squares": least_squares, "logistic": logistic}
+
+
+def get_loss(name: str) -> Loss:
+    try:
+        return LOSSES[name]
+    except KeyError:
+        raise ValueError(f"unknown loss {name!r}; options: {sorted(LOSSES)}")

@@ -1,0 +1,44 @@
+"""Warm-started SAIF lambda-path driver (paper Sec 5.3)."""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.saif import SaifConfig, SaifResult, saif
+
+
+class SaifPathResult(NamedTuple):
+    lams: np.ndarray
+    betas: List[jnp.ndarray]
+    results: List[SaifResult]
+
+
+def saif_path(X, y, lams: Sequence[float],
+              config: SaifConfig = SaifConfig()) -> SaifPathResult:
+    """Solve a descending lambda path; each solve warm-starts from the last."""
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    lams = np.asarray(sorted([float(l) for l in lams], reverse=True))
+    betas, results = [], []
+    warm_idx = warm_beta = None
+    for lam in lams:
+        res = saif(X, y, float(lam), config,
+                   warm_idx=warm_idx, warm_beta=warm_beta)
+        betas.append(res.beta)
+        results.append(res)
+        support = jnp.nonzero(jnp.abs(res.beta) > 0,
+                              size=res.beta.shape[0], fill_value=0)[0]
+        n_sup = int(jnp.sum(jnp.abs(res.beta) > 0))
+        if n_sup > 0:
+            warm_idx = support[:n_sup]
+            warm_beta = res.beta[warm_idx]
+        else:
+            warm_idx = warm_beta = None
+    return SaifPathResult(lams=lams, betas=betas, results=results)
+
+
+def lambda_grid(lam_max: float, n: int, lo_frac: float = 1e-3) -> np.ndarray:
+    """Log-evenly spaced descending grid in [lo_frac*lam_max, lam_max)."""
+    return np.geomspace(lam_max * (1 - 1e-9), lam_max * lo_frac, n)

@@ -1,0 +1,313 @@
+"""SAIF — Safe Active Incremental Feature selection (paper Algorithms 1 & 2).
+
+The entire outer loop is a single jitted ``lax.while_loop``; the active set is
+the fixed-capacity buffer from :mod:`repro.core.active_set`. The only O(p)
+work per outer step is the screening scan ``|X^T theta|`` (gated on the ADD
+phase), exactly the cost profile Theorem 5 predicts. That scan is pluggable:
+the default is a jnp matvec; ``repro.kernels.screen`` provides the Pallas TPU
+kernel and ``repro.distributed.saif_sharded`` the multi-pod shard_map version
+— all three compute the same function (tested against each other).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import active_set as aset_lib
+from repro.core.active_set import ActiveSet
+from repro.core.cm import cm_epoch, cm_epoch_compact
+from repro.core.duality import (Ball, dual_point, duality_gap, feasible_dual,
+                                gap_ball, intersect_balls, sequential_ball)
+from repro.core.losses import Loss, get_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class SaifConfig:
+    """Hyper-parameters of Algorithm 1/2 (paper defaults where given)."""
+    eps: float = 1e-6            # stopping duality gap
+    inner_epochs: int = 5        # K soft-threshold sweeps per outer step
+    polish_factor: int = 8       # K multiplier once ADD has stopped (§Perf:
+    #   the accuracy-pursuit phase has no screening decisions to make, so
+    #   longer CM bursts amortize the per-outer dual/gap/gather overhead)
+    c: float = 1.0               # ADD batch size constant (h formula)
+    zeta: float = 1.0            # violation tolerance multiplier (h~ = zeta h)
+    k_max: Optional[int] = None  # active-set capacity (None => auto)
+    max_outer: int = 2000        # while_loop guard / trace length
+    delta0: Optional[float] = None  # initial radius factor (None => lam/lam_max)
+    use_seq_ball: bool = True    # intersect Thm-2 ball with the gap ball
+    loss: str = "least_squares"
+
+
+class SaifResult(NamedTuple):
+    beta: jax.Array          # (p,) full solution
+    gap: jax.Array           # final sub-problem duality gap
+    n_outer: jax.Array       # outer iterations executed
+    n_active: jax.Array      # final |A_t|
+    overflowed: jax.Array    # capacity overflow flag
+    trace_n_active: jax.Array  # (max_outer,) |A_t| per outer step (-1 pad)
+    trace_gap: jax.Array       # (max_outer,)
+    trace_dual: jax.Array      # (max_outer,) D(theta_t)
+
+
+class _State(NamedTuple):
+    aset: ActiveSet
+    z: jax.Array        # (n,) model vector Xa beta
+    gap: jax.Array
+    delta: jax.Array
+    is_add: jax.Array   # bool
+    stop: jax.Array     # bool
+    t: jax.Array        # outer counter
+    trace_n_active: jax.Array
+    trace_gap: jax.Array
+    trace_dual: jax.Array
+
+
+def add_batch_size(c: float, lam: float, c0: jax.Array, p: int) -> int:
+    """h = ceil(c log((md+mx)/lam) log p)  — paper Sec 2.2 (static value).
+
+    Rounded up to the next power of two: h is a jit-static argument, so
+    bucketing caps the number of recompiles across a lambda path at
+    O(log p) instead of one per lambda (§Perf iteration 1).
+    """
+    mx = float(jnp.max(c0))
+    md = float(jnp.median(c0))
+    h = math.ceil(max(c * math.log(max((md + mx) / lam, 1.0 + 1e-9))
+                      * math.log(max(p, 2)), 1.0))
+    h = 1 << (max(h, 1) - 1).bit_length()       # next pow2 bucket
+    return max(min(h, p), 1)
+
+
+def default_capacity(h: int, p: int) -> int:
+    return int(min(p, max(8 * h, 64)))
+
+
+ScanFn = Callable[[jax.Array], jax.Array]
+# signature: theta (n,) -> |X^T theta| (p,)
+
+
+def _make_scan(X: jax.Array) -> ScanFn:
+    def scan(theta):
+        return jnp.abs(X.T @ theta)
+    return scan
+
+
+@partial(jax.jit, static_argnames=("loss_name", "h", "h_tilde", "k_max",
+                                   "inner_epochs", "polish_factor",
+                                   "max_outer", "use_seq_ball", "scan_fn"))
+def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
+              init_count,
+              *, loss_name: str, h: int, h_tilde: int, k_max: int,
+              inner_epochs: int, polish_factor: int, max_outer: int,
+              use_seq_ball: bool,
+              scan_fn: Optional[ScanFn] = None) -> SaifResult:
+    loss = get_loss(loss_name)
+    n, p = X.shape
+    lam = jnp.asarray(lam, X.dtype)
+    scan = scan_fn if scan_fn is not None else _make_scan(X)
+
+    lam_max_full = jnp.max(c0)
+    g0 = loss.grad(jnp.zeros_like(y), y)   # f'(0)
+
+    aset0 = aset_lib.init_active_set(p, k_max, init_idx, X.dtype, init_beta,
+                                     count=init_count)
+    trace0 = jnp.full((max_outer,), -1.0, X.dtype)
+    state0 = _State(aset=aset0, z=jnp.zeros_like(y),
+                    gap=jnp.asarray(jnp.inf, X.dtype),
+                    delta=jnp.asarray(delta0, X.dtype),
+                    is_add=jnp.asarray(True), stop=jnp.asarray(False),
+                    t=jnp.asarray(0),
+                    trace_n_active=trace0, trace_gap=trace0, trace_dual=trace0)
+
+    def cond(s: _State):
+        return (~s.stop) & (s.t < max_outer)
+
+    def body(s: _State) -> _State:
+        aset = s.aset
+        Xa = aset_lib.gather_columns(X, aset)
+
+        # --- K epochs of coordinate minimization on the sub-problem --------
+        # (K * polish_factor once recruiting is done — §Perf iteration 2;
+        #  sweeps only live slots — §Perf iteration 3)
+        order = jnp.argsort(~aset.mask)
+        count = jnp.sum(aset.mask)
+
+        def cm_body(_, carry):
+            beta, z = carry
+            return cm_epoch_compact(loss, Xa, y, beta, z, aset.mask, lam,
+                                    order, count)
+        n_ep = jnp.where(s.is_add, inner_epochs,
+                         inner_epochs * polish_factor)
+        beta, z = jax.lax.fori_loop(
+            0, n_ep, cm_body, (aset.beta, Xa @ aset.beta))
+        aset = aset._replace(beta=beta)
+
+        # --- dual point, gap, ball region (Eq. 11 / Thm 2 / Eq. 12) --------
+        hat = -loss.grad(z, y) / lam
+        theta = feasible_dual(loss, Xa, y, hat, lam, aset.mask)
+        gap = duality_gap(loss, Xa, y, beta, theta, lam, aset.mask)
+        ball = gap_ball(loss, theta, gap, lam)
+        if use_seq_ball:
+            # lam_max(t) over the *active* features (paper Sec 2.2).
+            c0_active = jnp.where(aset.mask, jnp.take(c0, aset.idx), -jnp.inf)
+            lam0t = jnp.maximum(jnp.max(c0_active), lam * (1 + 1e-12))
+            theta0t = -g0 / lam0t
+            b_seq = sequential_ball(loss, y, theta0t, lam0t, lam)
+            ball = intersect_balls(b_seq, ball)
+        # delta shrinks the radius for the ADD-side rules only (its paper
+        # role: avoid recruiting inaccurately-screened features early). DEL
+        # keeps the full gap-safe radius: a delta-shrunk DEL can evict
+        # genuinely-active features of the sub-problem, destroying CM
+        # progress and thrashing (observed experimentally; documented
+        # deviation in DESIGN.md §2).
+        r_eff = s.delta * ball.radius
+        r_del = ball.radius
+        theta_c = ball.center
+
+        # --- global stop check (gap target reached & recruiting finished) --
+        stop_now = (~s.is_add) & (gap <= eps)
+
+        # --- DEL (gap-safe rule on the sub-problem) ------------------------
+        corr_act = jnp.abs(Xa.T @ theta_c)                     # (k_max,)
+        norm_act = jnp.where(aset.mask, jnp.take(col_norm, aset.idx), 0.0)
+        del_mask = aset.mask & (corr_act + norm_act * r_del < 1.0)
+        aset = jax.lax.cond(
+            stop_now, lambda a: a,
+            lambda a: aset_lib.delete_features(a, del_mask), aset)
+
+        # --- ADD phase ------------------------------------------------------
+        def do_add_phase(args):
+            aset, delta, is_add = args
+            scores = scan(theta_c)                              # (p,) |x^T th|
+            scores = jnp.where(aset.in_active, -jnp.inf, scores)
+            ub = scores + col_norm * r_eff
+            # stop criterion for ADD (Remark 1): max_{R_t} ub < 1
+            add_done = jnp.max(ub) < 1.0
+
+            def on_done(args):
+                aset, delta, is_add = args
+                grown = jnp.minimum(10.0 * delta, 1.0)
+                new_delta = jnp.where(delta < 1.0, grown, delta)
+                new_is_add = jnp.where(delta < 1.0, is_add, False)
+                return aset, new_delta, new_is_add
+
+            def on_add(args):
+                aset, delta, is_add = args
+                # Algorithm 2: candidates = top-h by score; candidate l is
+                # added iff its violation count |V_i| < h~, evaluated against
+                # R_t minus the better-ranked candidates (cumulative-AND).
+                top_scores, top_idx = jax.lax.top_k(scores, h)
+                lb_cand = jnp.abs(top_scores -
+                                  jnp.take(col_norm, top_idx) * r_eff)
+                # #{i~ in R_t : ub_i~ >= lb_cand}, minus self & better-ranked
+                ub_sorted = jnp.sort(ub)                        # ascending
+                ge_count = ub.shape[0] - jnp.searchsorted(
+                    ub_sorted, lb_cand, side="left")
+                ranks = jnp.arange(h)
+                v_count = jnp.maximum(ge_count - 1 - ranks, 0)
+                keep = (v_count < h_tilde) & jnp.isfinite(top_scores)
+                keep = jnp.cumprod(keep.astype(jnp.int32)).astype(bool)
+                # Progress guarantee (TPU adaptation, DESIGN.md §2): when the
+                # sub-problem is already solved to near-target accuracy but no
+                # candidate passes the violation test (radius floored by
+                # arithmetic precision), force-recruit the top-scoring
+                # feature. ADDing extra features is always safe (Thm 1a) —
+                # it can only cost compute, never correctness.
+                stuck = gap <= 100.0 * eps
+                keep = keep.at[0].set(keep[0] | (stuck &
+                                                 jnp.isfinite(top_scores[0])))
+                return (aset_lib.add_features(aset, top_idx.astype(jnp.int32),
+                                              keep), delta, is_add)
+
+            return jax.lax.cond(add_done, on_done, on_add,
+                                (aset, delta, is_add))
+
+        aset, delta, is_add = jax.lax.cond(
+            s.is_add & ~stop_now, do_add_phase,
+            lambda args: args, (aset, s.delta, s.is_add))
+
+        dual_val = loss.dual_objective(y, theta, lam)   # feasible point
+        n_act = jnp.sum(aset.mask).astype(X.dtype)
+        return _State(
+            aset=aset, z=z, gap=gap, delta=delta, is_add=is_add,
+            stop=stop_now, t=s.t + 1,
+            trace_n_active=s.trace_n_active.at[s.t].set(n_act),
+            trace_gap=s.trace_gap.at[s.t].set(gap),
+            trace_dual=s.trace_dual.at[s.t].set(dual_val))
+
+    final = jax.lax.while_loop(cond, body, state0)
+    beta_full = aset_lib.scatter_beta(final.aset, p)
+    return SaifResult(beta=beta_full, gap=final.gap, n_outer=final.t,
+                      n_active=jnp.sum(final.aset.mask),
+                      overflowed=final.aset.overflowed,
+                      trace_n_active=final.trace_n_active,
+                      trace_gap=final.trace_gap,
+                      trace_dual=final.trace_dual)
+
+
+def saif(X, y, lam: float, config: SaifConfig = SaifConfig(),
+         scan_fn: Optional[ScanFn] = None,
+         warm_idx: Optional[jax.Array] = None,
+         warm_beta: Optional[jax.Array] = None) -> SaifResult:
+    """Solve LASSO at ``lam`` with SAIF. Host-level driver.
+
+    Handles the static pieces (h, capacity, initial active set) and the
+    capacity-overflow recompile loop; everything else runs inside one jitted
+    while_loop.
+    """
+    loss = get_loss(config.loss)
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    n, p = X.shape
+    g0 = loss.grad(jnp.zeros_like(y), y)
+    c0 = jnp.abs(X.T @ g0)
+    col_norm = jnp.linalg.norm(X, axis=0)
+    lam_max = float(jnp.max(c0))
+
+    h = add_batch_size(config.c, lam, c0, p)
+    h_tilde = max(int(math.ceil(config.zeta * h)), 1)
+    k_max = config.k_max or default_capacity(h, p)
+    delta0 = config.delta0 if config.delta0 is not None else \
+        min(max(lam / lam_max, 1e-3), 1.0)
+
+    # Initial active set: top-h' by |X^T f'(0)| (Algorithm 1 line 1),
+    # or a warm start from a neighbouring lambda (Sec 5.3 path mode).
+    # Always padded to (k_max,) so warm-started paths share one compilation.
+    if warm_idx is not None:
+        k_max = max(k_max, default_capacity(h, p))
+        n_init = min(int(warm_idx.shape[0]), k_max, p)
+        init_idx = jnp.zeros((k_max,), jnp.int32).at[:n_init].set(
+            warm_idx[:n_init].astype(jnp.int32))
+        init_beta = jnp.zeros((k_max,), X.dtype)
+        if warm_beta is not None:
+            init_beta = init_beta.at[:n_init].set(
+                warm_beta[:n_init].astype(X.dtype))
+    else:
+        n_init = min(h, k_max, p)
+        top = jax.lax.top_k(c0, n_init)[1]
+        init_idx = jnp.zeros((k_max,), jnp.int32).at[:n_init].set(top)
+        init_beta = jnp.zeros((k_max,), X.dtype)
+
+    while True:
+        init_idx = init_idx[:k_max]
+        init_beta = init_beta[:k_max]
+        if init_idx.shape[0] < k_max:   # capacity grew after overflow
+            pad = k_max - init_idx.shape[0]
+            init_idx = jnp.pad(init_idx, (0, pad))
+            init_beta = jnp.pad(init_beta, (0, pad))
+        res = _saif_jit(X, y, col_norm, c0, jnp.asarray(lam, X.dtype),
+                        jnp.asarray(config.eps, X.dtype),
+                        delta0, init_idx, init_beta,
+                        jnp.asarray(n_init, jnp.int32),
+                        loss_name=config.loss, h=h, h_tilde=h_tilde,
+                        k_max=k_max, inner_epochs=config.inner_epochs,
+                        polish_factor=config.polish_factor,
+                        max_outer=config.max_outer,
+                        use_seq_ball=config.use_seq_ball, scan_fn=scan_fn)
+        if not bool(res.overflowed) or k_max >= p:
+            return res
+        k_max = min(2 * k_max, p)   # elastic capacity growth + recompile

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the CM-epoch kernel (least squares)."""
+import jax
+import jax.numpy as jnp
+
+
+def cm_epochs_ref(A, y, beta, col_sq, mask, lam, n_epochs=1):
+    """Reference cyclic CM sweeps; mirrors kernels/cm/cm.py exactly."""
+    r = y - A @ beta
+
+    def coord_step(j, carry):
+        beta, r = carry
+        aj = A[:, j]
+        csq = jnp.maximum(col_sq[j], 1e-30)
+        g = jnp.dot(aj, r)
+        u = beta[j] + g / csq
+        t = lam / csq
+        b_new = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t, 0.0)
+        b_new = jnp.where(mask[j], b_new, 0.0)
+        r = r + (beta[j] - b_new) * aj
+        beta = beta.at[j].set(b_new)
+        return beta, r
+
+    def epoch(_, carry):
+        return jax.lax.fori_loop(0, beta.shape[0], coord_step, carry)
+
+    return jax.lax.fori_loop(0, n_epochs, epoch, (beta, r))

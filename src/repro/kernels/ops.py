@@ -1,0 +1,40 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+Pallas interpreter executes the kernel body in Python for correctness
+validation). On a real TPU backend the same call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.cm.cm import cm_epochs_pallas
+from repro.kernels.cm.ref import cm_epochs_ref
+from repro.kernels.screen.ref import screen_scores_ref
+from repro.kernels.screen.screen import screen_scores_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def screen_scores(X, theta, col_norm, r, *, bn=512, bp=256,
+                  interpret: bool | None = None):
+    """SAIF screening scan: (score, ub, lb) per feature."""
+    if interpret is None:
+        interpret = not on_tpu()
+    return screen_scores_pallas(X, theta, col_norm, r, bn=bn, bp=bp,
+                                interpret=interpret)
+
+
+def cm_epochs(A, y, beta, col_sq, mask, lam, *, n_epochs=1,
+              interpret: bool | None = None):
+    """VMEM-resident cyclic CM sweeps (least squares)."""
+    if interpret is None:
+        interpret = not on_tpu()
+    return cm_epochs_pallas(A, y, beta, col_sq, mask, lam,
+                            n_epochs=n_epochs, interpret=interpret)
+
+
+__all__ = ["screen_scores", "cm_epochs", "screen_scores_ref",
+           "cm_epochs_ref", "on_tpu"]

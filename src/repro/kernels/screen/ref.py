@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the screening scan kernel."""
+import jax.numpy as jnp
+
+
+def screen_scores_ref(X, theta, col_norm, r):
+    """score = |X^T theta|, ub = score + ||x||r, lb = |score - ||x||r|."""
+    score = jnp.abs(X.T @ theta)
+    nr = col_norm * r
+    return score, score + nr, jnp.abs(score - nr)

@@ -1,0 +1,87 @@
+"""Batched serving driver (deliverable b): prefill + decode loop.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch whisper_tiny --smoke \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.shardings import param_shardings
+from repro.models import (decode_step, fill_cross_cache, init,
+                          init_decode_state)
+from repro.models import lm
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--temperature", type=float, default=1.0)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if jax.default_backend() == "cpu":
+        cfg = cfg.scaled(dtype="float32")
+    mesh = make_host_mesh(model=args.model_parallel)
+
+    with mesh:
+        params = init(jax.random.PRNGKey(0), cfg)
+        shapes_tree = lm.param_shapes(cfg)
+        params = jax.tree.map(jax.device_put, params,
+                              param_shardings(shapes_tree, cfg, mesh))
+        B = args.batch
+        total = args.prompt_len + args.gen
+        key = jax.random.PRNGKey(1)
+        prompt = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)
+
+        state = init_decode_state(params, cfg, B, total)
+        extras = {}
+        if cfg.family == "vlm":
+            extras["img_embed"] = 0.02 * jax.random.normal(
+                key, (B, cfg.n_image_tokens, cfg.d_model))
+        if cfg.family == "encdec":
+            extras["frames"] = 0.02 * jax.random.normal(
+                key, (B, cfg.n_frames, cfg.d_model))
+        state = fill_cross_cache(params, cfg, state, **extras)
+
+        step = jax.jit(lambda p, t, s: decode_step(p, t, s, cfg),
+                       donate_argnums=(2,))
+
+        # prefill by teacher-forcing the prompt through the decode path
+        # (a production server would use the chunked prefill kernel; the
+        # decode path is the correctness reference)
+        t0 = time.time()
+        logits = None
+        for t in range(args.prompt_len):
+            logits, state = step(params, prompt[:, t], state)
+        out_tokens = []
+        for t in range(args.gen):
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits / args.temperature,
+                                         axis=-1).astype(jnp.int32)
+            out_tokens.append(nxt)
+            logits, state = step(params, nxt, state)
+        jax.block_until_ready(logits)
+        dt = time.time() - t0
+        toks = B * (args.prompt_len + args.gen)
+        print(f"{cfg.name}: {toks} tokens in {dt:.2f}s "
+              f"({toks/dt:.1f} tok/s batched decode)")
+        sample = jnp.stack(out_tokens, axis=1)[0, :16]
+        print("sample token ids:", sample.tolist())
+        return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,197 @@
+"""Sharding rules: params (TP/EP), optimizer state (ZeRO-1), batches (DP),
+decode caches. All rules are name+shape driven and divisibility-checked, so
+one rule set covers all 10 architectures on any mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+from repro.models.config import ModelConfig
+
+
+def _axis_size(mesh, name) -> int:
+    return mesh.shape[name]
+
+
+def _fits(dim: int, mesh, axis: str) -> bool:
+    return dim % _axis_size(mesh, axis) == 0
+
+
+# parameter name -> which logical dim prefers the model axis.
+# Index is into the *unstacked* (per-layer) shape; the stacked L dim is
+# prepended for block params, handled by offset detection below.
+_MODEL_DIM_RULES: Dict[str, int] = {
+    # attention
+    "wq": 1, "wk": 1, "wv": 1, "wo": 0,
+    # dense mlp
+    "w1": 1, "w3": 1, "w2": 0,
+    # moe (E is dim 0 of the per-layer shape) — expert parallelism
+    "router": 1,
+    # mamba
+    "in_proj": 1, "conv": 1, "x_proj": 0, "dt_proj": 1, "A_log": 0,
+    "Dskip": 0, "out_proj": 0,
+    # mlstm / slstm
+    "wi": 1, "wf": 1, "wo_gate": 1, "out": 0, "wz": 1,
+    # vlm
+    "img_proj": 1,
+}
+
+_MOE_PARAMS = {"w1", "w3", "w2"}   # (E, D, F)/(E, F, D): shard E
+
+
+def param_spec(path, shape, cfg: ModelConfig, mesh) -> P:
+    name = path[-1]
+    ndim = len(shape)
+    none = (None,) * ndim
+
+    def with_model(dim):
+        if dim < ndim and _fits(shape[dim], mesh, "model"):
+            spec = list(none)
+            spec[dim] = "model"
+            return P(*spec)
+        return P(*none)
+
+    stacked = path[-2] in ("blocks", "blocks_m", "blocks_s", "cross_blocks",
+                           "enc_blocks") if len(path) >= 2 else False
+    off = 1 if stacked else 0
+
+    if name == "embed":
+        if _fits(shape[0], mesh, "model"):
+            return P("model", None)
+        if _fits(shape[1], mesh, "model"):
+            return P(None, "model")
+        return P(None, None)
+    if name == "lm_head":
+        return with_model(1)
+    if name in ("final_ln", "enc_ln") or name.startswith("ln"):
+        return P(*none)
+    if cfg.family == "moe" and name in _MOE_PARAMS and ndim == 3 + off:
+        return with_model(off + 0)      # shard experts (EP)
+    if name in _MODEL_DIM_RULES:
+        return with_model(off + _MODEL_DIM_RULES[name])
+    return P(*none)
+
+
+def fsdp_spec(spec: P, shape, mesh) -> P:
+    """FSDP: additionally shard parameters over the data axis on the first
+    free, divisible dim. XLA all-gathers the shard per use (inside the layer
+    scan), trading an all-gather per layer for an n_data-fold cut in
+    parameter + gradient + optimizer residency — mandatory for the 100B+
+    archs whose TP-only residency exceeds HBM (§Perf hillclimb B)."""
+    return zero1_spec(spec, shape, mesh)
+
+
+def param_shardings(shapes_tree, cfg: ModelConfig, mesh, *,
+                    fsdp: bool = False):
+    """shapes_tree: pytree of shape tuples (from models.lm.param_shapes)."""
+    def walk(path, node):
+        if isinstance(node, tuple):
+            spec = param_spec(path, node, cfg, mesh)
+            if fsdp:
+                spec = fsdp_spec(spec, node, mesh)
+            return NamedSharding(mesh, spec)
+        return {k: walk(path + (k,), v) for k, v in node.items()}
+    return walk((), shapes_tree)
+
+
+def zero1_spec(spec: P, shape, mesh) -> P:
+    """ZeRO-1: additionally shard optimizer moments over the data axis on
+    the first dim that is free and divisible (usually the stacked L dim)."""
+    dp = [a for a in dp_axes(mesh)]
+    if not dp:
+        return spec
+    axis = dp[-1]   # the largest dp axis ('data')
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for e in entries if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))}
+    if axis in used:
+        return spec
+    for d, (e, s) in enumerate(zip(entries, shape)):
+        if e is None and s % _axis_size(mesh, axis) == 0:
+            entries[d] = axis
+            return P(*entries)
+    return spec
+
+
+def opt_shardings(param_sh, shapes_tree, mesh, *, zero1: bool = True):
+    """Sharding for AdamW m/v (params-shaped). step is replicated."""
+    def walk(sh_node, shape_node):
+        if isinstance(shape_node, tuple):
+            spec = sh_node.spec
+            if zero1:
+                spec = zero1_spec(spec, shape_node, mesh)
+            return NamedSharding(mesh, spec)
+        return {k: walk(sh_node[k], shape_node[k]) for k in shape_node}
+    return walk(param_sh, shapes_tree)
+
+
+def batch_spec(mesh, batch_size: int) -> P:
+    dp = dp_axes(mesh)
+    total = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    if batch_size % total == 0:
+        return P(dp,)
+    # small batches (long_500k B=1): replicate batch, shard elsewhere
+    return P(None,)
+
+
+def batch_shardings(mesh, batch: Dict[str, Any]):
+    out = {}
+    for k, v in batch.items():
+        spec = batch_spec(mesh, v.shape[0])
+        pad = (None,) * (v.ndim - 1)
+        out[k] = NamedSharding(mesh, P(*(tuple(spec) + pad)))
+    return out
+
+
+def cache_sharding(mesh, shape, batch_dim: int = 1,
+                   seq_shard: bool = True):
+    """Decode-cache rule: batch dim -> dp axes if divisible.
+
+    KV caches (rank-5: L, B, S, Hkv, hd): the SEQUENCE dim takes the model
+    axis ("context parallelism"). Sharding hd instead forces XLA to
+    all-gather the whole cache for the attention einsums (observed: 90 GB of
+    collectives per decode step on llama-vision; SPMD 'involuntary full
+    rematerialization' warnings) — contracting over a sequence-sharded cache
+    only psums the tiny (B, H) partials. §Perf hillclimb cell 1.
+
+    Lower-rank recurrent states (mLSTM/mamba) shard their feature dim on
+    model when divisible.
+    """
+    dp = dp_axes(mesh)
+    total = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    spec = [None] * len(shape)
+    batch_ok = len(shape) > batch_dim and shape[batch_dim] % total == 0
+    if batch_ok:
+        spec[batch_dim] = dp
+    if len(shape) >= 5 and seq_shard:
+        # KV cache: shard sequence over model (+ data when batch can't)
+        seq_dim = batch_dim + 1
+        axes = ("model",) if batch_ok else (dp[-1], "model")
+        size = int(np.prod([_axis_size(mesh, a) for a in axes]))
+        if shape[seq_dim] % size == 0:
+            spec[seq_dim] = axes if len(axes) > 1 else axes[0]
+            return NamedSharding(mesh, P(*spec))
+    # fallback / recurrent states: last dim on model
+    if not batch_ok and len(shape) > batch_dim + 1 \
+            and shape[batch_dim + 1] % _axis_size(mesh, dp[-1]) == 0:
+        spec[batch_dim + 1] = dp[-1]
+    last = len(shape) - 1
+    if last > batch_dim and shape[last] % _axis_size(mesh, "model") == 0:
+        spec[last] = "model"
+    return NamedSharding(mesh, P(*spec))
+
+
+def cache_shardings(mesh, cache_tree):
+    """Apply cache_sharding leaf-wise to a DecodeState-shaped spec tree
+    (leaves are ShapeDtypeStruct or arrays)."""
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return cache_sharding(mesh, leaf.shape, batch_dim=1)
+    return jax.tree.map(one, cache_tree)

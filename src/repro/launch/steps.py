@@ -1,0 +1,139 @@
+"""train_step / serve_step factories + dry-run input specs (deliverable e).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero allocation — used by both the dry-run
+(.lower on the production mesh) and the roofline harness.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCfg
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    microbatch: int = 1):
+    """Training step; ``microbatch`` > 1 accumulates gradients over
+    sequential micro-batches (lax.scan), dividing activation live-memory by
+    the microbatch count at the cost of per-microbatch collective latency —
+    the standard fit-the-HBM lever (§Perf hillclimb A)."""
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, jax.Array]:
+        if microbatch == 1:
+            loss, grads = jax.value_and_grad(lm.train_loss)(
+                state.params, batch, cfg)
+        else:
+            def split(x):
+                B = x.shape[0]
+                return x.reshape(microbatch, B // microbatch, *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_step(carry, mbatch):
+                loss_sum, gacc = carry
+                l, g = jax.value_and_grad(lm.train_loss)(
+                    state.params, mbatch, cfg)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (loss_sum + l, gacc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            (loss_sum, gsum), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), g0), mb)
+            loss = loss_sum / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, gsum)
+        params, opt = adamw.update(grads, state.opt, state.params, opt_cfg)
+        return TrainState(params, opt), loss
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, tok, state: lm.DecodeState):
+        return lm.decode_step(params, tok, state, cfg)
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig):
+    def prefill(params, batch):
+        hidden, _ = lm.backbone(params, batch["tokens"], cfg,
+                                img_embed=batch.get("img_embed"),
+                                frames=batch.get("frames"))
+        return lm.logits_fn(params, hidden, cfg)[:, -1]
+    return prefill
+
+
+# ---------------------------------------------------------------------------
+# shape-struct builders (no allocation)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {"tokens": sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = sds((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        batch["img_embed"] = sds((B, cfg.n_image_tokens, cfg.d_model),
+                                 cfg.adtype)
+    if cfg.family == "encdec":
+        batch["frames"] = sds((B, cfg.n_frames, cfg.d_model), cfg.adtype)
+    return batch
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    shapes = lm.param_shapes(cfg)
+
+    def walk(path, node):
+        if isinstance(node, tuple):
+            name = path[-1] if path else ""
+            return jax.ShapeDtypeStruct(node, cfg.pdtype)
+        return {k: walk(path + (k,), v) for k, v in node.items()}
+    return walk((), shapes)
+
+
+def opt_specs(cfg: ModelConfig) -> adamw.AdamWState:
+    p = param_specs(cfg)
+    z = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), p)
+    z2 = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), p)
+    return adamw.AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                            m=z, v=z2)
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeCfg) -> lm.DecodeState:
+    """eval_shape the cache allocator — zero real allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    p_specs = param_specs(cfg)
+    return jax.eval_shape(
+        lambda p: lm.init_decode_state(p, cfg, B, S), p_specs)
+
+
+def serve_input_specs(cfg: ModelConfig, shape: ShapeCfg):
+    B = shape.global_batch
+    tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return tok, decode_state_specs(cfg, shape)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg):
+    """The full argument-spec bundle for the cell's entry point."""
+    if shape.kind == "train":
+        return {"state": TrainState(params=param_specs(cfg),
+                                    opt=opt_specs(cfg)),
+                "batch": batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": param_specs(cfg),
+                "batch": batch_specs(cfg, shape)}
+    # decode
+    tok, dstate = serve_input_specs(cfg, shape)
+    return {"params": param_specs(cfg), "tok": tok, "state": dstate}

@@ -1,0 +1,133 @@
+"""End-to-end training driver (deliverable b): fault-tolerant train loop.
+
+Runs any zoo arch (reduced or full config) on the local mesh, with:
+  * checkpoint/resume (atomic, async flush, data-cursor replay)
+  * preemption handling (SIGTERM -> checkpoint -> clean exit)
+  * straggler monitoring + step retry
+  * optional int8 error-feedback gradient compression on the DP axis
+
+Example (CPU container):
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm_3b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs import get_config, smoke_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import dp_axes, make_host_mesh
+from repro.launch.shardings import (batch_shardings, opt_shardings,
+                                    param_shardings)
+from repro.models import init as model_init
+from repro.models import lm
+from repro.optim import adamw
+from repro.runtime.fault import (PreemptionGuard, StragglerMonitor,
+                                 retry_step)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (smoke_config(args.arch) if args.smoke else get_config(args.arch))
+    cfg = cfg.scaled(dtype="float32") if jax.default_backend() == "cpu" \
+        else cfg
+    mesh = make_host_mesh(model=args.model_parallel)
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=10,
+                                total_steps=args.steps)
+
+    shapes_tree = lm.param_shapes(cfg)
+    p_sh = param_shardings(shapes_tree, cfg, mesh)
+    o_sh = opt_shardings(p_sh, shapes_tree, mesh, zero1=True)
+
+    data = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                    global_batch=args.batch, seed=args.seed))
+
+    with mesh:
+        params = model_init(jax.random.PRNGKey(args.seed), cfg)
+        params = jax.tree.map(jax.device_put, params, p_sh)
+        opt = adamw.init(params)
+        state = steps_lib.TrainState(params=params, opt=opt)
+
+        start_step = 0
+        if args.ckpt_dir:
+            last = ckpt.latest_step(args.ckpt_dir)
+            if last is not None:
+                state, extra = ckpt.restore(
+                    args.ckpt_dir, last, state,
+                    steps_lib.TrainState(params=p_sh, opt=adamw.AdamWState(
+                        step=jax.sharding.NamedSharding(
+                            mesh, jax.sharding.PartitionSpec()),
+                        m=o_sh, v=o_sh)))
+                data.restore(extra["data"])
+                start_step = extra["train_step"]
+                print(f"[resume] restored step {start_step} "
+                      f"from {args.ckpt_dir}")
+
+        train_step = jax.jit(steps_lib.make_train_step(cfg, opt_cfg),
+                             donate_argnums=(0,))
+
+        guard = PreemptionGuard()
+        monitor = StragglerMonitor(
+            on_straggler=lambda s, t, m: print(
+                f"[straggler] step {s}: {t:.2f}s vs median {m:.2f}s"))
+
+        losses = []
+        for step in range(start_step, args.steps):
+            batch = jax.tree.map(jnp.asarray, data.next_batch())
+
+            def run():
+                return train_step(state, batch)
+
+            t0 = time.monotonic()
+            state, loss = retry_step(run, max_retries=2)
+            monitor.record(time.monotonic() - t0)
+            losses.append(float(loss))
+
+            if args.log_every and step % args.log_every == 0:
+                print(f"step {step:5d} loss {float(loss):.4f}")
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                ckpt.save_async(args.ckpt_dir, step + 1, state,
+                                extra={"train_step": step + 1,
+                                       "data": data.state()})
+            if guard.preempted:
+                print("[preempt] SIGTERM received: checkpoint + exit")
+                if args.ckpt_dir:
+                    ckpt.save(args.ckpt_dir, step + 1, state,
+                              extra={"train_step": step + 1,
+                                     "data": data.state()})
+                return 0
+
+        ckpt.wait_pending()
+        if args.ckpt_dir:
+            ckpt.save(args.ckpt_dir, args.steps, state,
+                      extra={"train_step": args.steps, "data": data.state()})
+        print(f"final loss {losses[-1]:.4f} "
+              f"(first {losses[0]:.4f}) over {len(losses)} steps")
+        return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

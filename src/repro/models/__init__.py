@@ -1,0 +1,4 @@
+"""Model zoo: unified causal LM over the assigned architecture families."""
+from repro.models.config import ModelConfig
+from repro.models.lm import (backbone, decode_step, fill_cross_cache, init,
+                             init_decode_state, train_loss)

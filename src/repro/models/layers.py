@@ -1,0 +1,159 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, MLP variants.
+
+All functions are pure (params passed explicitly) and batched over (B, S, D).
+Sharding is applied by the caller via with_sharding_constraint; these layers
+only provide the math. KV caches are explicit pytrees for the decode path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def rms_norm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def rope_freqs(hd: int, theta: float, positions):
+    """positions: (...,) int32 -> cos/sin of shape (..., hd//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (B, S, hd//2) or (S, hd//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # (B, S_max, Hkv, hd)
+    v: jax.Array
+    # ring-buffer semantics when window > 0: slot = pos % S_max
+
+
+def gqa_attention(q, k, v, *, causal: bool, window: int = 0,
+                  q_offset: int | jax.Array = 0):
+    """Grouped-query attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, Hkv, hd). H % Hkv == 0.
+    ``q_offset``: absolute position of q[0] (for causal masking in decode).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = H // Hkv
+    qh = q.reshape(B, Sq, Hkv, g, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qh, k,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention_block(x, p, cfg, *, positions, causal=True, window=0,
+                    kv_x: Optional[jax.Array] = None, use_rope=True):
+    """Full attention sublayer (projections + GQA + out-proj).
+
+    p: dict with wq (D, H*hd), wk/wv (D, Hkv*hd), wo (H*hd, D).
+    kv_x: source of k/v (cross attention) — defaults to x.
+    """
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = x if kv_x is None else kv_x
+    Skv = src.shape[1]
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (src @ p["wk"]).reshape(B, Skv, Hkv, hd)
+    v = (src @ p["wv"]).reshape(B, Skv, Hkv, hd)
+    if use_rope and kv_x is None:
+        cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    out = gqa_attention(q, k, v, causal=causal and kv_x is None,
+                        window=window)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def attention_decode(x, p, cfg, cache: KVCache, pos, *, window=0,
+                     kv_cached: bool = False):
+    """One-token decode with KV cache update. x: (B, 1, D); pos scalar int.
+
+    Returns (out (B,1,D), new_cache). When ``window`` > 0 the cache is a ring
+    buffer of size window (sub-quadratic memory); otherwise size S_max.
+    """
+    B, _, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, 1, H, hd)
+    if kv_cached:
+        # cross-attention: cache holds precomputed encoder/image k,v (no RoPE)
+        out = gqa_attention(q, cache.k, cache.v, causal=False)
+        return out.reshape(B, 1, H * hd) @ p["wo"], cache
+    k = (x @ p["wk"]).reshape(B, 1, Hkv, hd)
+    v = (x @ p["wv"]).reshape(B, 1, Hkv, hd)
+    cos, sin = rope_freqs(hd, cfg.rope_theta, jnp.asarray([pos]))
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    S_max = cache.k.shape[1]
+    slot = pos % S_max if window > 0 else pos
+    k_all = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+    v_all = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+    new_cache = KVCache(k_all, v_all)
+
+    g = H // Hkv
+    qh = q.reshape(B, 1, Hkv, g, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qh, k_all,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    kpos = jnp.arange(S_max)
+    if window > 0:
+        # ring buffer: valid slots are the last min(pos+1, window) writes
+        age = (slot - kpos) % S_max
+        valid = age < jnp.minimum(pos + 1, S_max)
+    else:
+        valid = kpos <= pos
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_all).reshape(B, 1, H * hd)
+    return out @ p["wo"], new_cache
+
+
+def mlp_block(x, p, act: str):
+    """Dense FFN. swiglu: w1,w3,w2; gelu/sq_relu: w1,w2."""
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ p["w1"])
+    elif act == "sq_relu":
+        h = jnp.square(jax.nn.relu(x @ p["w1"]))
+    else:
+        raise ValueError(act)
+    return h @ p["w2"]
+
+
+def shard(x, spec: P):
+    """with_sharding_constraint that is a no-op outside a mesh context
+    (CPU unit tests) or when the named axes don't exist on the active mesh
+    or don't divide the dims."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:       # noqa: BLE001 — strictly best-effort
+        return x

@@ -1,0 +1,499 @@
+"""Unified causal LM over all assigned architecture families.
+
+Parameters are stored as stacked per-layer pytrees (leading dim = n_layers)
+and applied with ``lax.scan`` — HLO size stays O(1) in depth, which keeps the
+40-cell dry-run compilable. Sharding constraints (DP/TP/EP) are injected by
+``repro.launch.shardings``; this module is mesh-agnostic.
+
+Entry points:
+  init(rng, cfg)                  -> params
+  train_loss(params, batch, cfg)  -> scalar loss   (used by train_step)
+  prefill(params, tokens, cfg)    -> (logits_last, caches)
+  decode_step(params, tok, pos, caches, cfg) -> (logits, caches)
+  input_specs(cfg, shape)         -> ShapeDtypeStruct stand-ins (dry-run)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import (KVCache, attention_block, attention_decode,
+                                 mlp_block, rms_norm)
+from repro.models.moe import moe_ffn
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense_block_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    D, F = cfg.d_model, cfg.d_ff
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = {"ln1": (D,), "ln2": (D,),
+         "wq": (D, H * hd), "wk": (D, Hkv * hd), "wv": (D, Hkv * hd),
+         "wo": (H * hd, D)}
+    if cfg.family == "moe":
+        E, Fe = cfg.n_experts, cfg.d_ff
+        s |= {"router": (D, E), "w1": (E, D, Fe), "w3": (E, D, Fe),
+              "w2": (E, Fe, D)}
+    elif F > 0:
+        if cfg.mlp_act == "swiglu":
+            s |= {"w1": (D, F), "w3": (D, F), "w2": (F, D)}
+        else:
+            s |= {"w1": (D, F), "w2": (F, D)}
+    if cfg.family == "hybrid":
+        Di = cfg.ssm_expand * D
+        N = cfg.ssm_state
+        dt_rank = max(D // 16, 1)
+        s |= {"in_proj": (D, 2 * Di), "conv": (4, Di),
+              "x_proj": (Di, dt_rank + 2 * N), "dt_proj": (dt_rank, Di),
+              "A_log": (Di, N), "Dskip": (Di,), "out_proj": (Di, D)}
+    return s
+
+
+def _cross_block_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    D = cfg.d_model
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {"ln": (D,), "wq": (D, H * hd), "wk": (D, Hkv * hd),
+            "wv": (D, Hkv * hd), "wo": (H * hd, D)}
+
+
+def _mlstm_block_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    return {"ln": (D,), "wq": (D, H * hd), "wk": (D, H * hd),
+            "wv": (D, H * hd), "wi": (D, H), "wf": (D, H),
+            "wo_gate": (D, H * hd), "out": (H * hd, D)}
+
+
+def _slstm_block_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    D = cfg.d_model
+    return {"ln": (D,), "wz": (D, D), "wi": (D, D), "wf": (D, D),
+            "wo": (D, D), "out": (D, D)}
+
+
+def n_slstm_layers(cfg: ModelConfig) -> int:
+    return cfg.n_layers // 4 if cfg.family == "ssm" else 0
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Any]:
+    """Full parameter shape tree (used by init and by the dry-run specs)."""
+    D, V = cfg.d_model, cfg.vocab
+    L = cfg.n_layers
+    tree: Dict[str, Any] = {
+        "embed": (V, D),
+        "final_ln": (D,),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = (D, V)
+    if cfg.family == "ssm":
+        Ls = n_slstm_layers(cfg)
+        Lm = L - Ls
+        tree["blocks_m"] = {k: (Lm, *v)
+                            for k, v in _mlstm_block_shapes(cfg).items()}
+        if Ls:
+            tree["blocks_s"] = {k: (Ls, *v)
+                                for k, v in _slstm_block_shapes(cfg).items()}
+    else:
+        tree["blocks"] = {k: (L, *v)
+                          for k, v in _dense_block_shapes(cfg).items()}
+    if cfg.family == "vlm" and cfg.cross_every:
+        G = L // cfg.cross_every
+        tree["cross_blocks"] = {k: (G, *v)
+                                for k, v in _cross_block_shapes(cfg).items()}
+        tree["img_proj"] = (D, D)   # stub vision tower output -> d_model
+    if cfg.family == "encdec":
+        Le = cfg.n_enc_layers
+        enc_cfg = cfg
+        tree["enc_blocks"] = {k: (Le, *v)
+                              for k, v in _dense_block_shapes(enc_cfg).items()}
+        tree["enc_ln"] = (D,)
+        tree["cross_blocks"] = {k: (L, *v)
+                                for k, v in _cross_block_shapes(cfg).items()}
+    return tree
+
+
+def init(rng: jax.Array, cfg: ModelConfig) -> Params:
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree.flatten(shapes,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(rng, len(leaves))
+
+    def one(key, shp):
+        if len(shp) >= 2:
+            fan_in = shp[-2]
+            w = jax.random.normal(key, shp, cfg.pdtype) * fan_in ** -0.5
+        else:
+            w = jnp.ones(shp, cfg.pdtype)
+        return w
+
+    params = jax.tree.unflatten(treedef, [one(k, s)
+                                          for k, s in zip(keys, leaves)])
+    # norms start at 1, A_log at small positive, Dskip at 1
+    def fix(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name.startswith("ln") or name in ("final_ln", "enc_ln"):
+            return jnp.ones_like(x)
+        if name == "A_log":
+            return jnp.zeros_like(x)        # A = -1
+        if name == "Dskip":
+            return jnp.ones_like(x)
+        return x
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _dense_layer(x, bp, cfg, positions, window):
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    attn = attention_block(h, bp, cfg, positions=positions, causal=True,
+                           window=window)
+    if cfg.family == "hybrid":
+        attn = 0.5 * (attn + ssm_lib.mamba_block(h, bp, cfg))
+    x = x + attn
+    h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        ff, aux = moe_ffn(h2, bp, cfg)
+    elif cfg.d_ff > 0:
+        ff, aux = mlp_block(h2, bp, cfg.mlp_act), 0.0
+    else:
+        ff, aux = 0.0, 0.0
+    return x + ff, aux
+
+
+
+def _lscan(f, init, xs, cfg):
+    """lax.scan honoring cfg.scan_unroll (roofline cost-correction mode)."""
+    n = jax.tree.leaves(xs)[0].shape[0]
+    return jax.lax.scan(f, init, xs, unroll=n if cfg.scan_unroll else 1)
+
+def _cast_params(p, cfg):
+    """Compute-dtype cast (bf16 compute / fp32 master weights)."""
+    return jax.tree.map(lambda a: a.astype(cfg.adtype), p)
+
+
+def _scan_layers(x, blocks, layer_fn, cfg):
+    """lax.scan over stacked layer params, with optional remat."""
+    body = layer_fn
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def step(carry, bp):
+        x, aux = carry
+        x, a = body(x, _cast_params(bp, cfg))
+        return (x, aux + a), None
+
+    n = jax.tree.leaves(blocks)[0].shape[0]
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)), blocks,
+                               unroll=n if cfg.scan_unroll else 1)
+    return x, aux
+
+
+def backbone(params: Params, tokens, cfg: ModelConfig, *,
+             img_embed=None, frames=None):
+    """Token ids (B, S) -> final hidden states (B, S, D) + aux loss."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.adtype)
+    positions = jnp.arange(S)[None, :]
+    window = cfg.window
+
+    aux_total = 0.0
+    if cfg.family == "ssm":
+        def mbody(x, bp):
+            h = rms_norm(x, bp["ln"], cfg.norm_eps)
+            return x + ssm_lib.mlstm_block(h, bp, cfg), 0.0
+        x, _ = _scan_layers(x, params["blocks_m"], mbody, cfg)
+        if "blocks_s" in params:
+            def sbody(x, bp):
+                h = rms_norm(x, bp["ln"], cfg.norm_eps)
+                return x + ssm_lib.slstm_block(h, bp, cfg), 0.0
+            x, _ = _scan_layers(x, params["blocks_s"], sbody, cfg)
+    elif cfg.family == "vlm" and cfg.cross_every and img_embed is not None:
+        img = (img_embed.astype(cfg.adtype)
+               @ params["img_proj"].astype(cfg.adtype))
+        G = cfg.n_layers // cfg.cross_every
+        grouped = jax.tree.map(
+            lambda a: a.reshape(G, cfg.cross_every, *a.shape[1:]),
+            params["blocks"])
+
+        def group(carry, gp):
+            x, aux = carry
+            bp_group, cp = gp
+            def dbody(x, bp):
+                return _dense_layer(x, bp, cfg, positions, window)
+            x, a = _scan_layers(x, bp_group, dbody, cfg)
+            # cross-attention to image tokens
+            cp = _cast_params(cp, cfg)
+            h = rms_norm(x, cp["ln"], cfg.norm_eps)
+            x = x + attention_block(h, cp, cfg, positions=positions,
+                                    causal=False, kv_x=img, use_rope=False)
+            return (x, aux + a), None
+
+        G_un = G if cfg.scan_unroll else 1
+        (x, aux_total), _ = jax.lax.scan(group, (x, 0.0),
+                                         (grouped, params["cross_blocks"]),
+                                         unroll=G_un)
+    elif cfg.family == "encdec":
+        # encoder over stub frame embeddings (bidirectional)
+        enc = frames.astype(cfg.adtype)
+        enc_pos = jnp.arange(enc.shape[1])[None, :]
+
+        def ebody(e, bp):
+            h = rms_norm(e, bp["ln1"], cfg.norm_eps)
+            a = attention_block(h, bp, cfg, positions=enc_pos, causal=False)
+            e = e + a
+            h2 = rms_norm(e, bp["ln2"], cfg.norm_eps)
+            return e + mlp_block(h2, bp, cfg.mlp_act), 0.0
+        enc, _ = _scan_layers(enc, params["enc_blocks"], ebody, cfg)
+        enc = rms_norm(enc, params["enc_ln"], cfg.norm_eps)
+
+        def dbody(x, bp):
+            blk, cp = bp
+            x, a = _dense_layer(x, blk, cfg, positions, window)
+            h = rms_norm(x, cp["ln"], cfg.norm_eps)
+            x = x + attention_block(h, cp, cfg, positions=positions,
+                                    causal=False, kv_x=enc, use_rope=False)
+            return x, a
+        x, aux_total = _scan_layers(
+            x, (params["blocks"], params["cross_blocks"]), dbody, cfg)
+    else:
+        def dbody(x, bp):
+            return _dense_layer(x, bp, cfg, positions, window)
+        x, aux_total = _scan_layers(x, params["blocks"], dbody, cfg)
+
+    return rms_norm(x, params["final_ln"], cfg.norm_eps), aux_total
+
+
+def logits_fn(params, hidden, cfg):
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.adtype)
+    return hidden @ head
+
+
+def train_loss(params: Params, batch: Dict[str, jax.Array],
+               cfg: ModelConfig) -> jax.Array:
+    """Next-token cross-entropy (+ MoE aux). batch: tokens, labels (B, S)."""
+    hidden, aux = backbone(params, batch["tokens"], cfg,
+                           img_embed=batch.get("img_embed"),
+                           frames=batch.get("frames"))
+    logits = logits_fn(params, hidden, cfg).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, batch["labels"][..., None],
+                             axis=-1)[..., 0]
+    loss = -jnp.mean(ll)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with caches
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    caches: Any        # per-family cache pytree (stacked over layers)
+    pos: jax.Array     # current position (scalar int32)
+
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, s_max: int,
+                      *, img_embed=None, frames=None) -> DecodeState:
+    """Allocate empty caches sized for ``s_max`` context."""
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    L = cfg.n_layers
+    cache_len = min(cfg.window, s_max) if cfg.window else s_max
+    dt = cfg.adtype
+
+    def kv(leading):
+        return KVCache(jnp.zeros((leading, batch, cache_len, Hkv, hd), dt),
+                       jnp.zeros((leading, batch, cache_len, Hkv, hd), dt))
+
+    if cfg.family == "ssm":
+        Lm = L - n_slstm_layers(cfg)
+        caches = {"m": ssm_lib.MLSTMState(
+            C=jnp.zeros((Lm, batch, cfg.n_heads, hd, hd), dt),
+            n=jnp.zeros((Lm, batch, cfg.n_heads, hd), dt))}
+        if n_slstm_layers(cfg):
+            Ls = n_slstm_layers(cfg)
+            caches["s"] = ssm_lib.SLSTMState(
+                c=jnp.zeros((Ls, batch, cfg.d_model), jnp.float32),
+                n=jnp.zeros((Ls, batch, cfg.d_model), jnp.float32))
+    elif cfg.family == "hybrid":
+        Di = cfg.ssm_expand * cfg.d_model
+        caches = {"kv": kv(L),
+                  "ssm": ssm_lib.MambaState(
+                      h=jnp.zeros((L, batch, Di, cfg.ssm_state), dt),
+                      conv=jnp.zeros((L, batch, Di, 3), dt))}
+    elif cfg.family in ("vlm", "encdec"):
+        n_cross = (cfg.n_layers // cfg.cross_every if cfg.family == "vlm"
+                   else cfg.n_layers)
+        src_len = (cfg.n_image_tokens if cfg.family == "vlm"
+                   else cfg.n_frames)
+        caches = {"kv": kv(L),
+                  "cross": KVCache(
+                      jnp.zeros((n_cross, batch, src_len, Hkv, hd), dt),
+                      jnp.zeros((n_cross, batch, src_len, Hkv, hd), dt))}
+    else:
+        caches = {"kv": kv(L)}
+    return DecodeState(caches=caches, pos=jnp.asarray(0, jnp.int32))
+
+
+def decode_step(params: Params, tok, state: DecodeState, cfg: ModelConfig
+                ) -> Tuple[jax.Array, DecodeState]:
+    """One new token for every sequence. tok: (B,) int32."""
+    B = tok.shape[0]
+    x = params["embed"][tok][:, None].astype(cfg.adtype)   # (B, 1, D)
+    pos = state.pos
+    caches = state.caches
+
+    if cfg.family == "ssm":
+        def mstep(x, bp_cache):
+            bp, c = bp_cache
+            bp = _cast_params(bp, cfg)
+            h = rms_norm(x, bp["ln"], cfg.norm_eps)
+            y, c2 = ssm_lib.mlstm_decode(h, bp, cfg, c)
+            return x + y, c2
+
+        x, new_m = _lscan(mstep, x, (params["blocks_m"], caches["m"]), cfg)
+        new_caches = {"m": new_m}
+        if "blocks_s" in params:
+            def sstep(x, bc):
+                bp, c = bc
+                bp = _cast_params(bp, cfg)
+                h = rms_norm(x, bp["ln"], cfg.norm_eps)
+                y, c2 = ssm_lib.slstm_decode(h, bp, cfg, c)
+                return x + y, c2
+            x, new_s = _lscan(sstep, x,
+                              (params["blocks_s"], caches["s"]), cfg)
+            new_caches["s"] = new_s
+    elif cfg.family == "hybrid":
+        def hstep(x, bc):
+            bp, kvc, sc = bc
+            bp = _cast_params(bp, cfg)
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            a, kv2 = attention_decode(h, bp, cfg, kvc, pos,
+                                      window=cfg.window)
+            m, sc2 = ssm_lib.mamba_decode(h, bp, cfg, sc)
+            x = x + 0.5 * (a + m)
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            x = x + mlp_block(h2, bp, cfg.mlp_act)
+            return x, (kv2, sc2)
+        x, (new_kv, new_ssm) = _lscan(
+            hstep, x, (params["blocks"], caches["kv"], caches["ssm"]), cfg)
+        new_caches = {"kv": new_kv, "ssm": new_ssm}
+    elif cfg.family == "vlm":
+        G = cfg.n_layers // cfg.cross_every
+        grouped = jax.tree.map(
+            lambda a: a.reshape(G, cfg.cross_every, *a.shape[1:]),
+            params["blocks"])
+        kv_grouped = jax.tree.map(
+            lambda a: a.reshape(G, cfg.cross_every, *a.shape[1:]),
+            caches["kv"])
+
+        def gstep(x, bc):
+            bp_group, cp, kvg, crossc = bc
+
+            def dstep(x, bc2):
+                bp, kvc = bc2
+                bp = _cast_params(bp, cfg)
+                h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+                a, kv2 = attention_decode(h, bp, cfg, kvc, pos)
+                x = x + a
+                h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+                return x + mlp_block(h2, bp, cfg.mlp_act), kv2
+            x, kv2 = _lscan(dstep, x, (bp_group, kvg), cfg)
+            cp = _cast_params(cp, cfg)
+            h = rms_norm(x, cp["ln"], cfg.norm_eps)
+            a, _ = attention_decode(h, cp, cfg, crossc, pos, kv_cached=True)
+            return x + a, kv2
+        x, new_kv_g = _lscan(
+            gstep, x, (grouped, params["cross_blocks"], kv_grouped,
+                       caches["cross"]), cfg)
+        new_kv = jax.tree.map(
+            lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_kv_g)
+        new_caches = {"kv": new_kv, "cross": caches["cross"]}
+    elif cfg.family == "encdec":
+        def estep(x, bc):
+            bp, cp, kvc, crossc = bc
+            bp = _cast_params(bp, cfg)
+            cp = _cast_params(cp, cfg)
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            a, kv2 = attention_decode(h, bp, cfg, kvc, pos)
+            x = x + a
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            x = x + mlp_block(h2, bp, cfg.mlp_act)
+            hc = rms_norm(x, cp["ln"], cfg.norm_eps)
+            a2, _ = attention_decode(hc, cp, cfg, crossc, pos,
+                                     kv_cached=True)
+            return x + a2, kv2
+        x, new_kv = _lscan(
+            estep, x, (params["blocks"], params["cross_blocks"],
+                       caches["kv"], caches["cross"]), cfg)
+        new_caches = {"kv": new_kv, "cross": caches["cross"]}
+    else:
+        def dstep(x, bc):
+            bp, kvc = bc
+            bp = _cast_params(bp, cfg)
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            a, kv2 = attention_decode(h, bp, cfg, kvc, pos,
+                                      window=cfg.window)
+            x = x + a
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                ff, _ = moe_ffn(h2, bp, cfg)
+            else:
+                ff = mlp_block(h2, bp, cfg.mlp_act)
+            return x + ff, kv2
+        x, new_kv = _lscan(dstep, x, (params["blocks"], caches["kv"]), cfg)
+        new_caches = {"kv": new_kv}
+
+    hidden = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = logits_fn(params, hidden, cfg)[:, 0]
+    return logits, DecodeState(caches=new_caches, pos=pos + 1)
+
+
+def fill_cross_cache(params, cfg, state: DecodeState, *, img_embed=None,
+                     frames=None) -> DecodeState:
+    """Populate cross-attention caches from the stub frontend embeddings."""
+    if cfg.family == "vlm":
+        img = img_embed.astype(cfg.adtype) \
+            @ params["img_proj"].astype(cfg.adtype)
+        Hkv, hd = cfg.n_kv_heads, cfg.hd
+
+        def proj(cp):
+            cp = _cast_params(cp, cfg)
+            B, Si, _ = img.shape
+            k = (img @ cp["wk"]).reshape(B, Si, Hkv, hd)
+            v = (img @ cp["wv"]).reshape(B, Si, Hkv, hd)
+            return KVCache(k, v)
+        cross = jax.vmap(proj)(params["cross_blocks"])
+        return state._replace(caches={**state.caches, "cross": cross})
+    if cfg.family == "encdec":
+        # run the encoder once, then project k/v per decoder layer
+        enc = frames.astype(cfg.adtype)
+        enc_pos = jnp.arange(enc.shape[1])[None, :]
+
+        def ebody(e, bp):
+            h = rms_norm(e, bp["ln1"], cfg.norm_eps)
+            a = attention_block(h, bp, cfg, positions=enc_pos, causal=False)
+            e = e + a
+            h2 = rms_norm(e, bp["ln2"], cfg.norm_eps)
+            return e + mlp_block(h2, bp, cfg.mlp_act), 0.0
+        enc, _ = _scan_layers(enc, params["enc_blocks"], ebody, cfg)
+        enc = rms_norm(enc, params["enc_ln"], cfg.norm_eps)
+        Hkv, hd = cfg.n_kv_heads, cfg.hd
+
+        def proj(cp):
+            cp = _cast_params(cp, cfg)
+            B, Sf, _ = enc.shape
+            k = (enc @ cp["wk"]).reshape(B, Sf, Hkv, hd)
+            v = (enc @ cp["wv"]).reshape(B, Sf, Hkv, hd)
+            return KVCache(k, v)
+        cross = jax.vmap(proj)(params["cross_blocks"])
+        return state._replace(caches={**state.caches, "cross": cross})
+    return state

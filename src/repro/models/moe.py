@@ -1,0 +1,87 @@
+"""Top-k routed mixture-of-experts FFN (token-choice, sort-based dispatch).
+
+Dispatch strategy (static shapes, EP-shardable):
+  1. router logits -> top_k (expert_id, prob) per token
+  2. flatten the T*k assignments; compute each assignment's rank within its
+     expert via a sort-free cumulative count (one-hot cumsum)
+  3. scatter token rows into an (E, C, D) buffer (assignments past capacity
+     C are DROPPED — standard token-dropping MoE; C = T*k/E * capacity_factor)
+  4. batched expert matmul (E, C, D) x (E, D, F) on the MXU
+  5. weighted scatter-add back to (T, D)
+
+Sharding: the (E, ...) dims live on the `model` axis (expert parallelism);
+token dims on `data`. XLA inserts the all-to-all-equivalent collectives at
+the gather/scatter boundaries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import shard
+
+
+def moe_ffn(x, p, cfg):
+    """x: (B, S, D). p: router (D, E), w1/w3 (E, D, F), w2 (E, F, D)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    F = cfg.d_ff
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)          # (T, E)
+    topv, topi = jax.lax.top_k(logits, k)                    # (T, k)
+    probs = jax.nn.softmax(topv, axis=-1).astype(x.dtype)    # renormalized
+
+    # ---- assignment ranks within each expert (T*k,) -----------------------
+    # sort-based ranking (§Perf): the one_hot+cumsum formulation
+    # materializes a (T*k, E) intermediate and is cost-modelled
+    # quadratically by XLA — it dominated the MoE train cells' compute term
+    # (hundreds of seconds). Stable-sort by expert id instead: O(n log n)
+    # comparisons, no big intermediate.
+    flat_e = topi.reshape(-1)                                # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))       # (E,)
+    rank_sorted = jnp.arange(T * k) - starts[sorted_e]
+    rank = jnp.zeros((T * k,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+
+    C = max(int(T * k / E * cfg.capacity_factor), 1)
+    C = -(-C // 256) * 256 if C > 256 else C   # pad: data-shardable dim
+    keep = rank < C
+    slot = jnp.where(keep, flat_e * C + rank, E * C)         # E*C => dropped
+
+    # ---- dispatch: (E*C, D) buffer ----------------------------------------
+    tok_of_assign = jnp.repeat(jnp.arange(T), k)
+    buf = jnp.zeros((E * C + 1, D), x.dtype)
+    buf = buf.at[slot].add(xt[tok_of_assign])
+    buf = buf[:-1].reshape(E, C, D)
+    # Explicit EP constraint (§Perf): XLA's sharding propagation does not
+    # survive the dispatch scatter — without this the expert einsums get
+    # REPLICATED on every device (observed: per-device HLO flops == global
+    # flops on the 256-chip mesh). Pin the expert dim to the model axis.
+    buf = shard(buf, P("model", None, None))
+
+    # ---- expert computation (batched over E) ------------------------------
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w1"])) \
+            * jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w1"]))
+    h = shard(h, P("model", None, None))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w2"])
+    out_buf = shard(out_buf, P("model", None, None)).reshape(E * C, D)
+
+    # ---- combine: weighted scatter back to tokens --------------------------
+    gathered = jnp.where(keep[:, None],
+                         out_buf[jnp.clip(slot, 0, E * C - 1)], 0.0)
+    w = probs.reshape(-1)[:, None].astype(x.dtype)
+    out = jnp.zeros((T, D), x.dtype).at[tok_of_assign].add(gathered * w)
+
+    # auxiliary load-balance loss (Switch-style)
+    me = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)           # (E,)
+    ce = jnp.mean(jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,286 @@
+"""Recurrent sequence blocks: selective SSM (Mamba-style), mLSTM, sLSTM.
+
+All recurrences are implemented in **chunkwise-parallel** form where the
+state is matrix-valued (Mamba, mLSTM): a lax.scan over chunks carries the
+recurrent state; within a chunk the recurrence is evaluated in parallel
+(associative_scan / decay-weighted attention). This bounds live memory to
+O(B * state * S/chunk) boundary states instead of O(B * state * S), which is
+what makes the 500k-token shapes feasible (see DESIGN.md §4).
+
+Decode paths carry the state explicitly — O(1) per token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ===========================================================================
+# Mamba-style selective SSM
+# ===========================================================================
+
+class MambaState(NamedTuple):
+    h: jax.Array      # (B, Di, N) SSM state
+    conv: jax.Array   # (B, Di, K-1) causal-conv tail
+
+
+def _ssm_chunk_scan(u, dt, Bm, Cm, A, chunk: int, unroll=False):
+    """Chunked selective-SSM scan.
+
+    u: (B, S, Di); dt: (B, S, Di); Bm/Cm: (B, S, N); A: (Di, N) (negative).
+    Returns y: (B, S, Di).
+    """
+    B, S, Di = u.shape
+    N = A.shape[1]
+    nc = S // chunk
+    uc = u.reshape(B, nc, chunk, Di)
+    dtc = dt.reshape(B, nc, chunk, Di)
+    Bc = Bm.reshape(B, nc, chunk, N)
+    Cc = Cm.reshape(B, nc, chunk, N)
+
+    def chunk_body(h, inp):
+        uq, dtq, bq, cq = inp                     # (B, Q, ...)
+        # discretize: a_t = exp(dt_t * A)  (B, Q, Di, N); b_t = dt*u*B
+        da = jnp.exp(dtq[..., None] * A[None, None])          # (B,Q,Di,N)
+        db = (dtq * uq)[..., None] * bq[:, :, None, :]        # (B,Q,Di,N)
+
+        # parallel prefix over the chunk: h_t = a_t h_{t-1} + b_t
+        def combine(x, y):
+            ax, bx = x
+            ay, by = y
+            return ax * ay, ay * bx + by
+
+        a_pref, b_pref = jax.lax.associative_scan(combine, (da, db), axis=1)
+        hs = a_pref * h[:, None] + b_pref                     # (B,Q,Di,N)
+        y = jnp.einsum("bqdn,bqn->bqd", hs, cq)
+        h_new = hs[:, -1]
+        return h_new, y
+
+    h0 = jnp.zeros((B, Di, N), u.dtype)
+    body = jax.checkpoint(chunk_body)
+    _, ys = jax.lax.scan(body, h0,
+                         (uc.transpose(1, 0, 2, 3), dtc.transpose(1, 0, 2, 3),
+                          Bc.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3)),
+                         unroll=nc if unroll else 1)
+    return ys.transpose(1, 0, 2, 3).reshape(B, S, Di)
+
+
+def mamba_block(x, p, cfg):
+    """Selective-SSM sublayer. x: (B, S, D) -> (B, S, D).
+
+    p: in_proj (D, 2Di), conv (K, Di), x_proj (Di, dt_rank + 2N),
+       dt_proj (dt_rank, Di), A_log (Di, N), Dskip (Di,), out_proj (Di, D).
+    """
+    B, S, D = x.shape
+    Di = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    K = p["conv"].shape[0]
+    dt_rank = p["dt_proj"].shape[0]
+
+    ur = x @ p["in_proj"]                                     # (B, S, 2Di)
+    u, res = jnp.split(ur, 2, axis=-1)
+    # causal depthwise conv (kernel K)
+    upad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    u = sum(upad[:, i:i + S] * p["conv"][i][None, None]
+            for i in range(K))
+    u = jax.nn.silu(u)
+
+    proj = u @ p["x_proj"]                                    # (B,S,rank+2N)
+    dt_low, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"])               # (B, S, Di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(x.dtype)
+
+    chunk = min(cfg.ssm_chunk, S)
+    if S % chunk:
+        pad = chunk - S % chunk
+        y = _ssm_chunk_scan(jnp.pad(u, ((0, 0), (0, pad), (0, 0))),
+                            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+                            jnp.pad(Bm, ((0, 0), (0, pad), (0, 0))),
+                            jnp.pad(Cm, ((0, 0), (0, pad), (0, 0))),
+                            A, chunk, cfg.chunk_unroll)[:, :S]
+    else:
+        y = _ssm_chunk_scan(u, dt, Bm, Cm, A, chunk, cfg.chunk_unroll)
+    y = y + u * p["Dskip"][None, None]
+    return (y * jax.nn.silu(res)) @ p["out_proj"]
+
+
+def mamba_init_state(cfg, batch, dtype) -> MambaState:
+    Di = cfg.ssm_expand * cfg.d_model
+    return MambaState(h=jnp.zeros((batch, Di, cfg.ssm_state), dtype),
+                      conv=jnp.zeros((batch, Di, 3), dtype))
+
+
+def mamba_decode(x, p, cfg, state: MambaState) -> Tuple[jax.Array, MambaState]:
+    """One-token step. x: (B, 1, D)."""
+    B = x.shape[0]
+    N = cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+    K = p["conv"].shape[0]
+
+    ur = x[:, 0] @ p["in_proj"]
+    u, res = jnp.split(ur, 2, axis=-1)                        # (B, Di)
+    conv_buf = jnp.concatenate([state.conv, u[..., None]], axis=-1)  # (B,Di,K)
+    u = jnp.einsum("bdk,kd->bd", conv_buf, p["conv"])
+    u = jax.nn.silu(u)
+    new_conv = conv_buf[..., 1:]
+
+    proj = u @ p["x_proj"]
+    dt_low, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"])               # (B, Di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(x.dtype)
+    da = jnp.exp(dt[..., None] * A[None])                     # (B, Di, N)
+    h = da * state.h + (dt * u)[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + u * p["Dskip"][None]
+    out = (y * jax.nn.silu(res)) @ p["out_proj"]
+    return out[:, None], MambaState(h=h, conv=new_conv)
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory block) — chunked linear attention with decay
+# ===========================================================================
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B, H, dk, dv) matrix memory
+    n: jax.Array   # (B, H, dk)     normalizer
+
+
+def mlstm_block(x, p, cfg):
+    """x: (B, S, D). p: wq/wk/wv (D, H*hd), wi/wf (D, H), wo_gate (D, H*hd),
+    out (H*hd, D). Chunked parallel evaluation."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd) * hd ** -0.5
+    k = (x @ p["wk"]).reshape(B, S, H, hd)
+    v = (x @ p["wv"]).reshape(B, S, H, hd)
+    # gates: log-sigmoid forget, exponential-capped input
+    lf = jax.nn.log_sigmoid((x @ p["wf"]).astype(jnp.float32))   # (B,S,H)
+    li = (x @ p["wi"]).astype(jnp.float32)
+    li = jnp.minimum(li, 10.0)                                    # stability
+    og = jax.nn.sigmoid(x @ p["wo_gate"]).reshape(B, S, H, hd)
+
+    Q = min(cfg.ssm_chunk, S)
+    if S % Q:
+        raise ValueError(f"seq {S} not divisible by chunk {Q}")
+    nc = S // Q
+
+    def reshape_c(t):
+        return t.reshape(B, nc, Q, *t.shape[2:]).transpose(1, 0, 2,
+                                                           *range(3, t.ndim + 1))
+
+    qc, kc, vc = map(reshape_c, (q, k, v))        # (nc, B, Q, H, hd)
+    lfc = lf.reshape(B, nc, Q, H).transpose(1, 0, 2, 3)
+    lic = li.reshape(B, nc, Q, H).transpose(1, 0, 2, 3)
+    ogc = og.reshape(B, nc, Q, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def chunk_body(carry, inp):
+        C, n = carry                               # (B,H,dk,dv), (B,H,dk)
+        qq, kk, vv, lff, lii, oo = inp
+        Lc = jnp.cumsum(lff, axis=1)               # (B, Q, H) inclusive
+        # inter-chunk: y_t += (q_t * exp(Lc_t)) C_prev
+        dec_t = jnp.exp(Lc).astype(x.dtype)        # decay from chunk start
+        y_inter = jnp.einsum("bqhk,bhkv->bqhv", qq * dec_t[..., None], C)
+        n_inter = jnp.einsum("bqhk,bhk->bqh", qq * dec_t[..., None], n)
+        # intra-chunk: s_{t,tau} = q_t.k_tau exp(Lc_t - Lc_tau + li_tau)
+        w = Lc[:, :, None, :] - Lc[:, None, :, :] + lii[:, None, :, :]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        w = jnp.where(mask[None, :, :, None], w, -jnp.inf)
+        wexp = jnp.exp(jnp.minimum(w, 30.0)).astype(x.dtype)  # (B,Qt,Qs,H)
+        s = jnp.einsum("bqhk,bshk->bqsh", qq, kk) * wexp
+        y = y_inter + jnp.einsum("bqsh,bshv->bqhv", s, vv)
+        nrm = n_inter + jnp.sum(s, axis=2)         # q_t . n_t (intra part)
+        # normalizer: max(|q.n|, 1) per xLSTM
+        denom = jnp.maximum(jnp.abs(nrm), 1.0)[..., None]
+        y = oo * (y / denom.astype(x.dtype))
+        # state update
+        dec_chunk = jnp.exp(Lc[:, -1]).astype(x.dtype)        # (B, H)
+        rdec = jnp.exp(Lc[:, -1][:, None] - Lc + lii).astype(x.dtype)  # (B,Q,H)
+        C_new = dec_chunk[..., None, None] * C + jnp.einsum(
+            "bqhk,bqhv->bhkv", kk * rdec[..., None], vv)
+        n_new = dec_chunk[..., None] * n + jnp.einsum(
+            "bqh,bqhk->bhk", rdec, kk)
+        return (C_new, n_new), y
+
+    C0 = jnp.zeros((B, H, hd, hd), x.dtype)
+    n0 = jnp.zeros((B, H, hd), x.dtype)
+    body = jax.checkpoint(chunk_body)
+    (_, _), ys = jax.lax.scan(body, (C0, n0), (qc, kc, vc, lfc, lic, ogc),
+                              unroll=nc if cfg.chunk_unroll else 1)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H * hd)
+    return y @ p["out"]
+
+
+def mlstm_init_state(cfg, batch, dtype) -> MLSTMState:
+    H, hd = cfg.n_heads, cfg.hd
+    return MLSTMState(C=jnp.zeros((batch, H, hd, hd), dtype),
+                      n=jnp.zeros((batch, H, hd), dtype))
+
+
+def mlstm_decode(x, p, cfg, state: MLSTMState):
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.hd
+    q = (x[:, 0] @ p["wq"]).reshape(B, H, hd) * hd ** -0.5
+    k = (x[:, 0] @ p["wk"]).reshape(B, H, hd)
+    v = (x[:, 0] @ p["wv"]).reshape(B, H, hd)
+    f = jnp.exp(jax.nn.log_sigmoid((x[:, 0] @ p["wf"]).astype(jnp.float32))
+                ).astype(x.dtype)                             # (B, H)
+    i = jnp.exp(jnp.minimum((x[:, 0] @ p["wi"]).astype(jnp.float32), 10.0)
+                ).astype(x.dtype)
+    og = jax.nn.sigmoid(x[:, 0] @ p["wo_gate"]).reshape(B, H, hd)
+    C = f[..., None, None] * state.C + i[..., None, None] * \
+        jnp.einsum("bhk,bhv->bhkv", k, v)
+    n = f[..., None] * state.n + i[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)), 1.0)
+    y = og * (num / den[..., None].astype(x.dtype))
+    return (y.reshape(B, 1, H * hd) @ p["out"]), MLSTMState(C=C, n=n)
+
+
+# ===========================================================================
+# sLSTM (scalar-memory xLSTM block) — sequential elementwise scan
+# ===========================================================================
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, D)
+    n: jax.Array   # (B, D)
+
+
+def slstm_block(x, p, cfg):
+    """x: (B, S, D). p: wz/wi/wf/wo (D, D), out (D, D)."""
+    B, S, D = x.shape
+    z = jnp.tanh(x @ p["wz"])
+    i = jnp.exp(jnp.minimum((x @ p["wi"]).astype(jnp.float32), 10.0))
+    lf = jax.nn.log_sigmoid((x @ p["wf"]).astype(jnp.float32))
+    o = jax.nn.sigmoid(x @ p["wo"])
+
+    # linear recurrence c_t = f_t c_{t-1} + i_t z_t — associative scan
+    f = jnp.exp(lf)
+
+    def combine(a, b):
+        af, ax = a
+        bf, bx = b
+        return af * bf, bf * ax + bx
+
+    _, c = jax.lax.associative_scan(
+        combine, (f, i * z.astype(jnp.float32)), axis=1)
+    _, n = jax.lax.associative_scan(combine, (f, i), axis=1)
+    h = o * (c / jnp.maximum(jnp.abs(n), 1.0)).astype(x.dtype)
+    return h @ p["out"]
+
+
+def slstm_init_state(cfg, batch, dtype) -> SLSTMState:
+    D = cfg.d_model
+    return SLSTMState(c=jnp.zeros((batch, D), jnp.float32),
+                      n=jnp.zeros((batch, D), jnp.float32))
+
+
+def slstm_decode(x, p, cfg, state: SLSTMState):
+    z = jnp.tanh(x[:, 0] @ p["wz"])
+    i = jnp.exp(jnp.minimum((x[:, 0] @ p["wi"]).astype(jnp.float32), 10.0))
+    f = jnp.exp(jax.nn.log_sigmoid((x[:, 0] @ p["wf"]).astype(jnp.float32)))
+    o = jax.nn.sigmoid(x[:, 0] @ p["wo"])
+    c = f * state.c + i * z.astype(jnp.float32)
+    n = f * state.n + i
+    h = o * (c / jnp.maximum(jnp.abs(n), 1.0)).astype(x.dtype)
+    return (h @ p["out"])[:, None], SLSTMState(c=c, n=n)

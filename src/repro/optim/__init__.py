@@ -1,0 +1,1 @@
+from repro.optim import adamw, compress

@@ -1,0 +1,98 @@
+"""Fault-tolerance runtime: step retries, straggler detection, preemption.
+
+The policies below are host-side and hardware-agnostic, so they are fully
+unit-testable in this CPU container with injected fakes:
+
+* ``retry_step`` — re-executes a step closure on transient failure
+  (``jaxlib`` RuntimeError / timeout), up to ``max_retries``; on persistent
+  failure raises ``StepFailed`` so the trainer restores the last checkpoint.
+* ``StragglerMonitor`` — tracks per-step wall times; flags a step as
+  straggling when it exceeds ``factor`` x the trailing-median. At scale the
+  flag triggers the collective-timeout path (abort + restore + exclude the
+  slow host from the next mesh — i.e. elastic downsize); here we surface it
+  via a callback.
+* ``PreemptionGuard`` — cooperative SIGTERM handling: sets a flag the train
+  loop polls to checkpoint-and-exit cleanly (how TPU pods signal preemption).
+"""
+from __future__ import annotations
+
+import signal
+import statistics
+import time
+from typing import Callable, List, Optional
+
+
+class StepFailed(RuntimeError):
+    pass
+
+
+def retry_step(fn: Callable[[], object], *, max_retries: int = 2,
+               retriable: tuple = (RuntimeError,),
+               on_retry: Optional[Callable[[int, Exception], None]] = None):
+    """Run ``fn``; retry on transient device errors."""
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except retriable as e:  # noqa: PERF203
+            attempt += 1
+            if attempt > max_retries:
+                raise StepFailed(
+                    f"step failed after {max_retries} retries: {e}") from e
+            if on_retry:
+                on_retry(attempt, e)
+
+
+class StragglerMonitor:
+    def __init__(self, factor: float = 3.0, window: int = 20,
+                 min_samples: int = 5,
+                 on_straggler: Optional[Callable[[int, float, float], None]]
+                 = None):
+        self.factor = factor
+        self.window = window
+        self.min_samples = min_samples
+        self.on_straggler = on_straggler
+        self.times: List[float] = []
+        self.flagged: List[int] = []
+        self._step = 0
+
+    def record(self, seconds: float) -> bool:
+        """Record a step duration; returns True if it straggled."""
+        self._step += 1
+        hist = self.times[-self.window:]
+        is_straggler = False
+        if len(hist) >= self.min_samples:
+            med = statistics.median(hist)
+            if seconds > self.factor * med:
+                is_straggler = True
+                self.flagged.append(self._step)
+                if self.on_straggler:
+                    self.on_straggler(self._step, seconds, med)
+        self.times.append(seconds)
+        return is_straggler
+
+    def timed(self, fn: Callable[[], object]):
+        t0 = time.monotonic()
+        out = fn()
+        self.record(time.monotonic() - t0)
+        return out
+
+
+class PreemptionGuard:
+    """Cooperative SIGTERM -> checkpoint-and-exit flag."""
+
+    def __init__(self, install: bool = True):
+        self.preempted = False
+        self._prev = None
+        if install:
+            self._prev = signal.signal(signal.SIGTERM, self._handler)
+
+    def _handler(self, signum, frame):
+        self.preempted = True
+
+    def trigger(self):          # for tests / manual drills
+        self.preempted = True
+
+    def uninstall(self):
+        if self._prev is not None:
+            signal.signal(signal.SIGTERM, self._prev)

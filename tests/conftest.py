@@ -1,0 +1,53 @@
+"""Shared test fixtures. NOTE: do NOT set XLA_FLAGS device-count here —
+smoke tests and benches must see the single real CPU device; only
+launch/dryrun.py forces 512 placeholder devices (in its own process).
+"""
+import jax
+import numpy as np
+import pytest
+
+# Convex-solver tests need f64 to reach paper-grade duality gaps (1e-6..1e-9).
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(12345)
+
+
+def make_regression(rng, n=60, p=300, frac_active=0.2, noise=1.0,
+                    uniform=True):
+    """Simulation protocol of paper Sec 5.1.1 (scaled down)."""
+    if uniform:
+        X = rng.uniform(-10, 10, (n, p))
+    else:
+        X = rng.normal(0, 1, (n, p))
+    beta = np.zeros(p)
+    k = max(int(frac_active * p), 1)
+    idx = rng.choice(p, k, replace=False)
+    beta[idx] = rng.uniform(-1, 1, k)
+    y = X @ beta + noise * rng.normal(0, 1, n)
+    return X, y, beta
+
+
+def make_classification(rng, n=80, p=300, k=10):
+    X = rng.normal(0, 1, (n, p))
+    beta = np.zeros(p)
+    idx = rng.choice(p, k, replace=False)
+    beta[idx] = rng.uniform(-2, 2, k)
+    y = np.sign(X @ beta + 0.3 * rng.normal(0, 1, n))
+    y[y == 0] = 1.0
+    return X, y, beta
+
+
+def kkt_violation(loss, X, y, beta, lam):
+    """Max KKT violation of a LASSO solution (0 at the optimum).
+
+    For all i: |x_i^T f'(X beta)| <= lam (+ equality with sign on support).
+    """
+    import jax.numpy as jnp
+    g = jnp.asarray(X).T @ loss.grad(jnp.asarray(X) @ beta, jnp.asarray(y))
+    inactive_viol = jnp.maximum(jnp.abs(g) - lam, 0.0)
+    active = jnp.abs(beta) > 1e-12
+    active_viol = jnp.where(active, jnp.abs(g + lam * jnp.sign(beta)), 0.0)
+    return float(jnp.max(jnp.maximum(inactive_viol, active_viol)))

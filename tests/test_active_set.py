@@ -1,0 +1,83 @@
+"""Property tests of the fixed-capacity active-set buffer."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import active_set as asl
+
+
+def _consistent(aset, p):
+    """Invariant: in_active == set(idx[mask]); no duplicate live ids."""
+    idx = np.asarray(aset.idx)
+    mask = np.asarray(aset.mask)
+    live = idx[mask]
+    assert len(set(live.tolist())) == len(live), "duplicate live feature"
+    member = np.zeros(p, bool)
+    member[live] = True
+    assert (member == np.asarray(aset.in_active)).all()
+    assert (np.asarray(aset.beta)[~mask] == 0).all()
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_random_add_delete_sequence(seed):
+    r = np.random.default_rng(seed)
+    p, k_max = 50, 16
+    init = r.choice(p, r.integers(1, 8), replace=False)
+    aset = asl.init_active_set(p, k_max, jnp.asarray(init))
+    _consistent(aset, p)
+
+    for _ in range(6):
+        if r.random() < 0.5:
+            # ADD a random batch of non-members
+            member = np.asarray(aset.in_active)
+            cands = np.where(~member)[0]
+            h = min(4, len(cands))
+            if h == 0:
+                continue
+            chosen = r.choice(cands, h, replace=False).astype(np.int32)
+            keep = r.random(h) < 0.8
+            before = np.asarray(aset.mask).sum()
+            aset = asl.add_features(aset, jnp.asarray(chosen),
+                                    jnp.asarray(keep))
+            _consistent(aset, p)
+            after = np.asarray(aset.mask).sum()
+            free_before = k_max - before
+            assert after == before + min(keep.sum(), free_before)
+        else:
+            # DEL a random subset of slots
+            drop = jnp.asarray(r.random(k_max) < 0.3)
+            aset = asl.delete_features(aset, drop)
+            _consistent(aset, p)
+
+
+def test_overflow_flag():
+    p, k_max = 20, 4
+    aset = asl.init_active_set(p, k_max, jnp.arange(3))
+    aset = asl.add_features(aset, jnp.asarray([5, 6, 7], jnp.int32),
+                            jnp.asarray([True, True, True]))
+    assert bool(aset.overflowed)
+    # exactly one was placed (1 free slot)
+    assert int(np.asarray(aset.mask).sum()) == 4
+
+
+def test_scatter_beta_roundtrip():
+    p, k_max = 30, 8
+    aset = asl.init_active_set(p, k_max, jnp.asarray([3, 7, 11]))
+    aset = aset._replace(beta=aset.beta.at[:3].set(jnp.asarray([1., -2., 3.])))
+    full = asl.scatter_beta(aset, p)
+    assert full.shape == (p,)
+    assert float(full[3]) == 1. and float(full[7]) == -2. and float(full[11]) == 3.
+    assert float(jnp.abs(full).sum()) == 6.
+
+
+def test_delete_does_not_clobber_feature_zero():
+    """Padding slots hold idx 0; deleting them must not evict feature 0."""
+    p, k_max = 10, 6
+    aset = asl.init_active_set(p, k_max, jnp.asarray([0, 4]))
+    # delete a padding slot (slot 5 is padding, holds idx 0)
+    drop = jnp.zeros(k_max, bool).at[5].set(True)
+    aset2 = asl.delete_features(aset, drop)
+    assert bool(aset2.in_active[0]), "feature 0 wrongly evicted by padding DEL"
+    _consistent(aset2, p)

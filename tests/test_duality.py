@@ -1,0 +1,106 @@
+"""Tests for ball regions and dual projection — the safety-critical math."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cm import solve_lasso_cm
+from repro.core.duality import (Ball, duality_gap, feasible_dual, gap_ball,
+                                intersect_balls, lambda_max, sequential_ball)
+from repro.core.losses import get_loss
+
+from conftest import make_regression
+
+
+def _theta_star(loss, X, y, lam, tol=1e-12):
+    beta = solve_lasso_cm(loss, X, y, lam, tol=tol)
+    hat = -loss.grad(X @ beta, y) / lam
+    return feasible_dual(loss, X, y, hat, lam), beta
+
+
+def test_gap_ball_contains_theta_star(rng):
+    """Eq (11): theta* within sqrt(2*alpha*gap)/lam of any feasible theta."""
+    loss = get_loss("least_squares")
+    X, y, _ = make_regression(rng, n=40, p=120)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    lam = 0.1 * float(lambda_max(loss, X, y))
+    theta_star, _ = _theta_star(loss, X, y, lam)
+
+    # a crude primal point -> feasible dual -> ball must contain theta*
+    beta_crude = jnp.zeros(X.shape[1])
+    hat = -loss.grad(X @ beta_crude, y) / lam
+    theta = feasible_dual(loss, X, y, hat, lam)
+    gap = duality_gap(loss, X, y, beta_crude, theta, lam)
+    ball = gap_ball(loss, theta, gap, lam)
+    dist = float(jnp.linalg.norm(theta_star - ball.center))
+    assert dist <= float(ball.radius) * (1 + 1e-8)
+
+
+def test_sequential_ball_contains_theta_star(rng):
+    """Thm 2 with lam0 = lambda_max: ball around (lam0/lam) theta0."""
+    loss = get_loss("least_squares")
+    X, y, _ = make_regression(rng, n=40, p=120)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    lam0 = float(lambda_max(loss, X, y))
+    theta0 = -loss.grad(jnp.zeros_like(y), y) / lam0   # exact optimum at lam0
+    for frac in (0.9, 0.5, 0.1):
+        lam = frac * lam0
+        theta_star, _ = _theta_star(loss, X, y, lam)
+        ball = sequential_ball(loss, y, theta0, jnp.asarray(lam0),
+                               jnp.asarray(lam))
+        dist = float(jnp.linalg.norm(theta_star - ball.center))
+        assert dist <= float(ball.radius) * (1 + 1e-8), frac
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_intersect_balls_is_valid_cover(seed):
+    """Any point in B1 ∩ B2 lies in the covering ball (incl. sign edge cases)."""
+    r = np.random.default_rng(seed)
+    dim = 4
+    c1 = r.normal(size=dim)
+    c2 = c1 + r.normal(size=dim) * r.uniform(0, 2)
+    r1, r2 = r.uniform(0.1, 3), r.uniform(0.1, 3)
+    b1 = Ball(jnp.asarray(c1), jnp.asarray(r1))
+    b2 = Ball(jnp.asarray(c2), jnp.asarray(r2))
+    cover = intersect_balls(b1, b2)
+    # rejection-sample points in the intersection
+    pts = c1 + r.normal(size=(2000, dim)) * r1 / np.sqrt(dim)
+    in1 = np.linalg.norm(pts - c1, axis=1) <= r1
+    in2 = np.linalg.norm(pts - c2, axis=1) <= r2
+    both = pts[in1 & in2]
+    if len(both):
+        d = np.linalg.norm(both - np.asarray(cover.center), axis=1)
+        assert (d <= float(cover.radius) * (1 + 1e-9)).all()
+    # the cover never exceeds the smaller ball
+    assert float(cover.radius) <= min(r1, r2) * (1 + 1e-9)
+
+
+def test_feasible_dual_is_feasible(rng):
+    for name in ("least_squares", "logistic"):
+        loss = get_loss(name)
+        X, y, _ = make_regression(rng, n=30, p=80)
+        if name == "logistic":
+            y = np.sign(y)
+            y[y == 0] = 1.0
+        X, y = jnp.asarray(X), jnp.asarray(y)
+        lam = 0.2 * float(lambda_max(loss, X, y))
+        beta = jnp.asarray(rng.normal(size=X.shape[1]) * 0.01)
+        hat = -loss.grad(X @ beta, y) / lam
+        theta = feasible_dual(loss, X, y, hat, lam)
+        assert float(jnp.max(jnp.abs(X.T @ theta))) <= 1.0 + 1e-9
+        # dual objective is finite at the projected point
+        assert np.isfinite(float(loss.dual_objective(y, theta, lam)))
+
+
+def test_gap_nonnegative_at_feasible_pairs(rng):
+    loss = get_loss("least_squares")
+    X, y, _ = make_regression(rng, n=30, p=80)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    lam = 0.3 * float(lambda_max(loss, X, y))
+    for scale in (0.0, 0.001, 0.01):
+        beta = jnp.asarray(rng.normal(size=X.shape[1]) * scale)
+        hat = -loss.grad(X @ beta, y) / lam
+        theta = feasible_dual(loss, X, y, hat, lam)
+        gap = duality_gap(loss, X, y, beta, theta, lam)
+        assert float(gap) >= -1e-9

@@ -1,0 +1,85 @@
+"""Tree fused-LASSO (paper Sec 4, Thms 6-7) tests."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (SaifConfig, build_tree, fused_baseline_cm,
+                        fused_objective, recover_beta, saif_fused,
+                        transform_design)
+
+
+def _chain_parent(p):
+    """1-D fused lasso: path graph 0-1-2-...-p-1 rooted at 0."""
+    parent = np.arange(p) - 1
+    return parent
+
+
+def _random_tree_parent(rng, p):
+    parent = np.full(p, -1, np.int64)
+    for v in range(1, p):
+        parent[v] = rng.integers(0, v)
+    return parent
+
+
+def test_transform_inverts(rng):
+    p = 12
+    tree = build_tree(_random_tree_parent(rng, p))
+    beta = rng.normal(size=p)
+    # beta_tilde from beta: delta along each edge
+    bt = beta[tree.edge_child] - beta[tree.parent[tree.edge_child]]
+    b = beta[tree.root]
+    rec = recover_beta(bt, b, tree)
+    assert np.allclose(rec, beta)
+
+
+def test_transform_design_preserves_predictions(rng):
+    n, p = 9, 12
+    X = rng.normal(size=(n, p))
+    tree = build_tree(_random_tree_parent(rng, p))
+    X_bar, xb = transform_design(X, tree)
+    beta = rng.normal(size=p)
+    bt = beta[tree.edge_child] - beta[tree.parent[tree.edge_child]]
+    b = beta[tree.root]
+    assert np.allclose(X @ beta, X_bar @ bt + xb * b)
+
+
+def test_fused_chain_recovers_piecewise_constant(rng):
+    """On step-function ground truth, fused solution is piecewise constant."""
+    n, p = 80, 40
+    X = rng.normal(size=(n, p))
+    beta_true = np.zeros(p)
+    beta_true[:15] = 2.0
+    beta_true[15:30] = -1.0
+    y = X @ beta_true + 0.05 * rng.normal(size=n)
+    parent = _chain_parent(p)
+    beta, res = saif_fused(X, y, parent, lam=5.0, config=SaifConfig(eps=1e-9))
+    jumps = np.abs(np.diff(beta)) > 1e-6
+    assert jumps.sum() <= 8      # few breakpoints
+    # objective sanity vs the true generating vector
+    assert (fused_objective(X, y, parent, beta, 5.0)
+            <= fused_objective(X, y, parent, beta_true, 5.0) + 1e-6)
+
+
+def test_saif_fused_matches_unscreened_baseline(rng):
+    n, p = 40, 30
+    X = rng.normal(size=(n, p))
+    beta_true = np.zeros(p)
+    beta_true[:10] = 1.5
+    y = X @ beta_true + 0.1 * rng.normal(size=n)
+    parent = _random_tree_parent(rng, p)
+    for lam in (2.0, 10.0):
+        beta_s, _ = saif_fused(X, y, parent, lam, SaifConfig(eps=1e-10))
+        beta_b = fused_baseline_cm(X, y, parent, lam, tol=1e-12)
+        o_s = fused_objective(X, y, parent, beta_s, lam)
+        o_b = fused_objective(X, y, parent, beta_b, lam)
+        assert abs(o_s - o_b) <= 1e-6 * max(abs(o_b), 1)
+        assert np.allclose(beta_s, beta_b, atol=1e-4)
+
+
+def test_large_lambda_fuses_everything(rng):
+    n, p = 30, 20
+    X = rng.normal(size=(n, p))
+    y = rng.normal(size=n)
+    parent = _chain_parent(p)
+    beta, _ = saif_fused(X, y, parent, lam=1e5, config=SaifConfig(eps=1e-10))
+    # all coefficients equal (single fused group; b is unpenalized)
+    assert np.ptp(beta) <= 1e-6

@@ -1,0 +1,54 @@
+"""Group-LASSO SAIF extension tests (the paper's proposed extension)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.group import (GroupSaifConfig, group_lambda_max, group_saif,
+                              solve_group_lasso_bcd)
+from repro.core.losses import get_loss
+
+
+def _make(rng, n=40, p=120, gsize=4, k_groups=5):
+    X = rng.normal(size=(n, p))
+    beta = np.zeros(p)
+    ng = p // gsize
+    act = rng.choice(ng, k_groups, replace=False)
+    for g in act:
+        beta[g * gsize:(g + 1) * gsize] = rng.normal(size=gsize)
+    y = X @ beta + 0.3 * rng.normal(size=n)
+    return X, y
+
+
+@pytest.mark.parametrize("frac", [0.5, 0.1])
+def test_group_saif_matches_bcd_oracle(rng, frac):
+    loss = get_loss("least_squares")
+    gsize = 4
+    X, y = _make(rng)
+    lam = frac * group_lambda_max(loss, X, y, gsize)
+    res = group_saif(X, y, lam, gsize, GroupSaifConfig(eps=1e-9))
+    ref = solve_group_lasso_bcd(loss, jnp.asarray(X), jnp.asarray(y),
+                                lam, gsize, tol=1e-11)
+    # group supports match
+    def gsup(b):
+        return set(np.where(np.linalg.norm(
+            np.asarray(b).reshape(-1, gsize), axis=1) > 1e-7)[0].tolist())
+    assert gsup(res.beta) == gsup(ref)
+    np.testing.assert_allclose(np.asarray(res.beta), np.asarray(ref),
+                               atol=1e-5)
+
+
+def test_group_saif_zero_at_lambda_max(rng):
+    loss = get_loss("least_squares")
+    X, y = _make(rng)
+    lmax = group_lambda_max(loss, X, y, 4)
+    res = group_saif(X, y, 1.2 * lmax, 4, GroupSaifConfig(eps=1e-10))
+    assert float(jnp.abs(res.beta).max()) == 0.0
+
+
+def test_group_active_set_small(rng):
+    loss = get_loss("least_squares")
+    X, y = _make(rng, p=240, k_groups=4)
+    lam = 0.2 * group_lambda_max(loss, X, y, 4)
+    res = group_saif(X, y, lam, 4, GroupSaifConfig(eps=1e-8))
+    assert int(res.n_active_groups) < 60   # << 60 groups total? p/4 = 60
+    assert float(res.gap) <= 1e-8

@@ -1,0 +1,76 @@
+"""Unit + property tests for repro.core.losses."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.losses import get_loss, least_squares, logistic
+
+finite_f = st.floats(min_value=-20, max_value=20, allow_nan=False)
+
+
+@given(z=finite_f, y=finite_f)
+@settings(max_examples=50, deadline=None)
+def test_ls_grad_matches_autodiff(z, y):
+    g_auto = jax.grad(lambda zz: least_squares.value(zz, y))(jnp.asarray(z))
+    assert np.allclose(least_squares.grad(jnp.asarray(z), y), g_auto)
+
+
+@given(z=finite_f, y=st.sampled_from([-1.0, 1.0]))
+@settings(max_examples=50, deadline=None)
+def test_logistic_grad_matches_autodiff(z, y):
+    g_auto = jax.grad(lambda zz: logistic.value(zz, jnp.asarray(y)))(
+        jnp.asarray(z))
+    assert np.allclose(logistic.grad(jnp.asarray(z), jnp.asarray(y)), g_auto,
+                       atol=1e-10)
+
+
+@given(z=finite_f, y=finite_f)
+@settings(max_examples=50, deadline=None)
+def test_ls_fenchel_young_equality(z, y):
+    """f(z) + f*(u) = u z exactly when u = f'(z)."""
+    z, y = jnp.asarray(z), jnp.asarray(y)
+    u = least_squares.grad(z, y)
+    lhs = least_squares.value(z, y) + least_squares.conj(u, y)
+    assert np.allclose(lhs, u * z, atol=1e-8)
+
+
+@given(z=st.floats(min_value=-10, max_value=10), y=st.sampled_from([-1.0, 1.0]))
+@settings(max_examples=50, deadline=None)
+def test_logistic_fenchel_young_equality(z, y):
+    z, y = jnp.asarray(z), jnp.asarray(y)
+    u = logistic.grad(z, y)
+    lhs = logistic.value(z, y) + logistic.conj(u, y)
+    assert np.allclose(lhs, u * z, atol=1e-7)
+
+
+@given(z1=finite_f, z2=finite_f, y=st.sampled_from([-1.0, 1.0]))
+@settings(max_examples=50, deadline=None)
+def test_smoothness_constants(z1, z2, y):
+    """|f'(z1) - f'(z2)| <= alpha |z1 - z2| for both losses."""
+    for loss in (least_squares, logistic):
+        d = abs(float(loss.grad(jnp.asarray(z1), y)
+                      - loss.grad(jnp.asarray(z2), y)))
+        assert d <= loss.smoothness * abs(z1 - z2) + 1e-9
+
+
+def test_primal_dual_objectives_shapes():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(7, 5)))
+    y = jnp.asarray(rng.normal(size=7))
+    beta = jnp.asarray(rng.normal(size=5))
+    lam = jnp.asarray(0.3)
+    for name in ("least_squares", "logistic"):
+        loss = get_loss(name)
+        yy = jnp.sign(y) if name == "logistic" else y
+        p = loss.primal_objective(X, yy, beta, lam)
+        d = loss.dual_objective(yy, jnp.zeros(7), lam)
+        assert p.shape == () and d.shape == ()
+        assert np.isfinite(float(p))
+
+
+def test_get_loss_unknown():
+    with pytest.raises(ValueError):
+        get_loss("huber")

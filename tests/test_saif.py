@@ -1,0 +1,139 @@
+"""End-to-end SAIF correctness: the SAFE guarantee, convergence, traces."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SaifConfig, get_loss, saif, saif_path, lambda_grid,
+                        solve_lasso_cm)
+from repro.core.duality import lambda_max
+
+from conftest import kkt_violation, make_classification, make_regression
+
+
+def _support(beta, tol=1e-9):
+    return set(np.where(np.abs(np.asarray(beta)) > tol)[0].tolist())
+
+
+@pytest.mark.parametrize("frac", [0.5, 0.1, 0.02])
+def test_saif_matches_full_solve_ls(rng, frac):
+    loss = get_loss("least_squares")
+    X, y, _ = make_regression(rng, n=50, p=300)
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    lam = frac * float(lambda_max(loss, Xj, yj))
+    res = saif(X, y, lam, SaifConfig(eps=1e-8))
+    beta_ref = solve_lasso_cm(loss, Xj, yj, lam, tol=1e-10)
+    p_saif = float(loss.primal_objective(Xj, yj, res.beta, lam))
+    p_ref = float(loss.primal_objective(Xj, yj, beta_ref, lam))
+    assert p_saif <= p_ref + 1e-6 * max(abs(p_ref), 1)
+    assert _support(res.beta, 1e-8) == _support(beta_ref, 1e-8)
+    assert kkt_violation(loss, Xj, yj, res.beta, lam) <= 1e-3 * lam
+
+
+@pytest.mark.parametrize("frac", [0.3, 0.05])
+def test_saif_matches_full_solve_logistic(rng, frac):
+    loss = get_loss("logistic")
+    X, y, _ = make_classification(rng, n=60, p=250)
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    lam = frac * float(lambda_max(loss, Xj, yj))
+    res = saif(X, y, lam, SaifConfig(eps=1e-8, loss="logistic"))
+    beta_ref = solve_lasso_cm(loss, Xj, yj, lam, tol=1e-10)
+    assert _support(res.beta, 1e-8) == _support(beta_ref, 1e-8)
+    assert kkt_violation(loss, Xj, yj, res.beta, lam) <= 1e-3 * lam
+
+
+def test_safety_recall_precision_one(rng):
+    """The paper's headline: SAIF recall == precision == 1 vs ground truth."""
+    loss = get_loss("least_squares")
+    X, y, _ = make_regression(rng, n=40, p=200)
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    lmax = float(lambda_max(loss, Xj, yj))
+    for frac in (0.4, 0.1, 0.03):
+        lam = frac * lmax
+        res = saif(X, y, lam, SaifConfig(eps=1e-9))
+        beta_ref = solve_lasso_cm(loss, Xj, yj, lam, tol=1e-11)
+        s, r = _support(res.beta, 1e-8), _support(beta_ref, 1e-8)
+        tp = len(s & r)
+        assert tp == len(r) == len(s)   # recall = precision = 1
+
+
+def test_gap_reaches_eps(rng):
+    X, y, _ = make_regression(rng, n=40, p=150)
+    loss = get_loss("least_squares")
+    lam = 0.1 * float(lambda_max(loss, jnp.asarray(X), jnp.asarray(y)))
+    for eps in (1e-6, 1e-9):
+        res = saif(X, y, lam, SaifConfig(eps=eps))
+        assert float(res.gap) <= eps
+
+
+def test_active_set_grows_from_small(rng):
+    """Fig 3 behaviour: |A_t| starts << p and stays O(|support|)."""
+    X, y, _ = make_regression(rng, n=50, p=500)
+    loss = get_loss("least_squares")
+    lam = 0.05 * float(lambda_max(loss, jnp.asarray(X), jnp.asarray(y)))
+    res = saif(X, y, lam, SaifConfig(eps=1e-7))
+    tr = np.asarray(res.trace_n_active)
+    tr = tr[tr >= 0]
+    assert tr[0] < 0.2 * 500            # starts small
+    assert tr.max() < 500               # never the full problem
+    assert tr.max() <= 6 * max(int(res.n_active), 1)
+
+
+def test_capacity_overflow_recovers(rng):
+    """Tiny k_max forces the elastic-capacity recompile path; still exact."""
+    X, y, _ = make_regression(rng, n=40, p=200)
+    loss = get_loss("least_squares")
+    lam = 0.05 * float(lambda_max(loss, jnp.asarray(X), jnp.asarray(y)))
+    res = saif(X, y, lam, SaifConfig(eps=1e-8, k_max=8))
+    beta_ref = solve_lasso_cm(loss, jnp.asarray(X), jnp.asarray(y), lam,
+                              tol=1e-10)
+    assert _support(res.beta, 1e-8) == _support(beta_ref, 1e-8)
+
+
+def test_lam_above_lambda_max_gives_zero(rng):
+    X, y, _ = make_regression(rng, n=30, p=100)
+    loss = get_loss("least_squares")
+    lmax = float(lambda_max(loss, jnp.asarray(X), jnp.asarray(y)))
+    res = saif(X, y, 1.5 * lmax, SaifConfig(eps=1e-9))
+    assert float(jnp.abs(res.beta).max()) == 0.0
+
+
+def test_warm_started_path_consistent(rng):
+    """Sec 5.3: warm-started path solutions match independent solves."""
+    X, y, _ = make_regression(rng, n=40, p=150)
+    loss = get_loss("least_squares")
+    lmax = float(lambda_max(loss, jnp.asarray(X), jnp.asarray(y)))
+    lams = lambda_grid(lmax, 5, lo_frac=0.02)
+    pres = saif_path(X, y, lams, SaifConfig(eps=1e-8))
+    for lam, beta in zip(pres.lams, pres.betas):
+        cold = saif(X, y, float(lam), SaifConfig(eps=1e-8))
+        assert _support(beta, 1e-8) == _support(cold.beta, 1e-8)
+
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+
+@given(seed=st.integers(0, 10_000),
+       lam_frac=st.sampled_from([0.5, 0.2, 0.08]),
+       loss_name=st.sampled_from(["least_squares", "logistic"]))
+@settings(max_examples=8, deadline=None)
+def test_safety_property(seed, lam_frac, loss_name):
+    """THE system invariant (hypothesis): for arbitrary problems, SAIF's
+    support equals the unscreened oracle's — the safe guarantee."""
+    r = np.random.default_rng(seed)
+    n, p = 25, 60
+    X = r.normal(size=(n, p)) * r.uniform(0.5, 3)
+    w = np.zeros(p)
+    w[r.choice(p, 8, replace=False)] = r.normal(size=8)
+    if loss_name == "logistic":
+        y = np.sign(X @ w + 0.2 * r.normal(size=n))
+        y[y == 0] = 1.0
+    else:
+        y = X @ w + 0.5 * r.normal(size=n)
+    loss = get_loss(loss_name)
+    from repro.core.duality import lambda_max as lmax_fn
+    lam = lam_frac * float(lmax_fn(loss, jnp.asarray(X), jnp.asarray(y)))
+    res = saif(X, y, lam, SaifConfig(eps=1e-9, loss=loss_name))
+    ref = solve_lasso_cm(loss, jnp.asarray(X), jnp.asarray(y), lam,
+                         tol=1e-11)
+    assert _support(res.beta, 1e-8) == _support(ref, 1e-8)
