@@ -1,12 +1,40 @@
 """Benchmark runner (deliverable d): one entry per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. ``--full`` runs the paper-scale
-shapes (slow on CPU); the default is a reduced sweep suitable for CI.
+Prints ``name,us_per_call,derived`` CSV and, per suite, writes a
+machine-readable ``BENCH_<suite>.json`` next to the working directory so the
+perf trajectory is tracked across PRs (``BENCH_path.json`` is the
+acceptance artifact for the compile-first path engine). ``--full`` runs the
+paper-scale shapes (slow on CPU); the default is a reduced sweep suitable
+for CI.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
+import time
+
+
+def write_bench_json(name: str, rows, full: bool) -> str:
+    import jax
+
+    payload = {
+        "suite": name,
+        "rows": rows,
+        "full": full,
+        "meta": {
+            "unix_time": int(time.time()),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "python": platform.python_version(),
+        },
+    }
+    path = f"BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def main(argv=None):
@@ -15,6 +43,8 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma list: runtime,trajectory,heatmap,logistic,"
                          "path,fused,complexity")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip the BENCH_<suite>.json artifacts")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_complexity, bench_fused, bench_heatmap,
@@ -26,7 +56,7 @@ def main(argv=None):
         "trajectory": bench_trajectory,  # Fig 3
         "heatmap": bench_heatmap,        # Fig 4
         "logistic": bench_logistic,      # Fig 5
-        "path": bench_path,              # Fig 6 + Table 1
+        "path": bench_path,              # Fig 6 + Table 1 + engine speedup
         "fused": bench_fused,            # Fig 7
         "complexity": bench_complexity,  # Thm 4/5
     }
@@ -38,9 +68,13 @@ def main(argv=None):
     for name, mod in suites.items():
         rows = mod.run(full=args.full)
         for i, row in enumerate(rows):
-            t = row.get("saif_s") or row.get("saif_path_s") or 0.0
+            t = (row.get("saif_s") or row.get("saif_path_s")
+                 or row.get("engine_s") or 0.0)
             derived = ";".join(f"{k}={v}" for k, v in row.items())
             print(f"{name}[{i}],{t*1e6:.1f},{derived}")
+        if not args.no_json:
+            path = write_bench_json(name, rows, args.full)
+            print(f"# wrote {path}", file=sys.stderr)
     return 0
 
 

@@ -17,12 +17,19 @@ from repro.core.fused import (build_tree, fused_baseline_cm, fused_objective,
                               recover_beta, saif_fused, transform_design)
 from repro.core.homotopy import HomotopyConfig, homotopy_path, support_metrics
 from repro.core.losses import get_loss, least_squares, logistic
-from repro.core.path import lambda_grid, saif_path
-from repro.core.saif import SaifConfig, SaifResult, saif
+from repro.core.path import (PathState, SaifPathResult, lambda_grid,
+                             prepare_path, saif_path, saif_path_naive)
+from repro.core.saif import (SaifConfig, SaifResult, saif,
+                             saif_jit_compile_count)
+from repro.core.screen_backend import (ScreenFn, ScreenOut, make_screen_jnp,
+                                       make_screen_pallas, resolve_backend)
 from repro.core.sequential import SeqConfig, sequential_path
 
 __all__ = [
-    "saif", "SaifConfig", "SaifResult", "saif_path", "lambda_grid",
+    "saif", "SaifConfig", "SaifResult", "saif_path", "saif_path_naive",
+    "SaifPathResult", "PathState", "prepare_path", "lambda_grid",
+    "saif_jit_compile_count", "ScreenFn", "ScreenOut", "make_screen_jnp",
+    "make_screen_pallas", "resolve_backend",
     "dynamic_screening", "DynConfig", "sequential_path", "SeqConfig",
     "homotopy_path", "HomotopyConfig", "support_metrics",
     "group_saif", "GroupSaifConfig", "group_lambda_max",

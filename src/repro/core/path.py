@@ -1,29 +1,200 @@
-"""Warm-started SAIF lambda-path driver (paper Sec 5.3)."""
+"""Compile-first warm-started SAIF lambda-path engine (paper Sec 5.3).
+
+The naive path driver (kept as :func:`saif_path_naive`, the benchmark
+baseline) calls the single-lambda host driver per grid point, which costs
+per lambda: an O(np) re-preprocessing of (c0, col_norm, lam_max), a host
+sync for the overflow flag, a host round-trip to extract the warm-start
+support, and — whenever the static (h, k_max) signature moves — a fresh
+``_saif_jit`` compilation.
+
+The engine here hoists all of that out of the lambda loop:
+
+  * **prepare once** — ``PathState`` computes c0 / col_norm / lam_max and
+    the c0 statistics feeding the h formula exactly once per path;
+  * **one static signature** — the candidate-buffer size h is bucketed to
+    the *grid maximum* (already a power of two) so every lambda shares a
+    single ``_saif_jit`` compilation, while the per-lambda batch size
+    (h_cap) and violation tolerance (h~) ride along as *traced* scalars —
+    they only feed comparisons. The ADD decisions are therefore bitwise
+    those of a per-lambda compile; only the compile count changes. Worst
+    case over capacity growth this is O(log p) distinct compilations per
+    path (assert via :func:`repro.core.saif.saif_jit_compile_count`);
+  * **fixed-capacity warm buffers** — the (k_max,) warm-start index/value
+    buffers are produced *on device* from the previous solution
+    (``jnp.nonzero(..., size=k_max)``), so the inter-lambda handoff never
+    syncs to the host;
+  * **segment-batched overflow checks** — solutions are collected per path
+    segment and the ``overflowed`` flags are reduced in one host sync per
+    segment instead of one per lambda. On overflow the capacity doubles and
+    the segment re-runs from its entry state (rare: capacity starts at the
+    grid-max 8h).
+"""
 from __future__ import annotations
 
-from typing import List, NamedTuple, Sequence
+from functools import partial
+from typing import Callable, List, NamedTuple, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.saif import SaifConfig, SaifResult, saif
+from repro.core.losses import get_loss
+from repro.core.saif import (SaifConfig, SaifResult, _saif_jit,
+                             add_batch_size_static, default_capacity, saif,
+                             saif_jit_compile_count)
+from repro.core.screen_backend import ScreenFn, resolve_backend
+
+
+class PathState(NamedTuple):
+    """One-time O(np) preprocessing shared by every lambda on the path."""
+    X: jax.Array          # (n, p)
+    y: jax.Array          # (n,)
+    c0: jax.Array         # (p,) |X^T f'(0)|
+    col_norm: jax.Array   # (p,)
+    lam_max: float
+    c0_max: float         # host copies of the c0 statistics the h formula
+    c0_median: float      # needs — synced exactly once per path
 
 
 class SaifPathResult(NamedTuple):
     lams: np.ndarray
     betas: List[jnp.ndarray]
     results: List[SaifResult]
+    n_compilations: Optional[int] = None   # _saif_jit compiles this path added
+
+
+def prepare_path(X, y, config: SaifConfig) -> PathState:
+    loss = get_loss(config.loss)
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    g0 = loss.grad(jnp.zeros_like(y), y)
+    c0 = jnp.abs(X.T @ g0)
+    col_norm = jnp.linalg.norm(X, axis=0)
+    c0_max, c0_median = jax.device_get((jnp.max(c0), jnp.median(c0)))
+    return PathState(X=X, y=y, c0=c0, col_norm=col_norm,
+                     lam_max=float(c0_max), c0_max=float(c0_max),
+                     c0_median=float(c0_median))
+
+
+@partial(jax.jit, static_argnames=("k_max",))
+def _warm_buffers(beta_full: jax.Array, *, k_max: int):
+    """Device-side warm-start extraction: (idx, beta, count) at capacity."""
+    nz = beta_full != 0
+    idx = jnp.nonzero(nz, size=k_max, fill_value=0)[0].astype(jnp.int32)
+    count = jnp.minimum(jnp.sum(nz), k_max).astype(jnp.int32)
+    live = jnp.arange(k_max) < count
+    vals = jnp.where(live, jnp.take(beta_full, idx), 0.0)
+    return idx, vals, count
+
+
+def _segments(n_lams: int, segment_len: int) -> List[slice]:
+    return [slice(i, min(i + segment_len, n_lams))
+            for i in range(0, n_lams, segment_len)]
 
 
 def saif_path(X, y, lams: Sequence[float],
-              config: SaifConfig = SaifConfig()) -> SaifPathResult:
-    """Solve a descending lambda path; each solve warm-starts from the last."""
+              config: SaifConfig = SaifConfig(),
+              make_screen: Optional[Callable[[int], ScreenFn]] = None,
+              segment_len: int = 16) -> SaifPathResult:
+    """Solve a descending lambda path; each solve warm-starts from the last.
+
+    ``make_screen`` threads a custom screening backend through every solve:
+    it is called once with the engine's grid-max candidate count h (which
+    sizes the ScreenOut arrays and is only known here) and must return the
+    ScreenFn, e.g. ``lambda h: make_sharded_screen(design, h)``. Otherwise
+    ``config.screen_backend`` picks a built-in backend.
+    """
+    prep = prepare_path(X, y, config)
+    X, y, c0, col_norm = prep.X, prep.y, prep.c0, prep.col_norm
+    n, p = X.shape
+    lams_np = np.asarray(sorted([float(l) for l in lams], reverse=True))
+    backend = resolve_backend(config.screen_backend)
+    n_compile0 = saif_jit_compile_count()
+
+    # One static signature for the whole path: grid-max h (pow2-bucketed).
+    # h sizes the candidate shapes, so it must be static; the violation
+    # tolerance h~ only feeds comparisons, so it stays a per-lambda traced
+    # scalar — the active set remains exactly as lean as per-lambda
+    # compilation would keep it, at one compile for the whole grid.
+    hs = [add_batch_size_static(config.c, lam, prep.c0_max, prep.c0_median, p)
+          for lam in lams_np]
+    h = max(hs) if hs else 1
+    k_max = config.k_max or default_capacity(h, p)
+    # the backend's candidate arrays must be sized for the grid-max h
+    screen_fn = make_screen(h) if make_screen is not None else None
+
+    def run_lam(lam: float, h_lam: int, warm) -> SaifResult:
+        delta0 = config.delta0 if config.delta0 is not None else \
+            min(max(lam / prep.lam_max, 1e-3), 1.0)
+        warm_idx, warm_beta, warm_count = warm
+        return _saif_jit(
+            X, y, col_norm, c0, jnp.asarray(lam, X.dtype),
+            jnp.asarray(config.eps, X.dtype), delta0,
+            warm_idx, warm_beta, warm_count,
+            jnp.asarray(max(int(np.ceil(config.zeta * h_lam)), 1),
+                        jnp.int32),
+            jnp.asarray(h_lam, jnp.int32),
+            loss_name=config.loss, h=h, k_max=k_max,
+            inner_epochs=config.inner_epochs,
+            polish_factor=config.polish_factor,
+            max_outer=config.max_outer, use_seq_ball=config.use_seq_ball,
+            screen_backend=backend, screen_fn=screen_fn)
+
+    def cold_start(k: int):
+        # seed with the FIRST lambda's own batch size (hs[0]), not the
+        # grid-max h: the cold solve must match a standalone solve at
+        # lams[0] exactly
+        n_init = min(hs[0] if hs else 1, k, p)
+        top = jax.lax.top_k(c0, n_init)[1].astype(jnp.int32)
+        idx = jnp.zeros((k,), jnp.int32).at[:n_init].set(top)
+        return idx, jnp.zeros((k,), X.dtype), jnp.asarray(n_init, jnp.int32)
+
+    def grow(warm, k: int):
+        idx, vals, count = warm
+        pad = k - idx.shape[0]
+        return (jnp.pad(idx, (0, pad)), jnp.pad(vals, (0, pad)), count)
+
+    results: List[SaifResult] = [None] * len(lams_np)
+    warm = cold_start(k_max)
+    for seg in _segments(len(lams_np), segment_len):
+        entry = warm
+        while True:
+            cur = entry
+            seg_results = []
+            for j, lam in zip(range(seg.start, seg.stop), lams_np[seg]):
+                res = run_lam(float(lam), hs[j], cur)
+                seg_results.append(res)
+                cur = _warm_buffers(res.beta, k_max=k_max)
+            # ONE host sync per segment: the batched overflow check
+            flags = jnp.stack([r.overflowed for r in seg_results])
+            if not bool(jnp.any(flags)) or k_max >= p:
+                break
+            k_max = min(2 * k_max, p)   # elastic growth, segment re-entry
+            entry = grow(entry, k_max)
+        results[seg] = seg_results
+        warm = cur
+
+    betas = [r.beta for r in results]
+    n_compile1 = saif_jit_compile_count()
+    n_comp = (max(n_compile1 - n_compile0, 0)
+              if n_compile0 >= 0 and n_compile1 >= 0 else None)
+    return SaifPathResult(lams=lams_np, betas=betas, results=results,
+                          n_compilations=n_comp)
+
+
+def saif_path_naive(X, y, lams: Sequence[float],
+                    config: SaifConfig = SaifConfig()) -> SaifPathResult:
+    """Pre-engine Python-loop driver: one full host round-trip per lambda.
+
+    Kept verbatim as the benchmark baseline (BENCH_path.json tracks the
+    engine's speedup over this) and as a brute-force parity oracle.
+    """
     X = jnp.asarray(X)
     y = jnp.asarray(y)
-    lams = np.asarray(sorted([float(l) for l in lams], reverse=True))
+    lams_np = np.asarray(sorted([float(l) for l in lams], reverse=True))
     betas, results = [], []
     warm_idx = warm_beta = None
-    for lam in lams:
+    for lam in lams_np:
         res = saif(X, y, float(lam), config,
                    warm_idx=warm_idx, warm_beta=warm_beta)
         betas.append(res.beta)
@@ -36,7 +207,7 @@ def saif_path(X, y, lams: Sequence[float],
             warm_beta = res.beta[warm_idx]
         else:
             warm_idx = warm_beta = None
-    return SaifPathResult(lams=lams, betas=betas, results=results)
+    return SaifPathResult(lams=lams_np, betas=betas, results=results)
 
 
 def lambda_grid(lam_max: float, n: int, lo_frac: float = 1e-3) -> np.ndarray:

@@ -2,11 +2,14 @@
 
 The entire outer loop is a single jitted ``lax.while_loop``; the active set is
 the fixed-capacity buffer from :mod:`repro.core.active_set`. The only O(p)
-work per outer step is the screening scan ``|X^T theta|`` (gated on the ADD
-phase), exactly the cost profile Theorem 5 predicts. That scan is pluggable:
-the default is a jnp matvec; ``repro.kernels.screen`` provides the Pallas TPU
-kernel and ``repro.distributed.saif_sharded`` the multi-pod shard_map version
-— all three compute the same function (tested against each other).
+work per outer step is the screening scan (gated on the ADD phase), and that
+scan is pluggable: a :class:`~repro.core.screen_backend.ScreenFn` produces
+the ADD-stop bound, the top-h candidates and their violation counts in one
+shot, so the ADD phase never materializes or sorts a second (p,)-shaped
+array. Backends: the default jnp matvec, the fused Pallas TPU kernel pair
+(``repro.kernels.screen``), and the multi-pod shard_map version
+(``repro.distributed.saif_sharded``) — all computing the same function
+(tested against each other; selection policy in DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -20,10 +23,14 @@ import jax.numpy as jnp
 
 from repro.core import active_set as aset_lib
 from repro.core.active_set import ActiveSet
-from repro.core.cm import cm_epoch, cm_epoch_compact
-from repro.core.duality import (Ball, dual_point, duality_gap, feasible_dual,
-                                gap_ball, intersect_balls, sequential_ball)
-from repro.core.losses import Loss, get_loss
+from repro.core.cm import cm_epochs_compact
+from repro.core.duality import (duality_gap, feasible_dual, gap_ball,
+                                intersect_balls, sequential_ball)
+from repro.core.losses import get_loss
+from repro.core.screen_backend import (ScreenFn, ScreenOut,
+                                       make_screen_from_scan,
+                                       make_screen_jnp, make_screen_pallas,
+                                       resolve_backend)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +48,7 @@ class SaifConfig:
     delta0: Optional[float] = None  # initial radius factor (None => lam/lam_max)
     use_seq_ball: bool = True    # intersect Thm-2 ball with the gap ball
     loss: str = "least_squares"
+    screen_backend: str = "auto"  # "auto" | "jnp" | "pallas" (DESIGN.md §3)
 
 
 class SaifResult(NamedTuple):
@@ -51,7 +59,7 @@ class SaifResult(NamedTuple):
     overflowed: jax.Array    # capacity overflow flag
     trace_n_active: jax.Array  # (max_outer,) |A_t| per outer step (-1 pad)
     trace_gap: jax.Array       # (max_outer,)
-    trace_dual: jax.Array      # (max_outer,) D(theta_t)
+    trace_dual: jax.Array      # (max_outer,)
 
 
 class _State(NamedTuple):
@@ -67,19 +75,26 @@ class _State(NamedTuple):
     trace_dual: jax.Array
 
 
-def add_batch_size(c: float, lam: float, c0: jax.Array, p: int) -> int:
+def add_batch_size_static(c: float, lam: float, c0_max: float,
+                          c0_median: float, p: int) -> int:
     """h = ceil(c log((md+mx)/lam) log p)  — paper Sec 2.2 (static value).
 
     Rounded up to the next power of two: h is a jit-static argument, so
     bucketing caps the number of recompiles across a lambda path at
-    O(log p) instead of one per lambda (§Perf iteration 1).
+    O(log p) instead of one per lambda (§Perf iteration 1). Takes the c0
+    statistics as host floats so path drivers sync them exactly once.
     """
-    mx = float(jnp.max(c0))
-    md = float(jnp.median(c0))
-    h = math.ceil(max(c * math.log(max((md + mx) / lam, 1.0 + 1e-9))
+    h = math.ceil(max(c * math.log(max((c0_median + c0_max) / lam,
+                                       1.0 + 1e-9))
                       * math.log(max(p, 2)), 1.0))
     h = 1 << (max(h, 1) - 1).bit_length()       # next pow2 bucket
     return max(min(h, p), 1)
+
+
+def add_batch_size(c: float, lam: float, c0: jax.Array, p: int) -> int:
+    """Device-array convenience wrapper around :func:`add_batch_size_static`."""
+    return add_batch_size_static(c, lam, float(jnp.max(c0)),
+                                 float(jnp.median(c0)), p)
 
 
 def default_capacity(h: int, p: int) -> int:
@@ -87,30 +102,40 @@ def default_capacity(h: int, p: int) -> int:
 
 
 ScanFn = Callable[[jax.Array], jax.Array]
-# signature: theta (n,) -> |X^T theta| (p,)
+# legacy signature: theta (n,) -> |X^T theta| (p,)
 
 
-def _make_scan(X: jax.Array) -> ScanFn:
-    def scan(theta):
-        return jnp.abs(X.T @ theta)
-    return scan
-
-
-@partial(jax.jit, static_argnames=("loss_name", "h", "h_tilde", "k_max",
+@partial(jax.jit, static_argnames=("loss_name", "h", "k_max",
                                    "inner_epochs", "polish_factor",
-                                   "max_outer", "use_seq_ball", "scan_fn"))
+                                   "max_outer", "use_seq_ball",
+                                   "screen_backend", "screen_fn", "scan_fn"))
 def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
-              init_count,
-              *, loss_name: str, h: int, h_tilde: int, k_max: int,
+              init_count, h_tilde, h_cap,
+              *, loss_name: str, h: int, k_max: int,
               inner_epochs: int, polish_factor: int, max_outer: int,
-              use_seq_ball: bool,
+              use_seq_ball: bool, screen_backend: str = "jnp",
+              screen_fn: Optional[ScreenFn] = None,
               scan_fn: Optional[ScanFn] = None) -> SaifResult:
+    # h (static) sizes the candidate shapes; h_tilde (the violation
+    # tolerance) and h_cap (the effective per-step batch size, <= h) are
+    # traced — they only feed comparisons. Splitting them lets a lambda
+    # path share ONE compilation at the grid-max h while every lambda
+    # keeps its own tolerance and batch size, so the ADD decisions are
+    # bitwise those of a per-lambda compile.
     loss = get_loss(loss_name)
     n, p = X.shape
     lam = jnp.asarray(lam, X.dtype)
-    scan = scan_fn if scan_fn is not None else _make_scan(X)
+    if screen_fn is not None:
+        screen = screen_fn
+    elif scan_fn is not None:
+        # legacy bare-scan hook (e.g. the shard_map scan): adapt in-trace so
+        # the caller-stable function object stays the jit cache key
+        screen = make_screen_from_scan(scan_fn, col_norm, h)
+    elif screen_backend == "pallas":
+        screen = make_screen_pallas(X, col_norm, h)
+    else:
+        screen = make_screen_jnp(X, col_norm, h)
 
-    lam_max_full = jnp.max(c0)
     g0 = loss.grad(jnp.zeros_like(y), y)   # f'(0)
 
     aset0 = aset_lib.init_active_set(p, k_max, init_idx, X.dtype, init_beta,
@@ -135,15 +160,10 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
         #  sweeps only live slots — §Perf iteration 3)
         order = jnp.argsort(~aset.mask)
         count = jnp.sum(aset.mask)
-
-        def cm_body(_, carry):
-            beta, z = carry
-            return cm_epoch_compact(loss, Xa, y, beta, z, aset.mask, lam,
-                                    order, count)
         n_ep = jnp.where(s.is_add, inner_epochs,
                          inner_epochs * polish_factor)
-        beta, z = jax.lax.fori_loop(
-            0, n_ep, cm_body, (aset.beta, Xa @ aset.beta))
+        beta, z = cm_epochs_compact(loss, Xa, y, aset.beta, Xa @ aset.beta,
+                                    aset.mask, lam, order, count, n_ep)
         aset = aset._replace(beta=beta)
 
         # --- dual point, gap, ball region (Eq. 11 / Thm 2 / Eq. 12) --------
@@ -182,11 +202,12 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
         # --- ADD phase ------------------------------------------------------
         def do_add_phase(args):
             aset, delta, is_add = args
-            scores = scan(theta_c)                              # (p,) |x^T th|
-            scores = jnp.where(aset.in_active, -jnp.inf, scores)
-            ub = scores + col_norm * r_eff
+            # One backend call covers the whole full-width decision: the
+            # ADD-stop bound, the top-h candidates and their violation
+            # counts. No (p,)-shaped sort, no second full-width pass.
+            out: ScreenOut = screen(theta_c, r_eff, aset.in_active)
             # stop criterion for ADD (Remark 1): max_{R_t} ub < 1
-            add_done = jnp.max(ub) < 1.0
+            add_done = out.max_ub < 1.0
 
             def on_done(args):
                 aset, delta, is_add = args
@@ -200,16 +221,10 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
                 # Algorithm 2: candidates = top-h by score; candidate l is
                 # added iff its violation count |V_i| < h~, evaluated against
                 # R_t minus the better-ranked candidates (cumulative-AND).
-                top_scores, top_idx = jax.lax.top_k(scores, h)
-                lb_cand = jnp.abs(top_scores -
-                                  jnp.take(col_norm, top_idx) * r_eff)
-                # #{i~ in R_t : ub_i~ >= lb_cand}, minus self & better-ranked
-                ub_sorted = jnp.sort(ub)                        # ascending
-                ge_count = ub.shape[0] - jnp.searchsorted(
-                    ub_sorted, lb_cand, side="left")
                 ranks = jnp.arange(h)
-                v_count = jnp.maximum(ge_count - 1 - ranks, 0)
-                keep = (v_count < h_tilde) & jnp.isfinite(top_scores)
+                v_count = jnp.maximum(out.cand_ge - 1 - ranks, 0)
+                keep = ((v_count < h_tilde) & (ranks < h_cap) &
+                        jnp.isfinite(out.cand_score))
                 keep = jnp.cumprod(keep.astype(jnp.int32)).astype(bool)
                 # Progress guarantee (TPU adaptation, DESIGN.md §2): when the
                 # sub-problem is already solved to near-target accuracy but no
@@ -218,10 +233,10 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
                 # feature. ADDing extra features is always safe (Thm 1a) —
                 # it can only cost compute, never correctness.
                 stuck = gap <= 100.0 * eps
-                keep = keep.at[0].set(keep[0] | (stuck &
-                                                 jnp.isfinite(top_scores[0])))
-                return (aset_lib.add_features(aset, top_idx.astype(jnp.int32),
-                                              keep), delta, is_add)
+                keep = keep.at[0].set(
+                    keep[0] | (stuck & jnp.isfinite(out.cand_score[0])))
+                return (aset_lib.add_features(aset, out.cand_idx, keep),
+                        delta, is_add)
 
             return jax.lax.cond(add_done, on_done, on_add,
                                 (aset, delta, is_add))
@@ -249,15 +264,30 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
                       trace_dual=final.trace_dual)
 
 
+def saif_jit_compile_count() -> int:
+    """Number of distinct ``_saif_jit`` compilations alive in this process.
+
+    The compile-first path engine and the benchmarks assert on deltas of
+    this counter (acceptance: O(log p) compilations per lambda path).
+    """
+    try:
+        return int(_saif_jit._cache_size())
+    except Exception:       # pragma: no cover - older/newer jit internals
+        return -1
+
+
 def saif(X, y, lam: float, config: SaifConfig = SaifConfig(),
          scan_fn: Optional[ScanFn] = None,
+         screen_fn: Optional[ScreenFn] = None,
          warm_idx: Optional[jax.Array] = None,
          warm_beta: Optional[jax.Array] = None) -> SaifResult:
     """Solve LASSO at ``lam`` with SAIF. Host-level driver.
 
-    Handles the static pieces (h, capacity, initial active set) and the
-    capacity-overflow recompile loop; everything else runs inside one jitted
-    while_loop.
+    Handles the static pieces (h, capacity, initial active set, screening
+    backend selection) and the capacity-overflow recompile loop; everything
+    else runs inside one jitted while_loop. ``screen_fn`` plugs a full
+    custom backend (e.g. the sharded one); ``scan_fn`` is the legacy
+    bare-scan hook, adapted on the fly.
     """
     loss = get_loss(config.loss)
     X = jnp.asarray(X)
@@ -273,6 +303,7 @@ def saif(X, y, lam: float, config: SaifConfig = SaifConfig(),
     k_max = config.k_max or default_capacity(h, p)
     delta0 = config.delta0 if config.delta0 is not None else \
         min(max(lam / lam_max, 1e-3), 1.0)
+    backend = resolve_backend(config.screen_backend)
 
     # Initial active set: top-h' by |X^T f'(0)| (Algorithm 1 line 1),
     # or a warm start from a neighbouring lambda (Sec 5.3 path mode).
@@ -303,11 +334,15 @@ def saif(X, y, lam: float, config: SaifConfig = SaifConfig(),
                         jnp.asarray(config.eps, X.dtype),
                         delta0, init_idx, init_beta,
                         jnp.asarray(n_init, jnp.int32),
-                        loss_name=config.loss, h=h, h_tilde=h_tilde,
+                        jnp.asarray(h_tilde, jnp.int32),
+                        jnp.asarray(h, jnp.int32),
+                        loss_name=config.loss, h=h,
                         k_max=k_max, inner_epochs=config.inner_epochs,
                         polish_factor=config.polish_factor,
                         max_outer=config.max_outer,
-                        use_seq_ball=config.use_seq_ball, scan_fn=scan_fn)
+                        use_seq_ball=config.use_seq_ball,
+                        screen_backend=backend, screen_fn=screen_fn,
+                        scan_fn=scan_fn)
         if not bool(res.overflowed) or k_max >= p:
             return res
         k_max = min(2 * k_max, p)   # elastic capacity growth + recompile

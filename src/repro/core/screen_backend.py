@@ -1,0 +1,143 @@
+"""Pluggable screening backends for the SAIF ADD phase.
+
+The ADD decision of Algorithm 2 needs, per outer iteration, exactly four
+things from the full feature set R_t:
+
+  * ``max_ub``                — the ADD-stop reduction  max_{R_t} ub_i,
+  * the top-h candidates      — (score, feature id) pairs,
+  * their lower bounds        — lb_l = |score_l - ||x_l|| r|,
+  * their violation counts    — |V_l| = #{i in R_t : ub_i >= lb_l}.
+
+A :data:`ScreenFn` produces all four as one :class:`ScreenOut`; the jitted
+solver in :mod:`repro.core.saif` is backend-agnostic and touches nothing
+(p,)-shaped in the ADD phase. Three implementations ship:
+
+  * ``jnp``     — XLA matvec + ``top_k`` + searchsorted/bincount counts.
+  * ``pallas``  — the fused TPU kernel pair from ``repro.kernels.screen``:
+                  one pass emits masked (score, ub, lb) + tile-local top-h +
+                  tile max-ub; a second streaming pass histograms ub against
+                  the merged candidates' lower bounds.
+  * sharded     — ``repro.distributed.saif_sharded.make_sharded_screen``,
+                  same math under ``shard_map``.
+
+All three produce *identical integers* for the violation counts and the same
+candidate sets (ties break to the lowest feature id everywhere), which is
+what makes the backends interchangeable mid-path.
+
+Violation counts without the O(p log p) sort
+--------------------------------------------
+The legacy implementation sorted the (p,) ub vector and binary-searched each
+candidate bound in it. Equivalent, cheaper (O(p log h + h log h)):
+
+  1. sort only the h candidate bounds: ``lb_sorted``;
+  2. for every feature, c_i = #{l : lb_sorted[l] <= ub_i}   (searchsorted);
+  3. histogram the c_i values into bins 0..h;
+  4. suffix sums:  #{i : ub_i >= lb_sorted[j]} = sum_{m > j} hist[m].
+
+Step 2+3 stream over ub once; the (p,)-sized sort is gone. For a candidate
+with bound lb_l sitting at position j = searchsorted(lb_sorted, lb_l, 'left')
+the suffix sum at j+1 is exactly #{i : ub_i >= lb_l} — including ties, since
+both sides count with the same <= comparison.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class ScreenOut(NamedTuple):
+    max_ub: jax.Array      # scalar: max over R_t of ub (−inf if R_t empty)
+    cand_score: jax.Array  # (h,) top-h scores over R_t (−inf padded)
+    cand_idx: jax.Array    # (h,) int32 global feature ids
+    cand_lb: jax.Array     # (h,) |score − ||x|| r| per candidate
+    cand_ge: jax.Array     # (h,) int32 #{i in R_t : ub_i >= cand_lb}
+
+
+# signature: (theta (n,), r scalar, in_active (p,) bool) -> ScreenOut
+ScreenFn = Callable[[jax.Array, jax.Array, jax.Array], ScreenOut]
+
+
+def ge_counts_from_hist(hist: jax.Array, lb_sorted: jax.Array,
+                        lb_cand: jax.Array) -> jax.Array:
+    """Per-candidate #{i : ub_i >= lb} from the c-histogram (exact)."""
+    suffix = jnp.cumsum(hist[::-1])[::-1]            # suffix[m] = Σ_{t>=m}
+    pos = jnp.searchsorted(lb_sorted, lb_cand, side="left")
+    return suffix[pos + 1].astype(jnp.int32)
+
+
+def violation_ge_counts(ub: jax.Array, lb_cand: jax.Array) -> jax.Array:
+    """Pure-jnp counts #{i : ub_i >= lb_l} per candidate, sort-free in p."""
+    h = lb_cand.shape[0]
+    lb_sorted = jnp.sort(lb_cand)
+    c = jnp.searchsorted(lb_sorted, ub, side="right")
+    hist = jnp.zeros((h + 1,), jnp.int32).at[c].add(1)
+    return ge_counts_from_hist(hist, lb_sorted, lb_cand)
+
+
+def _candidate_out(scores_masked, ub, col_norm, r, h) -> ScreenOut:
+    """Shared tail: top-h + bounds + counts from masked scores and ub."""
+    cand_score, cand_idx = jax.lax.top_k(scores_masked, h)
+    cand_idx = cand_idx.astype(jnp.int32)
+    cand_lb = jnp.abs(cand_score - jnp.take(col_norm, cand_idx) * r)
+    cand_ge = violation_ge_counts(ub, cand_lb)
+    return ScreenOut(max_ub=jnp.max(ub), cand_score=cand_score,
+                     cand_idx=cand_idx, cand_lb=cand_lb, cand_ge=cand_ge)
+
+
+def make_screen_jnp(X: jax.Array, col_norm: jax.Array, h: int) -> ScreenFn:
+    """Reference backend: one XLA matvec + cheap reductions."""
+    def screen(theta, r, in_active):
+        score = jnp.abs(X.T @ theta)
+        masked = jnp.where(in_active, -jnp.inf, score)
+        ub = masked + col_norm * r
+        return _candidate_out(masked, ub, col_norm, r, h)
+    return screen
+
+
+def make_screen_from_scan(scan_fn, col_norm: jax.Array, h: int) -> ScreenFn:
+    """Adapt a bare ``theta -> |X^T theta|`` scan (e.g. the shard_map one)
+    to the full backend interface; everything past the scan is O(p) jnp."""
+    def screen(theta, r, in_active):
+        score = scan_fn(theta)
+        masked = jnp.where(in_active, -jnp.inf, score)
+        ub = masked + col_norm * r
+        return _candidate_out(masked, ub, col_norm, r, h)
+    return screen
+
+
+def make_screen_pallas(X: jax.Array, col_norm: jax.Array, h: int,
+                       bn: Optional[int] = None, bp: Optional[int] = None,
+                       interpret: Optional[bool] = None) -> ScreenFn:
+    """Fused-kernel backend; see repro/kernels/screen/screen.py."""
+    from repro.kernels.screen.screen import (screen_fused_pallas,
+                                             ub_histogram_pallas)
+
+    def screen(theta, r, in_active):
+        _, ub, _, tops, topi, tmax = screen_fused_pallas(
+            X, theta, col_norm, in_active, r, h=h, bn=bn, bp=bp,
+            interpret=interpret)
+        # merge tile winners: O((p/bp) h) candidates, not O(p)
+        cand_score, pos = jax.lax.top_k(tops.reshape(-1), h)
+        cand_idx = topi.reshape(-1)[pos]
+        cand_lb = jnp.abs(cand_score -
+                          jnp.take(col_norm, cand_idx).astype(cand_score.dtype)
+                          * jnp.asarray(r, cand_score.dtype))
+        lb_sorted = jnp.sort(cand_lb)
+        hist = ub_histogram_pallas(ub, lb_sorted, interpret=interpret)
+        cand_ge = ge_counts_from_hist(hist, lb_sorted, cand_lb)
+        return ScreenOut(max_ub=jnp.max(tmax), cand_score=cand_score,
+                         cand_idx=cand_idx, cand_lb=cand_lb, cand_ge=cand_ge)
+    return screen
+
+
+def resolve_backend(name: str) -> str:
+    """Backend-selection policy (DESIGN.md §3): explicit name wins; ``auto``
+    compiles the fused kernels on TPU and keeps the XLA path elsewhere
+    (the interpreter would be strictly slower than the jnp matvec)."""
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if name not in ("jnp", "pallas"):
+        raise ValueError(f"unknown screen backend {name!r}")
+    return name

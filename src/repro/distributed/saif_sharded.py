@@ -61,9 +61,12 @@ def shard_design(X, y_grad0, mesh) -> ShardedDesign:
 def make_sharded_scan(design: ShardedDesign):
     """Returns scan_fn(theta) -> |X^T theta| (p_pad,), sharded end-to-end.
 
-    Used as the drop-in ``scan_fn`` of ``repro.core.saif.saif``: the output
-    stays device-sharded; downstream top_k/max run as sharded reductions
-    XLA lowers to the gather-of-partials pattern described above.
+    Legacy bare-scan hook: pass as ``saif(..., scan_fn=...)`` and
+    ``repro.core.screen_backend.make_screen_from_scan`` adapts it to the
+    full backend interface in-trace (the production path uses the fused
+    :func:`make_sharded_screen` instead). The output stays device-sharded;
+    downstream top_k/max run as sharded reductions XLA lowers to the
+    gather-of-partials pattern described above.
     """
     mesh = design.mesh
     axes = _feature_axes(mesh)
@@ -84,6 +87,63 @@ def make_sharded_scan(design: ShardedDesign):
             out = jnp.where(idx < design.p, out, -jnp.inf)
         return out
     return scan_fn
+
+
+def make_sharded_screen(design: ShardedDesign, h: int):
+    """Sharded :class:`~repro.core.screen_backend.ScreenFn` — the backend
+    interface of ``repro.core.saif._saif_jit``, same math as the jnp and
+    Pallas backends, sharded iron.
+
+    One shard_map computes, per device: local masked scores, local ub, the
+    local top-h candidates with global ids, and the pmax of ub. The gathered
+    devs*h candidate pairs are merged with one small top_k; the violation
+    counts stream over the still-sharded (p_pad,) ub vector (searchsorted
+    against the h sorted bounds + bincount — no O(p) gather, no O(p log p)
+    sort; XLA lowers the (h+1,)-sized reductions to a tiny psum).
+    """
+    from repro.core.screen_backend import ScreenOut, violation_ge_counts
+
+    mesh = design.mesh
+    axes = _feature_axes(mesh)
+    devs = int(np.prod(list(mesh.shape.values())))
+    p_pad = design.X.shape[1]
+    p_local = p_pad // devs
+    k = min(h, p_local)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(None, axes), P(axes), P(None), P(), P(axes)),
+        out_specs=(P(axes), P(axes), P(axes), P()))
+    def local(X_local, norm_local, theta, r, excl_local):
+        ax_index = sum(jax.lax.axis_index(a) *
+                       int(np.prod([mesh.shape[b]
+                                    for b in axes[axes.index(a) + 1:]]))
+                       for a in axes)
+        offset = ax_index * p_local
+        scores = jnp.abs(X_local.T @ theta)               # (p_local,)
+        # exclusions: current actives + the padding columns beyond true p
+        pad_col = offset + jnp.arange(p_local) >= design.p
+        masked = jnp.where(excl_local | pad_col, -jnp.inf, scores)
+        ub = masked + norm_local * r
+        top_s, top_i = jax.lax.top_k(masked, k)
+        if k < h:
+            top_s = jnp.pad(top_s, (0, h - k), constant_values=-jnp.inf)
+            top_i = jnp.pad(top_i, (0, h - k))
+        gid = top_i + offset
+        max_ub = jax.lax.pmax(jnp.max(ub), axes)
+        return top_s, gid.astype(jnp.int32), ub, max_ub
+
+    def screen(theta, r, in_active):
+        r = jnp.asarray(r, design.X.dtype)
+        ts, gid, ub, max_ub = local(design.X, design.col_norm, theta, r,
+                                    jnp.asarray(in_active, bool))
+        cand_score, pos = jax.lax.top_k(ts, h)   # merge devs*h candidates
+        cand_idx = gid[pos]
+        cand_lb = jnp.abs(cand_score - jnp.take(design.col_norm, cand_idx) * r)
+        cand_ge = violation_ge_counts(ub, cand_lb)
+        return ScreenOut(max_ub=max_ub, cand_score=cand_score,
+                         cand_idx=cand_idx, cand_lb=cand_lb, cand_ge=cand_ge)
+    return screen
 
 
 class ScreenResult(NamedTuple):
@@ -131,18 +191,22 @@ def make_fused_screen(design: ShardedDesign, h: int):
 
 
 def saif_distributed(X, y, lam: float, mesh, config=None):
-    """SAIF with the sharded screening scan. Same result as core.saif."""
+    """SAIF with the sharded screening backend. Same result as core.saif."""
     from repro.core.losses import get_loss
-    from repro.core.saif import SaifConfig, saif
+    from repro.core.saif import SaifConfig, add_batch_size, saif
 
     config = config or SaifConfig()
     loss = get_loss(config.loss)
     y = jnp.asarray(y)
     g0 = loss.grad(jnp.zeros_like(y), y)
     design = shard_design(X, g0, mesh)
-    scan_fn = make_sharded_scan(design)
     # X itself is also consumed (gathers of active columns, duality gap);
     # padded to p_pad, so run SAIF on the padded problem — padding columns
-    # have zero norm and are never recruited; beta padding is sliced off.
-    res = saif(design.X, y, lam, config, scan_fn=scan_fn)
+    # are screened out by the backend; beta padding is sliced off.
+    # h must match what saif() derives for the padded problem (same c0,
+    # same p_pad), so the backend's candidate count lines up with the
+    # solver's static h.
+    h = add_batch_size(config.c, lam, design.c0, design.X.shape[1])
+    screen_fn = make_sharded_screen(design, h)
+    res = saif(design.X, y, lam, config, screen_fn=screen_fn)
     return res._replace(beta=res.beta[:design.p])

@@ -1,8 +1,9 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; the
-Pallas interpreter executes the kernel body in Python for correctness
-validation). On a real TPU backend the same call sites compile to Mosaic.
+``interpret`` defaults to compiled Mosaic on a TPU backend and interpreter
+fallback everywhere else (this container is CPU-only; the Pallas interpreter
+executes the kernel body in Python for correctness validation). Block shapes
+default to the ``autotune_screen_blocks`` choice for the problem shape.
 """
 from __future__ import annotations
 
@@ -10,21 +11,36 @@ import jax
 
 from repro.kernels.cm.cm import cm_epochs_pallas
 from repro.kernels.cm.ref import cm_epochs_ref
-from repro.kernels.screen.ref import screen_scores_ref
-from repro.kernels.screen.screen import screen_scores_pallas
+from repro.kernels.screen.ref import (screen_fused_ref, screen_scores_ref,
+                                      ub_histogram_ref)
+from repro.kernels.screen.screen import (autotune_screen_blocks,
+                                         default_interpret,
+                                         screen_fused_pallas,
+                                         screen_scores_pallas,
+                                         ub_histogram_pallas)
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def screen_scores(X, theta, col_norm, r, *, bn=512, bp=256,
+def screen_scores(X, theta, col_norm, r, *, bn=None, bp=None,
                   interpret: bool | None = None):
     """SAIF screening scan: (score, ub, lb) per feature."""
-    if interpret is None:
-        interpret = not on_tpu()
     return screen_scores_pallas(X, theta, col_norm, r, bn=bn, bp=bp,
                                 interpret=interpret)
+
+
+def screen_fused(X, theta, col_norm, active, r, *, h, bn=None, bp=None,
+                 interpret: bool | None = None):
+    """Fused ADD-phase scan: masked (score, ub, lb) + tile top-h + tile max."""
+    return screen_fused_pallas(X, theta, col_norm, active, r, h=h,
+                               bn=bn, bp=bp, interpret=interpret)
+
+
+def ub_histogram(ub, lb_sorted, *, bp=None, interpret: bool | None = None):
+    """Violation-count histogram of ub against sorted candidate bounds."""
+    return ub_histogram_pallas(ub, lb_sorted, bp=bp, interpret=interpret)
 
 
 def cm_epochs(A, y, beta, col_sq, mask, lam, *, n_epochs=1,
@@ -36,5 +52,7 @@ def cm_epochs(A, y, beta, col_sq, mask, lam, *, n_epochs=1,
                             n_epochs=n_epochs, interpret=interpret)
 
 
-__all__ = ["screen_scores", "cm_epochs", "screen_scores_ref",
-           "cm_epochs_ref", "on_tpu"]
+__all__ = ["screen_scores", "screen_fused", "ub_histogram", "cm_epochs",
+           "screen_scores_ref", "screen_fused_ref", "ub_histogram_ref",
+           "cm_epochs_ref", "on_tpu", "autotune_screen_blocks",
+           "default_interpret"]

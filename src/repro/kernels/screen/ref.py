@@ -1,4 +1,5 @@
-"""Pure-jnp oracle for the screening scan kernel."""
+"""Pure-jnp oracles for the screening kernels."""
+import jax
 import jax.numpy as jnp
 
 
@@ -7,3 +8,25 @@ def screen_scores_ref(X, theta, col_norm, r):
     score = jnp.abs(X.T @ theta)
     nr = col_norm * r
     return score, score + nr, jnp.abs(score - nr)
+
+
+def screen_fused_ref(X, theta, col_norm, active, r, *, h: int):
+    """Oracle for the fused ADD-phase scan.
+
+    Returns (score, ub, lb, top_s, top_i, max_ub) with active features
+    masked to score = ub = -inf exactly as the kernel does.
+    """
+    score = jnp.abs(X.T @ theta)
+    nr = col_norm * r
+    masked = jnp.where(jnp.asarray(active, bool), -jnp.inf, score)
+    ub = masked + nr
+    lb = jnp.abs(masked - nr)
+    top_s, top_i = jax.lax.top_k(masked, h)
+    return masked, ub, lb, top_s, top_i.astype(jnp.int32), jnp.max(ub)
+
+
+def ub_histogram_ref(ub, lb_sorted):
+    """bincount(searchsorted(lb_sorted, ub, 'right'), length=h+1)."""
+    h = lb_sorted.shape[0]
+    c = jnp.searchsorted(lb_sorted, ub, side="right")
+    return jnp.zeros((h + 1,), jnp.int32).at[c].add(1)

@@ -1,20 +1,44 @@
-"""Pallas TPU kernel: the SAIF screening scan (the only O(p) hot spot).
+"""Pallas TPU kernels: the SAIF screening scan (the only O(p) hot spot).
 
-Computes, for every feature column x_i of X (n x p):
+Two kernels:
+
+``screen_scores_pallas`` — the plain scan. For every feature column x_i of
+X (n x p):
     score_i = |x_i^T theta|
     ub_i    = score_i + ||x_i|| * r      (ADD-stop / DEL upper bound)
     lb_i    = | score_i - ||x_i|| * r |  (ADD violation lower bound)
+
+``screen_fused_pallas`` — the compile-first ADD-phase scan. Same quantities,
+plus everything the solver's ADD decision needs so no second full-width pass
+(and in particular no O(p log p) sort) happens outside the kernel:
+    * the active-set exclusion mask is applied in-kernel (excluded features
+      get score = ub = -inf, lb = +inf, i.e. never recruitable),
+    * each p-tile emits its local top-h (score, global id) candidates —
+      the global top-h is a cheap O((p/bp) h) merge of tile winners,
+    * each p-tile emits its local max ub — the ADD-stop reduction.
+
+``ub_histogram_pallas`` — the violation-count reduction. Given the (p,) ub
+vector and the h sorted candidate lower bounds, emits the exact histogram
+hist[m] = #{i : m lower bounds <= ub_i}; suffix sums of this histogram are
+the per-candidate violation counts |V_l| = #{i in R_t : ub_i >= lb_l}. This
+replaces the former full-vector ``jnp.sort`` + ``searchsorted`` (O(p log p))
+with an O(p h / lanes) streaming compare — identical integers, bit for bit.
 
 TPU mapping: grid = (p/BP, n/BN). Each instance streams an (BN, BP) tile of X
 HBM->VMEM, does the MXU-friendly partial matvec theta_tile @ X_tile, and
 accumulates into the (BP,)-shaped output block (output index map is constant
 along the n axis, so the same VMEM block is revisited across the inner grid
 dim — TPU grids execute sequentially, making this a safe accumulation).
-On the last n-step the raw dot is finalized into (score, ub, lb).
+On the last n-step the raw dot is finalized.
 
-Block shapes default to BN=512, BP=256: X tile 512x256 f32 = 512 KB VMEM,
-well under the ~16 MB v5e budget while keeping the lane dim a multiple of 128
-for the MXU/VPU.
+Execution mode: ``interpret=None`` auto-detects — compiled Mosaic on a TPU
+backend, interpreter fallback elsewhere (this container is CPU-only; the
+interpreter executes the kernel body in Python for correctness validation).
+
+Block shapes: ``autotune_screen_blocks`` picks (BN, BP) from (n, p) under a
+VMEM budget — lane dim a multiple of 128 for the MXU/VPU, sublane a multiple
+of 8 (f32), X tile capped so HBM->VMEM double buffering fits comfortably in
+the ~16 MB v5e budget.
 """
 from __future__ import annotations
 
@@ -28,6 +52,40 @@ from jax.experimental import pallas as pl
 DEFAULT_BN = 512
 DEFAULT_BP = 256
 
+# X-tile budget: ~1/4 of a 16 MB VMEM so the pipeline can double-buffer the
+# big operand and still hold the (BP,)-shaped accumulators + candidate state.
+VMEM_TILE_BUDGET_BYTES = 4 * 1024 * 1024
+
+
+def default_interpret() -> bool:
+    """Compiled Mosaic on TPU, interpreter everywhere else (CPU fallback)."""
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def autotune_screen_blocks(n: int, p: int, *, dtype_bytes: int = 4,
+                           vmem_budget_bytes: int = VMEM_TILE_BUDGET_BYTES
+                           ) -> tuple:
+    """Pick (bn, bp) for the screening kernels from the problem shape.
+
+    bp (lane dim) is a multiple of 128, bn (sublane dim) a multiple of 8;
+    both are clipped to the padded problem so tiny problems run one tile,
+    and bn shrinks (keeping the wide lane dim) until a double-buffered X
+    tile fits the VMEM budget.
+    """
+    bp = min(512, _round_up(max(p, 1), 128))
+    bn = min(DEFAULT_BN, _round_up(max(n, 1), 8))
+    while bn > 8 and 2 * bn * bp * dtype_bytes > vmem_budget_bytes:
+        bn = max(8, _round_up(bn // 2, 8))
+    return bn, bp
+
+
+# --------------------------------------------------------------------------
+# plain scan kernel (score, ub, lb)
+# --------------------------------------------------------------------------
 
 def _screen_kernel(theta_ref, x_ref, norm_ref, r_ref,
                    score_ref, ub_ref, lb_ref, *, n_blocks: int):
@@ -55,14 +113,20 @@ def _screen_kernel(theta_ref, x_ref, norm_ref, r_ref,
 @functools.partial(jax.jit,
                    static_argnames=("bn", "bp", "interpret"))
 def screen_scores_pallas(X, theta, col_norm, r, *,
-                         bn: int = DEFAULT_BN, bp: int = DEFAULT_BP,
-                         interpret: bool = True):
+                         bn: int | None = None, bp: int | None = None,
+                         interpret: bool | None = None):
     """Blocked screening scan. X: (n, p) f32; returns (score, ub, lb) (p,).
 
     Padding: n and p are padded up to block multiples with zeros — zero
     columns produce score 0, ub = 0 + 0*r, harmless and sliced off.
     """
     n, p = X.shape
+    if bn is None or bp is None:
+        abn, abp = autotune_screen_blocks(n, p)
+        bn = bn or abn
+        bp = bp or abp
+    if interpret is None:
+        interpret = default_interpret()
     n_pad = -n % bn
     p_pad = -p % bp
     Xp = jnp.pad(X.astype(jnp.float32), ((0, n_pad), (0, p_pad)))
@@ -93,3 +157,210 @@ def screen_scores_pallas(X, theta, col_norm, r, *,
         interpret=interpret,
     )(theta_p, Xp, norm_p, r_arr)
     return score[:p], ub[:p], lb[:p]
+
+
+# --------------------------------------------------------------------------
+# fused ADD-phase kernel (masked score/ub/lb + tile top-h + tile max-ub)
+# --------------------------------------------------------------------------
+
+def _tile_top_h(masked_scores, lanes, h_tile: int):
+    """Iterative max-extraction top-h of a (BP,) tile.
+
+    O(h * BP) VPU work per tile — negligible next to the BN x BP matvec.
+    Ties break to the smallest lane index, matching ``jax.lax.top_k``'s
+    stable order, so the tile-merge reduction downstream reproduces a
+    global top_k exactly on every finite candidate. An explicit
+    availability mask (not value re-masking) keeps the emitted lane ids
+    distinct even once a tile's finite entries are exhausted and only
+    -inf (masked/padding) lanes remain; those -inf ids are never
+    recruited downstream (keep &= isfinite), and in a deeply saturated
+    tile their order may differ from a global top_k's -inf tail — the
+    only regime where the merge is not literally top_k. (Sort-free on
+    purpose: no O(p log p) anywhere.)
+    """
+    neg = jnp.asarray(-jnp.inf, masked_scores.dtype)
+    bp = masked_scores.shape[0]
+
+    def body(t, carry):
+        avail, ts, ti = carry
+        vals = jnp.where(avail, masked_scores, neg)
+        m = jnp.max(vals)
+        i = jnp.min(jnp.where(avail & (vals == m), lanes, bp)).astype(
+            jnp.int32)
+        ts = jax.lax.dynamic_update_index_in_dim(ts, m, t, 0)
+        ti = jax.lax.dynamic_update_index_in_dim(ti, i, t, 0)
+        avail = avail & (lanes != i)
+        return avail, ts, ti
+
+    # h_tile <= bp, so an available lane always exists at every step
+    init = (jnp.ones((bp,), bool),
+            jnp.full((h_tile,), neg, masked_scores.dtype),
+            jnp.zeros((h_tile,), jnp.int32))
+    _, ts, ti = jax.lax.fori_loop(0, h_tile, body, init)
+    return ts, ti
+
+
+def _screen_fused_kernel(theta_ref, x_ref, norm_ref, act_ref, r_ref,
+                         score_ref, ub_ref, lb_ref,
+                         tops_ref, topi_ref, tmax_ref,
+                         *, n_blocks: int, h_tile: int, bp: int):
+    i = pl.program_id(0)                     # p-axis tile (for global ids)
+    j = pl.program_id(1)                     # n-axis step
+
+    @pl.when(j == 0)
+    def _init():
+        score_ref[...] = jnp.zeros_like(score_ref)
+
+    partial = jnp.dot(theta_ref[...], x_ref[...],
+                      preferred_element_type=score_ref.dtype)
+    score_ref[...] += partial
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        raw = score_ref[...]
+        s = jnp.abs(raw)
+        nr = norm_ref[...] * r_ref[0]
+        neg = jnp.asarray(-jnp.inf, s.dtype)
+        # active (or padding) features are not recruitable: score/ub -> -inf
+        ms = jnp.where(act_ref[...] > 0.5, neg, s)
+        ub = ms + nr
+        score_ref[...] = ms
+        ub_ref[...] = ub
+        lb_ref[...] = jnp.abs(ms - nr)
+        tmax_ref[0] = jnp.max(ub)
+        lanes = jax.lax.broadcasted_iota(jnp.int32, (bp,), 0)
+        ts, ti = _tile_top_h(ms, lanes, h_tile)
+        tops_ref[0, :] = ts
+        topi_ref[0, :] = ti + i * bp                  # global feature ids
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("h", "bn", "bp", "interpret"))
+def screen_fused_pallas(X, theta, col_norm, active, r, *, h: int,
+                        bn: int | None = None, bp: int | None = None,
+                        interpret: bool | None = None):
+    """Fused ADD-phase scan.
+
+    Args:
+      X:        (n, p) design (any float dtype; compute stays in X.dtype).
+      theta:    (n,) dual ball center.
+      col_norm: (p,) column norms.
+      active:   (p,) bool/0-1 mask of features to EXCLUDE (current actives).
+      r:        scalar ball radius.
+      h:        static per-tile candidate count.
+
+    Returns (all padding sliced/neutralized):
+      score (p,), ub (p,), lb (p,)           — masked quantities,
+      tile_top_s (p_blocks, min(h, bp))       — tile-local top-h scores,
+      tile_top_i (p_blocks, min(h, bp)) int32 — their global feature ids,
+      tile_max_ub (p_blocks,)                 — tile-local max ub.
+    """
+    n, p = X.shape
+    if bn is None or bp is None:
+        abn, abp = autotune_screen_blocks(n, p,
+                                          dtype_bytes=X.dtype.itemsize)
+        bn = bn or abn
+        bp = bp or abp
+    if interpret is None:
+        interpret = default_interpret()
+    h_tile = max(1, min(h, bp))
+    dt = X.dtype
+    n_pad = -n % bn
+    p_pad = -p % bp
+    Xp = jnp.pad(X, ((0, n_pad), (0, p_pad)))
+    theta_p = jnp.pad(theta.astype(dt), (0, n_pad))
+    norm_p = jnp.pad(col_norm.astype(dt), (0, p_pad))
+    # padding columns are flagged "active" => excluded from recruitment
+    act_p = jnp.pad(jnp.asarray(active).astype(dt), (0, p_pad),
+                    constant_values=1.0)
+    np_, pp = Xp.shape
+    n_blocks, p_blocks = np_ // bn, pp // bp
+    r_arr = jnp.asarray(r, dt).reshape(1)
+
+    out_shape = [
+        jax.ShapeDtypeStruct((pp,), dt),                 # score
+        jax.ShapeDtypeStruct((pp,), dt),                 # ub
+        jax.ShapeDtypeStruct((pp,), dt),                 # lb
+        jax.ShapeDtypeStruct((p_blocks, h_tile), dt),    # tile top scores
+        jax.ShapeDtypeStruct((p_blocks, h_tile), jnp.int32),
+        jax.ShapeDtypeStruct((p_blocks,), dt),           # tile max ub
+    ]
+    grid = (p_blocks, n_blocks)
+    kernel = functools.partial(_screen_fused_kernel, n_blocks=n_blocks,
+                               h_tile=h_tile, bp=bp)
+    vec = pl.BlockSpec((bp,), lambda i, j: (i,))
+    score, ub, lb, tops, topi, tmax = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i, j: (j,)),          # theta
+            pl.BlockSpec((bn, bp), lambda i, j: (j, i)),     # X tile
+            vec,                                             # col_norm
+            vec,                                             # active mask
+            pl.BlockSpec((1,), lambda i, j: (0,)),           # r
+        ],
+        out_specs=[
+            vec, vec, vec,                                   # score, ub, lb
+            pl.BlockSpec((1, h_tile), lambda i, j: (i, 0)),  # tile top s
+            pl.BlockSpec((1, h_tile), lambda i, j: (i, 0)),  # tile top ids
+            pl.BlockSpec((1,), lambda i, j: (i,)),           # tile max ub
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(theta_p, Xp, norm_p, act_p, r_arr)
+    return score[:p], ub[:p], lb[:p], tops, topi, tmax
+
+
+# --------------------------------------------------------------------------
+# violation-count histogram kernel
+# --------------------------------------------------------------------------
+
+def _ub_hist_kernel(ub_ref, lb_ref, hist_ref, *, n_bins: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    ub = ub_ref[...]                                     # (bp,)
+    lb = lb_ref[...]                                     # (h,)
+    # c_i = #{l : lb_sorted[l] <= ub_i}  (exact searchsorted-right count)
+    c = jnp.sum((lb[None, :] <= ub[:, None]).astype(jnp.int32), axis=1,
+                dtype=jnp.int32)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (ub.shape[0], n_bins), 1)
+    hist_ref[...] += jnp.sum((c[:, None] == bins).astype(jnp.int32), axis=0,
+                             dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "interpret"))
+def ub_histogram_pallas(ub, lb_sorted, *, bp: int | None = None,
+                        interpret: bool | None = None):
+    """Histogram of c_i = #{l : lb_sorted[l] <= ub_i} over bins 0..h.
+
+    Exactly ``bincount(searchsorted(lb_sorted, ub, 'right'), length=h+1)``,
+    streamed tile by tile. Suffix sums give the per-candidate counts
+    #{i : ub_i >= lb_sorted[j]} without ever sorting the (p,) vector.
+    """
+    (p,) = ub.shape
+    h = lb_sorted.shape[0]
+    if bp is None:
+        bp = min(2048, _round_up(max(p, 1), 128))
+    if interpret is None:
+        interpret = default_interpret()
+    # pad with -inf => c = 0 => only bin 0 (never used by suffix sums) grows
+    ub_p = jnp.pad(ub, (0, -p % bp), constant_values=-jnp.inf)
+    p_blocks = ub_p.shape[0] // bp
+    n_bins = h + 1
+    kernel = functools.partial(_ub_hist_kernel, n_bins=n_bins)
+    hist = pl.pallas_call(
+        kernel,
+        grid=(p_blocks,),
+        in_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),             # ub tile
+            pl.BlockSpec((h,), lambda i: (0,)),              # lb (replicated)
+        ],
+        out_specs=pl.BlockSpec((n_bins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_bins,), jnp.int32),
+        interpret=interpret,
+    )(ub_p, lb_sorted)
+    return hist

@@ -1,8 +1,7 @@
 """Property tests of the fixed-capacity active-set buffer."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from repro.testing import given, settings, st
 
 from repro.core import active_set as asl
 

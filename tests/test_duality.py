@@ -1,8 +1,7 @@
 """Tests for ball regions and dual projection — the safety-critical math."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from repro.testing import given, settings, st
 
 from repro.core.cm import solve_lasso_cm
 from repro.core.duality import (Ball, duality_gap, feasible_dual, gap_ball,

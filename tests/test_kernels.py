@@ -6,8 +6,7 @@ same entry points compile to Mosaic.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from repro.testing import given, settings, st
 
 from repro.kernels.ops import (cm_epochs, cm_epochs_ref, screen_scores,
                                screen_scores_ref)

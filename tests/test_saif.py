@@ -109,8 +109,7 @@ def test_warm_started_path_consistent(rng):
         assert _support(beta, 1e-8) == _support(cold.beta, 1e-8)
 
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from repro.testing import given, settings, st
 
 
 @given(seed=st.integers(0, 10_000),
