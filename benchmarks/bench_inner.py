@@ -1,0 +1,116 @@
+"""Inner-solver backend benchmark: CM epoch cost vs n at fixed capacity.
+
+The acceptance axis of the Gram/covariance-update engine (DESIGN.md §6):
+an inner epoch costs O(count * n) on the jnp residual-update path but
+O(count * k_max) on the Gram path, so at fixed capacity the Gram epoch time
+must stay flat while the jnp epoch grows linearly in n — >= 3x apart by
+n = 2000 at k_max <= 256 (tracked in BENCH_inner.json).
+
+Each row times ``n_epochs`` compact sweeps through one jitted call (the
+same entry points ``_saif_jit``'s backends use), min-of-k to suppress
+scheduler noise. The Gram rows also report the amortized one-off costs the
+engine pays per outer step (q rebuild is inside the timed call; the column
+refresh is benchmarked separately as ``refresh_s``, its per-ADD bound).
+
+The pallas backend is measured compiled on TPU; off-TPU it executes in
+interpreter mode, which is a correctness oracle rather than a performance
+path (DESIGN.md §3/§6), so it is timed only at the smallest shape and
+flagged ``interpret``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import get_loss
+from repro.core.cm import cm_epochs_compact, gram_epochs
+from repro.kernels.ops import cm_burst, on_tpu
+
+K_MAX = 256          # the acceptance capacity
+COUNT = 192          # live slots swept per epoch
+N_EPOCHS = 20        # sweeps per timed call (amortizes dispatch)
+# n=100 is the CI path shape's sample count — the data point the
+# GRAM_CROSSOVER policy comment and DESIGN.md §6 cite
+N_GRID = (100, 500, 2000, 4000)
+N_GRID_FULL = (100, 500, 2000, 8000, 16000)
+
+
+def _timeit(fn, *args, reps: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _problem(n: int, k_max: int, count: int, seed: int = 0):
+    r = np.random.default_rng(seed)
+    mask = jnp.zeros(k_max, bool).at[:count].set(True)
+    Xa = jnp.where(mask[None, :],
+                   jnp.asarray(r.normal(size=(n, k_max)), jnp.float32), 0.0)
+    y = jnp.asarray(r.normal(size=n), jnp.float32)
+    beta = jnp.where(mask,
+                     jnp.asarray(r.normal(size=k_max) * 0.1, jnp.float32),
+                     0.0)
+    order = jnp.arange(k_max, dtype=jnp.int32)
+    return Xa, y, beta, mask, order
+
+
+def run(full: bool = False):
+    loss = get_loss("least_squares")
+    lam = jnp.float32(0.1)
+    cnt = jnp.asarray(COUNT, jnp.int32)
+    rows = []
+    for n in (N_GRID_FULL if full else N_GRID):
+        Xa, y, beta, mask, order = _problem(n, K_MAX, COUNT)
+        G = Xa.T @ Xa
+        rho = Xa.T @ y
+        col_sq = jnp.sum(Xa * Xa, axis=0)
+
+        jnp_fn = jax.jit(lambda Xa, y, beta: cm_epochs_compact(
+            loss, Xa, y, beta, Xa @ beta, mask, lam, order, cnt, N_EPOCHS))
+        gram_fn = jax.jit(lambda G, rho, beta: gram_epochs(
+            G, rho, beta, mask, lam, order, cnt, N_EPOCHS))
+        # the Gram engine's per-ADD amortized cost: one h-column refresh
+        h = 32
+        cols = Xa[:, :h]
+        refresh_fn = jax.jit(
+            lambda Xa, cols: (Xa.T @ cols, cols.T @ Xa, cols.T @ y))
+
+        t_jnp = _timeit(jnp_fn, Xa, y, beta) / N_EPOCHS
+        t_gram = _timeit(gram_fn, G, rho, beta) / N_EPOCHS
+        t_refresh = _timeit(refresh_fn, Xa, cols)
+        base = {"n": n, "k_max": K_MAX, "count": COUNT,
+                "n_epochs": N_EPOCHS}
+        rows.append(dict(base, backend="jnp",
+                         epoch_s=round(t_jnp, 6), speedup_vs_jnp=1.0))
+        rows.append(dict(base, backend="gram",
+                         epoch_s=round(t_gram, 6),
+                         speedup_vs_jnp=round(t_jnp / t_gram, 3),
+                         refresh_s=round(t_refresh, 6), refresh_h=h))
+        print(f"[inner] n={n:6d} k_max={K_MAX} count={COUNT}: "
+              f"jnp {t_jnp*1e3:8.3f} ms/epoch  gram {t_gram*1e3:7.3f} "
+              f"ms/epoch  ({t_jnp/t_gram:6.2f}x)  refresh {t_refresh*1e3:.3f} ms")
+
+        if on_tpu() or n == min(N_GRID_FULL if full else N_GRID):
+            burst_fn = jax.jit(lambda Xa, y, beta: cm_burst(
+                Xa, y, beta, col_sq, mask, order, lam, N_EPOCHS, cnt))
+            t_pal = _timeit(burst_fn, Xa, y, beta, reps=2) / N_EPOCHS
+            rows.append(dict(base, backend="pallas",
+                             epoch_s=round(t_pal, 6),
+                             speedup_vs_jnp=round(t_jnp / t_pal, 3),
+                             interpret=not on_tpu()))
+            mode = "compiled" if on_tpu() else "interpret"
+            print(f"[inner] n={n:6d} pallas[{mode}] {t_pal*1e3:.3f} ms/epoch"
+                  f"  (incl. fused dual/gap tail)")
+    return rows
+
+
+if __name__ == "__main__":
+    run(full=True)

@@ -9,7 +9,7 @@ Public API:
   saif_fused / fused_baseline_cm         — tree fused LASSO (Sec 4)
   solve_lasso_cm                         — unscreened oracle solver
 """
-from repro.core.cm import solve_lasso_cm, soft_threshold
+from repro.core.cm import gram_epochs, solve_lasso_cm, soft_threshold
 from repro.core.dynamic import DynConfig, dynamic_screening
 from repro.core.group import (GroupSaifConfig, group_lambda_max, group_saif,
                               solve_group_lasso_bcd)
@@ -19,6 +19,10 @@ from repro.core.homotopy import HomotopyConfig, homotopy_path, support_metrics
 from repro.core.losses import get_loss, least_squares, logistic
 from repro.core.path import (PathState, SaifPathResult, lambda_grid,
                              prepare_path, saif_path, saif_path_naive)
+from repro.core.inner_backend import (InnerBackend, InnerCarry, InnerOut,
+                                      make_inner_gram, make_inner_jnp,
+                                      make_inner_pallas,
+                                      resolve_inner_backend)
 from repro.core.saif import (SaifConfig, SaifResult, saif,
                              saif_jit_compile_count)
 from repro.core.screen_backend import (ScreenFn, ScreenOut, make_screen_jnp,
@@ -30,6 +34,9 @@ __all__ = [
     "SaifPathResult", "PathState", "prepare_path", "lambda_grid",
     "saif_jit_compile_count", "ScreenFn", "ScreenOut", "make_screen_jnp",
     "make_screen_pallas", "resolve_backend",
+    "InnerBackend", "InnerCarry", "InnerOut", "make_inner_jnp",
+    "make_inner_gram", "make_inner_pallas", "resolve_inner_backend",
+    "gram_epochs",
     "dynamic_screening", "DynConfig", "sequential_path", "SeqConfig",
     "homotopy_path", "HomotopyConfig", "support_metrics",
     "group_saif", "GroupSaifConfig", "group_lambda_max",

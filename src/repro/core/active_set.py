@@ -5,6 +5,14 @@ is therefore a capacity-``k_max`` buffer of feature indices plus a validity
 mask. ADD/DEL are masked scatters — the whole SAIF outer loop compiles to a
 single XLA program with no retraces.
 
+The buffer also maintains, incrementally, the *compact sweep order* the inner
+solver consumes: ``order`` is a permutation of the slot ids with the ``count``
+live slots listed first. The old solver re-derived this with a per-outer-step
+``jnp.argsort(~mask)``; ADD/DEL now keep it up to date with an O(k_max)
+stable partition (cumsum + scatter, no sort). Live slots keep their relative
+order across mutations, so the CM sweep order is deterministic and
+insertion-stable.
+
 Overflow policy (documented in DESIGN.md §2): if an ADD wants more slots than
 are free, we add as many as fit and set ``overflowed``; the non-jitted driver
 in ``saif.py`` doubles capacity and re-enters (warm-started) — an explicit,
@@ -24,21 +32,45 @@ class ActiveSet(NamedTuple):
     beta: jax.Array       # f32   (k_max,) coefficients (0 on padding)
     in_active: jax.Array  # bool  (p,)     global membership mask
     overflowed: jax.Array  # bool scalar — an ADD ran out of slots
+    order: jax.Array      # int32 (k_max,) slot permutation, live slots first
+    count: jax.Array      # int32 scalar — number of live slots (= sum(mask))
+
+
+def compact_order(order: jax.Array, mask: jax.Array) -> jax.Array:
+    """Stable partition of ``order`` by slot liveness — live slots first.
+
+    O(k_max) cumsum + scatter (no argsort): rank live and dead slots
+    separately along the current sequence and scatter each slot to its new
+    position. Relative order within both groups is preserved, so repeated
+    calls are idempotent and mutations never reshuffle surviving slots.
+    """
+    live = jnp.take(mask, order)
+    live_i = live.astype(jnp.int32)
+    dead_i = 1 - live_i
+    n_live = jnp.sum(live_i)
+    rank_live = jnp.cumsum(live_i) - live_i
+    rank_dead = jnp.cumsum(dead_i) - dead_i
+    pos = jnp.where(live, rank_live, n_live + rank_dead)
+    return jnp.zeros_like(order).at[pos].set(order)
 
 
 def init_active_set(p: int, k_max: int, init_idx: jax.Array,
                     dtype=jnp.float32,
                     init_beta: jax.Array | None = None,
-                    count: jax.Array | None = None) -> ActiveSet:
+                    live_mask: jax.Array | None = None) -> ActiveSet:
     """Seed the buffer with ``init_idx``.
 
     Two modes:
-      * static  (count=None): init_idx has shape (m,), m <= k_max.
-      * padded  (count given): init_idx/init_beta have shape (k_max,), the
-        first ``count`` entries are live. Keeps the shape jit-static across
-        warm-started lambda paths (no per-lambda recompiles, §Perf it. 1).
+      * static (live_mask=None): init_idx has shape (m,), m <= k_max.
+      * slots  (live_mask given): init_idx/init_beta have shape (k_max,)
+        and ``live_mask`` flags the live slots *in place*. The shape stays
+        jit-static across warm-started lambda paths (no per-lambda
+        recompiles, §Perf it. 1) and slot assignment is preserved exactly,
+        which is what lets a warm-started path hand the Gram buffers of
+        the previous lambda to the next solve without re-indexing
+        (DESIGN.md §6).
     """
-    if count is None:
+    if live_mask is None:
         m = init_idx.shape[0]
         idx = jnp.zeros((k_max,), jnp.int32).at[:m].set(
             init_idx.astype(jnp.int32))
@@ -47,16 +79,20 @@ def init_active_set(p: int, k_max: int, init_idx: jax.Array,
         if init_beta is not None:
             beta = beta.at[:m].set(init_beta.astype(dtype))
         in_active = jnp.zeros((p,), bool).at[init_idx].set(True)
+        order = jnp.arange(k_max, dtype=jnp.int32)
+        n_live = jnp.asarray(m, jnp.int32)
     else:
-        slots = jnp.arange(k_max)
-        mask = slots < count
+        mask = jnp.asarray(live_mask, bool)
         idx = jnp.where(mask, init_idx.astype(jnp.int32), 0)
         beta = (jnp.where(mask, init_beta.astype(dtype), 0)
                 if init_beta is not None else jnp.zeros((k_max,), dtype))
         in_active = jnp.zeros((p,), bool).at[
             jnp.where(mask, idx, p)].set(True, mode="drop")
+        order = compact_order(jnp.arange(k_max, dtype=jnp.int32), mask)
+        n_live = jnp.sum(mask).astype(jnp.int32)
     return ActiveSet(idx, mask, beta, in_active,
-                     overflowed=jnp.asarray(False))
+                     overflowed=jnp.asarray(False),
+                     order=order, count=n_live)
 
 
 def gather_columns(X: jax.Array, aset: ActiveSet) -> jax.Array:
@@ -76,7 +112,10 @@ def delete_features(aset: ActiveSet, drop_slot_mask: jax.Array) -> ActiveSet:
     write_idx = jnp.where(drop, aset.idx, p)
     new_in_active = aset.in_active.at[write_idx].set(False, mode="drop")
     return aset._replace(mask=new_mask, beta=new_beta,
-                         in_active=new_in_active)
+                         in_active=new_in_active,
+                         order=compact_order(aset.order, new_mask),
+                         count=aset.count -
+                         jnp.sum(drop).astype(jnp.int32))
 
 
 def add_features(aset: ActiveSet, cand_idx: jax.Array,
@@ -113,8 +152,11 @@ def add_features(aset: ActiveSet, cand_idx: jax.Array,
     p = aset.in_active.shape[0]
     new_in_active = aset.in_active.at[jnp.where(placed, cand_idx, p)].set(
         True, mode="drop")
+    n_placed = jnp.sum(placed).astype(jnp.int32)
     return ActiveSet(new_idx, new_mask, new_beta, new_in_active,
-                     overflowed=aset.overflowed | (n_want > n_free))
+                     overflowed=aset.overflowed | (n_want > n_free),
+                     order=compact_order(aset.order, new_mask),
+                     count=aset.count + n_placed)
 
 
 def scatter_beta(aset: ActiveSet, p: int) -> jax.Array:

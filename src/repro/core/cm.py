@@ -12,6 +12,11 @@ coordinate step with per-coordinate Lipschitz L_j = alpha ||x_j||^2:
 which for LS coincides with the exact step. The model vector z = Xa beta is
 maintained incrementally (rank-1 updates), exactly as the paper's C shooting
 implementation does.
+
+:func:`gram_epochs` is the covariance-update variant of the same sweep
+(least squares only): it maintains q = G beta on the active-block Gram
+matrix instead of z, making every coordinate step O(k_max) instead of O(n)
+— the engine behind the ``gram`` inner backend (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -90,6 +95,51 @@ def cm_epochs_compact(loss: Loss, Xa: jax.Array, y: jax.Array,
         return jax.lax.fori_loop(0, count, step, carry)
 
     return jax.lax.fori_loop(0, n_epochs, epoch, (beta, z))
+
+
+def gram_epochs(G: jax.Array, rho: jax.Array, beta: jax.Array,
+                mask: jax.Array, lam: jax.Array, order: jax.Array,
+                count: jax.Array, n_epochs: jax.Array,
+                smoothness: float = 1.0) -> jax.Array:
+    """Covariance-update CM sweeps: every coordinate step is O(k_max), not O(n).
+
+    Least-squares only (the gradient must be linear in z for the Gram trick):
+        x_j^T f'(z) = x_j^T (Xa beta - y) = (G beta)_j - rho_j
+    so maintaining ``qr = G beta - rho`` turns the O(n) correlation dot of
+    :func:`_coordinate_step` into a scalar read, and the O(n) rank-1 model
+    update into an O(k_max) Gram-column axpy — glmnet's "covariance updates",
+    on the fixed-capacity active block. ``G`` must satisfy
+    G[s, t] = x_s^T x_t for every pair of *live* slots (stale entries on dead
+    rows/columns are never read: the sweep is compact and dead betas are 0).
+
+    Args:
+      G:     (k_max, k_max) active-block Gram matrix (see invariant above).
+      rho:   (k_max,) x_j^T y per slot.
+      beta:  (k_max,) coefficients (0 on dead slots).
+      order: (k_max,) slot permutation, the ``count`` live slots first.
+      n_epochs: traced sweep count.
+    Returns the updated beta. (The model vector z = Xa beta is intentionally
+    NOT maintained here — the caller reconstitutes it once per burst.)
+    """
+    diag = jnp.diagonal(G)
+    inv_l = 1.0 / jnp.maximum(smoothness * diag, 1e-30)
+    thr = lam * inv_l
+    qr = G @ beta - rho                     # q - rho; garbage on dead slots
+
+    def step(jj, carry):
+        beta, qr = carry
+        j = order[jj]
+        bj = beta[j]
+        b_new = soft_threshold(bj - qr[j] * inv_l[j], thr[j])
+        b_new = jnp.where(mask[j], b_new, 0.0)
+        qr = qr + (b_new - bj) * G[:, j]
+        return beta.at[j].set(b_new), qr
+
+    def epoch(_, carry):
+        return jax.lax.fori_loop(0, count, step, carry)
+
+    beta, _ = jax.lax.fori_loop(0, n_epochs, epoch, (beta, qr))
+    return beta
 
 
 def cm_epochs(loss: Loss, Xa: jax.Array, y: jax.Array, beta: jax.Array,

@@ -1,0 +1,275 @@
+"""Pluggable inner-solver backends for the SAIF CM burst (DESIGN.md §6).
+
+A SAIF outer step needs exactly four things from the inner solver, computed
+on the fixed-capacity active block:
+
+  * ``beta``  — the coefficients after the K-sweep CM burst,
+  * ``z``     — the model vector Xa beta,
+  * ``theta`` — the feasible dual point (Lemma 2 scaling),
+  * ``gap``   — the sub-problem duality gap (drives the ball radius, the
+                DEL rule and the stop test).
+
+An :class:`InnerBackend` produces all four as one :class:`InnerOut`; the
+jitted solver in :mod:`repro.core.saif` is backend-agnostic, mirroring the
+PR-1 :mod:`repro.core.screen_backend` design. Three implementations ship:
+
+  * ``jnp``    — the reference path: residual-update coordinate steps
+                 (``core/cm.py::cm_epochs_compact``), each step an O(n) dot
+                 plus an O(n) rank-1 model update.
+  * ``gram``   — the covariance-update engine (least squares only): the
+                 active-block Gram matrix ``G = Xa^T Xa`` and ``rho = Xa^T y``
+                 live in an :class:`InnerCarry` threaded through the outer
+                 while_loop, so each coordinate step is an O(k_max) Gram
+                 axpy (``core/cm.py::gram_epochs``) — *no O(n) work per
+                 coordinate step*. ADD/DEL trigger an incremental column
+                 refresh (at most ``h`` new columns per outer step, O(n k h)
+                 amortized; never a full O(n k^2) rebuild inside the loop).
+  * ``pallas`` — the VMEM-resident fused kernel
+                 (``kernels/cm/cm.py::cm_burst_pallas``): prox-Newton steps
+                 for any alpha-smooth loss with the dual-point/duality-gap
+                 reduction fused into the same kernel call.
+
+Gram refresh invariants (the correctness contract of the ``gram`` carry):
+
+  1. ``gidx[s]`` names the feature whose data currently backs row/column
+     ``s`` of ``G`` and entry ``s`` of ``rho`` (-1 = nothing valid).
+  2. For every pair of slots (s, t) with ``gidx == idx`` and ``mask`` live,
+     ``G[s, t] = x_s^T x_t`` holds exactly. Dead rows/columns may be stale —
+     the compact sweep never reads them and dead betas are 0.
+  3. ``refresh`` (called at the top of every outer step) first invalidates
+     ``gidx`` on dead slots, then recomputes rows+columns of every live slot
+     whose ``gidx`` disagrees with ``idx``. Invalidation-on-death is what
+     makes (2) inductive: a slot revived after >= 1 outer step always
+     refreshes, so entries that went stale while it was dead (ADDs refresh
+     against the mask-zeroed block) are never trusted.
+  4. At most ``h`` slots can become live per outer step (the candidate
+     buffer is (h,)-shaped), so the in-loop refresh is bounded by ``h``
+     columns; unbounded reconciliation (cold starts, warm handoffs whose
+     carry disagrees) happens once, outside the while_loop, in ``init``.
+
+Backend-selection policy lives in :func:`resolve_inner_backend`; the
+n-vs-k_max crossover and the VMEM gate are documented in DESIGN.md §6.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import active_set as aset_lib
+from repro.core.active_set import ActiveSet
+from repro.core.cm import cm_epochs_compact, gram_epochs
+from repro.core.duality import duality_gap, feasible_dual
+from repro.core.losses import Loss
+
+
+class InnerCarry(NamedTuple):
+    """Inner-solver state threaded through the outer while_loop (and, for
+    warm-started lambda paths, across solves). Placeholder-shaped ((1, 1) /
+    (1,)) for backends that keep no state."""
+    G: jax.Array      # (k_max, k_max) active-block Gram matrix
+    rho: jax.Array    # (k_max,) x_j^T y per slot
+    gidx: jax.Array   # (k_max,) int32 feature id backing each slot (-1=none)
+
+
+class InnerOut(NamedTuple):
+    beta: jax.Array   # (k_max,) post-burst coefficients
+    z: jax.Array      # (n,) model vector Xa beta
+    theta: jax.Array  # (n,) feasible dual point
+    gap: jax.Array    # scalar sub-problem duality gap
+
+
+class InnerBackend(NamedTuple):
+    """The inner-solver interface ``_saif_jit`` consumes.
+
+    ``init(aset, carry, Xa)``    — outside the while_loop: reconcile an
+                                   inbound (possibly cold / stale) carry
+                                   with the initial active set.
+    ``refresh(carry, aset, Xa)`` — inside the loop, bounded work: absorb
+                                   the previous step's ADD/DEL.
+    ``run(carry, aset, Xa, lam, n_ep)`` — the CM burst + dual/gap.
+    """
+    name: str
+    init: Callable[[ActiveSet, InnerCarry, jax.Array], InnerCarry]
+    refresh: Callable[[InnerCarry, ActiveSet, jax.Array], InnerCarry]
+    run: Callable[[InnerCarry, ActiveSet, jax.Array, jax.Array, jax.Array],
+                  InnerOut]
+
+
+def empty_inner_carry(dtype=jnp.float32) -> InnerCarry:
+    """Placeholder carry for stateless backends (jnp / pallas)."""
+    return InnerCarry(G=jnp.zeros((1, 1), dtype), rho=jnp.zeros((1,), dtype),
+                      gidx=jnp.full((1,), -1, jnp.int32))
+
+
+def cold_inner_carry(k_max: int, dtype=jnp.float32,
+                     backend: str = "gram") -> InnerCarry:
+    """All-invalid carry: forces a full (out-of-loop) rebuild in ``init``."""
+    if backend != "gram":
+        return empty_inner_carry(dtype)
+    return InnerCarry(G=jnp.zeros((k_max, k_max), dtype),
+                      rho=jnp.zeros((k_max,), dtype),
+                      gidx=jnp.full((k_max,), -1, jnp.int32))
+
+
+def _dual_and_gap(loss: Loss, Xa, y, beta, z, mask, lam):
+    """Shared post-burst tail of the jnp and gram backends — byte-for-byte
+    the dual/gap computation the pre-backend solver did inline."""
+    hat = -loss.grad(z, y) / lam
+    theta = feasible_dual(loss, Xa, y, hat, lam, mask)
+    gap = duality_gap(loss, Xa, y, beta, theta, lam, mask)
+    return theta, gap
+
+
+def make_inner_jnp(loss: Loss, X: jax.Array, y: jax.Array) -> InnerBackend:
+    """Reference backend: residual-update epochs, O(n) per coordinate step."""
+
+    def run(carry, aset, Xa, lam, n_ep):
+        beta, z = cm_epochs_compact(loss, Xa, y, aset.beta, Xa @ aset.beta,
+                                    aset.mask, lam, aset.order, aset.count,
+                                    n_ep)
+        theta, gap = _dual_and_gap(loss, Xa, y, beta, z, aset.mask, lam)
+        return InnerOut(beta=beta, z=z, theta=theta, gap=gap)
+
+    return InnerBackend(name="jnp",
+                        init=lambda aset, carry, Xa: carry,
+                        refresh=lambda carry, aset, Xa: carry,
+                        run=run)
+
+
+def make_inner_gram(loss: Loss, X: jax.Array, y: jax.Array,
+                    h: int) -> InnerBackend:
+    """Covariance-update backend: O(k_max) coordinate steps (LS only)."""
+    if loss.name != "least_squares":
+        raise ValueError("the gram inner backend needs a linear gradient "
+                         f"(least squares); got loss {loss.name!r}")
+
+    def _rebuild(aset, Xa):
+        G = Xa.T @ Xa
+        rho = Xa.T @ y
+        gidx = jnp.where(aset.mask, aset.idx, -1)
+        return InnerCarry(G=G, rho=rho, gidx=gidx.astype(jnp.int32))
+
+    def init(aset, carry, Xa):
+        # Reconcile a warm-handoff carry: keep it when every live slot's
+        # backing feature matches (the warm-started path case — slot
+        # assignment is preserved across lambdas); otherwise rebuild in
+        # full. This is the ONLY place an O(n k^2) Gram build can happen,
+        # and it is outside the while_loop.
+        gidx = jnp.where(aset.mask, carry.gidx, -1).astype(jnp.int32)
+        dirty = aset.mask & (gidx != aset.idx)
+        return jax.lax.cond(jnp.any(dirty),
+                            lambda c: _rebuild(aset, Xa),
+                            lambda c: c._replace(gidx=gidx), carry)
+
+    def refresh(carry, aset, Xa):
+        # Invalidate dead slots, then recompute the (<= h) dirty live
+        # columns — invariants 1-4 in the module docstring.
+        kc = carry.gidx.shape[0]
+        gidx = jnp.where(aset.mask, carry.gidx, -1).astype(jnp.int32)
+        dirty = aset.mask & (gidx != aset.idx)
+        carry = carry._replace(gidx=gidx)
+
+        def do_refresh(c):
+            slots = jnp.nonzero(dirty, size=h, fill_value=kc)[0]
+            slots = slots.astype(jnp.int32)
+            valid = slots < kc
+            sl = jnp.minimum(slots, kc - 1)
+            ids = jnp.where(valid, jnp.take(aset.idx, sl), 0)
+            cols = jnp.take(X, ids, axis=1) * valid.astype(X.dtype)[None, :]
+            # two dots rather than one dot + transpose: each orientation is
+            # consumed in its natural layout (XLA:CPU's dot thunk rejects
+            # transposed-output fusions), and the column refresh stays
+            # O(n k h) either way
+            Gblk = Xa.T @ cols                        # (k_max, h)
+            GblkT = cols.T @ Xa                       # (h, k_max)
+            G = c.G.at[:, slots].set(Gblk, mode="drop")
+            G = G.at[slots, :].set(GblkT, mode="drop")
+            rho = c.rho.at[slots].set(cols.T @ y, mode="drop")
+            new_gidx = c.gidx.at[slots].set(
+                jnp.where(valid, ids, -1), mode="drop")
+            return InnerCarry(G=G, rho=rho, gidx=new_gidx)
+
+        return jax.lax.cond(jnp.any(dirty), do_refresh, lambda c: c, carry)
+
+    def run(carry, aset, Xa, lam, n_ep):
+        beta = gram_epochs(carry.G, carry.rho, aset.beta, aset.mask, lam,
+                           aset.order, aset.count, n_ep,
+                           smoothness=loss.smoothness)
+        z = Xa @ beta                # the only O(n k) term: once per burst
+        theta, gap = _dual_and_gap(loss, Xa, y, beta, z, aset.mask, lam)
+        return InnerOut(beta=beta, z=z, theta=theta, gap=gap)
+
+    return InnerBackend(name="gram", init=init, refresh=refresh, run=run)
+
+
+def make_inner_pallas(loss: Loss, X: jax.Array, y: jax.Array,
+                      col_norm: jax.Array,
+                      interpret: bool | None = None) -> InnerBackend:
+    """VMEM-resident fused-kernel backend (kernels/cm/cm.py)."""
+    from repro.kernels.cm.cm import cm_burst_pallas
+
+    def run(carry, aset, Xa, lam, n_ep):
+        # O(k_max) gather from the solver's precomputed column norms — not
+        # an O(n k_max) reduction over the gathered block
+        norms = jnp.where(aset.mask, jnp.take(col_norm, aset.idx), 0.0)
+        col_sq = norms * norms
+        beta, z, theta, gap = cm_burst_pallas(
+            Xa, y, aset.beta, col_sq, aset.mask, aset.order, lam, n_ep,
+            aset.count, loss_name=loss.name, interpret=interpret)
+        return InnerOut(beta=beta, z=z, theta=theta, gap=gap)
+
+    return InnerBackend(name="pallas",
+                        init=lambda aset, carry, Xa: carry,
+                        refresh=lambda carry, aset, Xa: carry,
+                        run=run)
+
+
+def make_inner(name: str, loss: Loss, X: jax.Array, y: jax.Array,
+               col_norm: jax.Array, h: int) -> InnerBackend:
+    """Factory used inside ``_saif_jit`` (name is a jit-static string)."""
+    if name == "gram":
+        return make_inner_gram(loss, X, y, h)
+    if name == "pallas":
+        return make_inner_pallas(loss, X, y, col_norm)
+    return make_inner_jnp(loss, X, y)
+
+
+# n/k_max crossover of the auto policy: the gram step is an O(k_max) axpy
+# against the jnp step's ~3 O(n) passes (gradient, dot, rank-1 update), so
+# gram wins whenever k_max is not vastly larger than n. Measured on the CI
+# shape (n=100, k_max=256, BENCH_inner.json) gram is still ahead at
+# k_max ~ 2.5n; the factor 4 keeps a safety margin before handing back to
+# the jnp path. Policy table in DESIGN.md §6.
+GRAM_CROSSOVER = 4.0
+
+
+def resolve_inner_backend(name: str, loss_name: str, n: int,
+                          k_max: int) -> str:
+    """Inner-backend selection policy (DESIGN.md §6): explicit name wins;
+    ``auto`` picks the covariance-update engine whenever the loss gradient
+    is linear (least squares) and the active capacity is not >> n, the
+    fused Pallas kernel on TPU when the block fits VMEM, and the jnp
+    reference path elsewhere (off-TPU the kernel would run interpreted —
+    a correctness oracle, strictly slower than XLA)."""
+    from repro.kernels.cm.cm import cm_vmem_ok
+
+    if name == "auto":
+        if loss_name == "least_squares" and GRAM_CROSSOVER * n >= k_max:
+            return "gram"
+        if jax.default_backend() == "tpu" and cm_vmem_ok(n, k_max):
+            return "pallas"
+        return "jnp"
+    if name not in ("jnp", "gram", "pallas"):
+        raise ValueError(f"unknown inner backend {name!r}")
+    if name == "gram" and loss_name != "least_squares":
+        raise ValueError("inner_backend='gram' requires loss='least_squares'"
+                         " (covariance updates need a linear gradient); use"
+                         " 'jnp' or 'pallas'")
+    if name == "pallas" and not cm_vmem_ok(n, k_max):
+        raise ValueError(
+            f"inner_backend='pallas': a {n}x{k_max} active block exceeds "
+            f"the VMEM budget (DESIGN.md §6); shrink k_max, shard the "
+            f"sample dimension, or use 'gram'/'jnp'")
+    return name

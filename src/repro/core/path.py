@@ -20,9 +20,12 @@ The engine here hoists all of that out of the lambda loop:
     case over capacity growth this is O(log p) distinct compilations per
     path (assert via :func:`repro.core.saif.saif_jit_compile_count`);
   * **fixed-capacity warm buffers** — the (k_max,) warm-start index/value
-    buffers are produced *on device* from the previous solution
-    (``jnp.nonzero(..., size=k_max)``), so the inter-lambda handoff never
-    syncs to the host;
+    buffers are produced *on device* from the previous solution and
+    *preserve the slot layout* of the previous solve, so the inter-lambda
+    handoff never syncs to the host AND the inner-solver carry (the Gram
+    buffers of the covariance-update backend, DESIGN.md §6) rides along
+    verbatim — the next solve's init finds zero dirty slots and skips the
+    O(n k^2) Gram rebuild;
   * **segment-batched overflow checks** — solutions are collected per path
     segment and the ``overflowed`` flags are reduced in one host sync per
     segment instead of one per lambda. On overflow the capacity doubles and
@@ -38,6 +41,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.inner_backend import (InnerCarry, cold_inner_carry,
+                                      resolve_inner_backend)
 from repro.core.losses import get_loss
 from repro.core.saif import (SaifConfig, SaifResult, _saif_jit,
                              add_batch_size_static, default_capacity, saif,
@@ -76,15 +81,20 @@ def prepare_path(X, y, config: SaifConfig) -> PathState:
                      c0_median=float(c0_median))
 
 
-@partial(jax.jit, static_argnames=("k_max",))
-def _warm_buffers(beta_full: jax.Array, *, k_max: int):
-    """Device-side warm-start extraction: (idx, beta, count) at capacity."""
-    nz = beta_full != 0
-    idx = jnp.nonzero(nz, size=k_max, fill_value=0)[0].astype(jnp.int32)
-    count = jnp.minimum(jnp.sum(nz), k_max).astype(jnp.int32)
-    live = jnp.arange(k_max) < count
-    vals = jnp.where(live, jnp.take(beta_full, idx), 0.0)
-    return idx, vals, count
+@jax.jit
+def _warm_state(active_idx: jax.Array, active_mask: jax.Array,
+                beta_full: jax.Array, inner: InnerCarry):
+    """Device-side warm-start extraction, *slot-preserving*.
+
+    The next lambda is seeded with the previous solve's final slot layout
+    (masked down to the nonzero support), so the Gram buffers in ``inner``
+    — which are indexed by slot — remain valid verbatim: the next
+    ``_saif_jit``'s init finds zero dirty slots and skips the O(n k^2)
+    rebuild entirely (DESIGN.md §6). No host round-trip anywhere.
+    """
+    vals = jnp.where(active_mask, jnp.take(beta_full, active_idx), 0.0)
+    live = active_mask & (vals != 0)
+    return active_idx, jnp.where(live, vals, 0.0), live, inner
 
 
 def _segments(n_lams: int, segment_len: int) -> List[slice]:
@@ -123,14 +133,18 @@ def saif_path(X, y, lams: Sequence[float],
     # the backend's candidate arrays must be sized for the grid-max h
     screen_fn = make_screen(h) if make_screen is not None else None
 
+    def inner_name(k: int) -> str:
+        return resolve_inner_backend(config.inner_backend, config.loss, n, k)
+
     def run_lam(lam: float, h_lam: int, warm) -> SaifResult:
         delta0 = config.delta0 if config.delta0 is not None else \
             min(max(lam / prep.lam_max, 1e-3), 1.0)
-        warm_idx, warm_beta, warm_count = warm
+        warm_idx, warm_beta, warm_mask, carry = warm
         return _saif_jit(
             X, y, col_norm, c0, jnp.asarray(lam, X.dtype),
             jnp.asarray(config.eps, X.dtype), delta0,
-            warm_idx, warm_beta, warm_count,
+            warm_idx, warm_beta, warm_mask,
+            carry.G, carry.rho, carry.gidx,
             jnp.asarray(max(int(np.ceil(config.zeta * h_lam)), 1),
                         jnp.int32),
             jnp.asarray(h_lam, jnp.int32),
@@ -138,7 +152,8 @@ def saif_path(X, y, lams: Sequence[float],
             inner_epochs=config.inner_epochs,
             polish_factor=config.polish_factor,
             max_outer=config.max_outer, use_seq_ball=config.use_seq_ball,
-            screen_backend=backend, screen_fn=screen_fn)
+            screen_backend=backend, inner_backend=inner_name(k_max),
+            screen_fn=screen_fn)
 
     def cold_start(k: int):
         # seed with the FIRST lambda's own batch size (hs[0]), not the
@@ -147,12 +162,23 @@ def saif_path(X, y, lams: Sequence[float],
         n_init = min(hs[0] if hs else 1, k, p)
         top = jax.lax.top_k(c0, n_init)[1].astype(jnp.int32)
         idx = jnp.zeros((k,), jnp.int32).at[:n_init].set(top)
-        return idx, jnp.zeros((k,), X.dtype), jnp.asarray(n_init, jnp.int32)
+        return (idx, jnp.zeros((k,), X.dtype), jnp.arange(k) < n_init,
+                cold_inner_carry(k, X.dtype, backend=inner_name(k)))
 
     def grow(warm, k: int):
-        idx, vals, count = warm
+        idx, vals, mask, carry = warm
         pad = k - idx.shape[0]
-        return (jnp.pad(idx, (0, pad)), jnp.pad(vals, (0, pad)), count)
+        if inner_name(k) == "gram" and carry.G.shape[0] == idx.shape[0]:
+            # pad the Gram buffers in place: padded slots are dead/-1, the
+            # carried warmth survives the capacity doubling
+            carry = InnerCarry(
+                G=jnp.pad(carry.G, ((0, pad), (0, pad))),
+                rho=jnp.pad(carry.rho, (0, pad)),
+                gidx=jnp.pad(carry.gidx, (0, pad), constant_values=-1))
+        else:   # crossover flipped the backend: rebuild a cold carry
+            carry = cold_inner_carry(k, X.dtype, backend=inner_name(k))
+        return (jnp.pad(idx, (0, pad)), jnp.pad(vals, (0, pad)),
+                jnp.pad(mask, (0, pad)), carry)
 
     results: List[SaifResult] = [None] * len(lams_np)
     warm = cold_start(k_max)
@@ -164,7 +190,8 @@ def saif_path(X, y, lams: Sequence[float],
             for j, lam in zip(range(seg.start, seg.stop), lams_np[seg]):
                 res = run_lam(float(lam), hs[j], cur)
                 seg_results.append(res)
-                cur = _warm_buffers(res.beta, k_max=k_max)
+                cur = _warm_state(res.active_idx, res.active_mask,
+                                  res.beta, res.inner)
             # ONE host sync per segment: the batched overflow check
             flags = jnp.stack([r.overflowed for r in seg_results])
             if not bool(jnp.any(flags)) or k_max >= p:

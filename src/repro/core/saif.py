@@ -10,6 +10,13 @@ array. Backends: the default jnp matvec, the fused Pallas TPU kernel pair
 (``repro.kernels.screen``), and the multi-pod shard_map version
 (``repro.distributed.saif_sharded``) — all computing the same function
 (tested against each other; selection policy in DESIGN.md §3).
+
+The inner solver is pluggable the same way (:mod:`repro.core.inner_backend`,
+DESIGN.md §6): an :class:`~repro.core.inner_backend.InnerBackend` owns the
+whole "CM burst + dual point + duality gap" of an outer step, and the
+covariance-update (``gram``) engine threads its Gram buffers through the
+while_loop carry — each coordinate step is then O(k_max), with no O(n) work
+anywhere in the burst.
 """
 from __future__ import annotations
 
@@ -23,9 +30,9 @@ import jax.numpy as jnp
 
 from repro.core import active_set as aset_lib
 from repro.core.active_set import ActiveSet
-from repro.core.cm import cm_epochs_compact
-from repro.core.duality import (duality_gap, feasible_dual, gap_ball,
-                                intersect_balls, sequential_ball)
+from repro.core.duality import gap_ball, intersect_balls, sequential_ball
+from repro.core.inner_backend import (InnerCarry, cold_inner_carry,
+                                      make_inner, resolve_inner_backend)
 from repro.core.losses import get_loss
 from repro.core.screen_backend import (ScreenFn, ScreenOut,
                                        make_screen_from_scan,
@@ -49,6 +56,7 @@ class SaifConfig:
     use_seq_ball: bool = True    # intersect Thm-2 ball with the gap ball
     loss: str = "least_squares"
     screen_backend: str = "auto"  # "auto" | "jnp" | "pallas" (DESIGN.md §3)
+    inner_backend: str = "auto"   # "auto" | "jnp" | "gram" | "pallas" (§6)
 
 
 class SaifResult(NamedTuple):
@@ -60,6 +68,12 @@ class SaifResult(NamedTuple):
     trace_n_active: jax.Array  # (max_outer,) |A_t| per outer step (-1 pad)
     trace_gap: jax.Array       # (max_outer,)
     trace_dual: jax.Array      # (max_outer,)
+    # final slot state + inner-solver carry: the path engine hands these to
+    # the next lambda so slot assignment (and the Gram buffers that are
+    # indexed by it) survive the warm start (DESIGN.md §6)
+    active_idx: jax.Array    # (k_max,) final slot -> feature map
+    active_mask: jax.Array   # (k_max,) final slot validity
+    inner: InnerCarry        # final inner-backend carry (placeholder if none)
 
 
 class _State(NamedTuple):
@@ -70,6 +84,7 @@ class _State(NamedTuple):
     is_add: jax.Array   # bool
     stop: jax.Array     # bool
     t: jax.Array        # outer counter
+    inner: InnerCarry   # inner-solver carry (Gram buffers for "gram")
     trace_n_active: jax.Array
     trace_gap: jax.Array
     trace_dual: jax.Array
@@ -108,12 +123,14 @@ ScanFn = Callable[[jax.Array], jax.Array]
 @partial(jax.jit, static_argnames=("loss_name", "h", "k_max",
                                    "inner_epochs", "polish_factor",
                                    "max_outer", "use_seq_ball",
-                                   "screen_backend", "screen_fn", "scan_fn"))
+                                   "screen_backend", "inner_backend",
+                                   "screen_fn", "scan_fn"))
 def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
-              init_count, h_tilde, h_cap,
+              init_mask, init_G, init_rho, init_gidx, h_tilde, h_cap,
               *, loss_name: str, h: int, k_max: int,
               inner_epochs: int, polish_factor: int, max_outer: int,
               use_seq_ball: bool, screen_backend: str = "jnp",
+              inner_backend: str = "jnp",
               screen_fn: Optional[ScreenFn] = None,
               scan_fn: Optional[ScanFn] = None) -> SaifResult:
     # h (static) sizes the candidate shapes; h_tilde (the violation
@@ -121,7 +138,10 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
     # traced — they only feed comparisons. Splitting them lets a lambda
     # path share ONE compilation at the grid-max h while every lambda
     # keeps its own tolerance and batch size, so the ADD decisions are
-    # bitwise those of a per-lambda compile.
+    # bitwise those of a per-lambda compile. The same split applies to the
+    # inner carry: (init_G, init_rho, init_gidx) are traced warm-handoff
+    # buffers at fixed (k_max,)-derived shapes (placeholders for stateless
+    # inner backends).
     loss = get_loss(loss_name)
     n, p = X.shape
     lam = jnp.asarray(lam, X.dtype)
@@ -135,17 +155,21 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
         screen = make_screen_pallas(X, col_norm, h)
     else:
         screen = make_screen_jnp(X, col_norm, h)
+    inner = make_inner(inner_backend, loss, X, y, col_norm, h)
 
     g0 = loss.grad(jnp.zeros_like(y), y)   # f'(0)
 
     aset0 = aset_lib.init_active_set(p, k_max, init_idx, X.dtype, init_beta,
-                                     count=init_count)
+                                     live_mask=init_mask)
+    carry_in = InnerCarry(G=init_G, rho=init_rho, gidx=init_gidx)
+    inner0 = inner.init(aset0, carry_in,
+                        aset_lib.gather_columns(X, aset0))
     trace0 = jnp.full((max_outer,), -1.0, X.dtype)
     state0 = _State(aset=aset0, z=jnp.zeros_like(y),
                     gap=jnp.asarray(jnp.inf, X.dtype),
                     delta=jnp.asarray(delta0, X.dtype),
                     is_add=jnp.asarray(True), stop=jnp.asarray(False),
-                    t=jnp.asarray(0),
+                    t=jnp.asarray(0), inner=inner0,
                     trace_n_active=trace0, trace_gap=trace0, trace_dual=trace0)
 
     def cond(s: _State):
@@ -157,19 +181,20 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
 
         # --- K epochs of coordinate minimization on the sub-problem --------
         # (K * polish_factor once recruiting is done — §Perf iteration 2;
-        #  sweeps only live slots — §Perf iteration 3)
-        order = jnp.argsort(~aset.mask)
-        count = jnp.sum(aset.mask)
+        #  sweeps only the aset.count live slots, in the incrementally
+        #  maintained aset.order — §Perf iteration 3 + PR 2 hoist.)
+        # The backend absorbs last step's ADD/DEL (bounded Gram column
+        # refresh for "gram", no-op otherwise), runs the burst, and returns
+        # the dual point + duality gap (Eq. 11) along with (beta, z).
+        inner_carry = inner.refresh(s.inner, aset, Xa)
         n_ep = jnp.where(s.is_add, inner_epochs,
                          inner_epochs * polish_factor)
-        beta, z = cm_epochs_compact(loss, Xa, y, aset.beta, Xa @ aset.beta,
-                                    aset.mask, lam, order, count, n_ep)
+        out = inner.run(inner_carry, aset, Xa, lam, n_ep)
+        beta, z, theta = out.beta, out.z, out.theta
+        gap = jnp.asarray(out.gap, X.dtype)
         aset = aset._replace(beta=beta)
 
-        # --- dual point, gap, ball region (Eq. 11 / Thm 2 / Eq. 12) --------
-        hat = -loss.grad(z, y) / lam
-        theta = feasible_dual(loss, Xa, y, hat, lam, aset.mask)
-        gap = duality_gap(loss, Xa, y, beta, theta, lam, aset.mask)
+        # --- ball region from the backend's dual point (Thm 2 / Eq. 12) ----
         ball = gap_ball(loss, theta, gap, lam)
         if use_seq_ball:
             # lam_max(t) over the *active* features (paper Sec 2.2).
@@ -246,10 +271,10 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
             lambda args: args, (aset, s.delta, s.is_add))
 
         dual_val = loss.dual_objective(y, theta, lam)   # feasible point
-        n_act = jnp.sum(aset.mask).astype(X.dtype)
+        n_act = aset.count.astype(X.dtype)
         return _State(
             aset=aset, z=z, gap=gap, delta=delta, is_add=is_add,
-            stop=stop_now, t=s.t + 1,
+            stop=stop_now, t=s.t + 1, inner=inner_carry,
             trace_n_active=s.trace_n_active.at[s.t].set(n_act),
             trace_gap=s.trace_gap.at[s.t].set(gap),
             trace_dual=s.trace_dual.at[s.t].set(dual_val))
@@ -257,11 +282,14 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
     final = jax.lax.while_loop(cond, body, state0)
     beta_full = aset_lib.scatter_beta(final.aset, p)
     return SaifResult(beta=beta_full, gap=final.gap, n_outer=final.t,
-                      n_active=jnp.sum(final.aset.mask),
+                      n_active=final.aset.count,
                       overflowed=final.aset.overflowed,
                       trace_n_active=final.trace_n_active,
                       trace_gap=final.trace_gap,
-                      trace_dual=final.trace_dual)
+                      trace_dual=final.trace_dual,
+                      active_idx=final.aset.idx,
+                      active_mask=final.aset.mask,
+                      inner=final.inner)
 
 
 def saif_jit_compile_count() -> int:
@@ -330,10 +358,15 @@ def saif(X, y, lam: float, config: SaifConfig = SaifConfig(),
             pad = k_max - init_idx.shape[0]
             init_idx = jnp.pad(init_idx, (0, pad))
             init_beta = jnp.pad(init_beta, (0, pad))
+        # capacity growth can move the auto crossover (DESIGN.md §6)
+        inner = resolve_inner_backend(config.inner_backend, config.loss,
+                                      n, k_max)
+        carry = cold_inner_carry(k_max, X.dtype, backend=inner)
         res = _saif_jit(X, y, col_norm, c0, jnp.asarray(lam, X.dtype),
                         jnp.asarray(config.eps, X.dtype),
                         delta0, init_idx, init_beta,
-                        jnp.asarray(n_init, jnp.int32),
+                        jnp.arange(k_max) < n_init,
+                        carry.G, carry.rho, carry.gidx,
                         jnp.asarray(h_tilde, jnp.int32),
                         jnp.asarray(h, jnp.int32),
                         loss_name=config.loss, h=h,
@@ -341,8 +374,8 @@ def saif(X, y, lam: float, config: SaifConfig = SaifConfig(),
                         polish_factor=config.polish_factor,
                         max_outer=config.max_outer,
                         use_seq_ball=config.use_seq_ball,
-                        screen_backend=backend, screen_fn=screen_fn,
-                        scan_fn=scan_fn)
+                        screen_backend=backend, inner_backend=inner,
+                        screen_fn=screen_fn, scan_fn=scan_fn)
         if not bool(res.overflowed) or k_max >= p:
             return res
         k_max = min(2 * k_max, p)   # elastic capacity growth + recompile

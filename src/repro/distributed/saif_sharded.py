@@ -190,12 +190,28 @@ def make_fused_screen(design: ShardedDesign, h: int):
     return fused
 
 
-def saif_distributed(X, y, lam: float, mesh, config=None):
-    """SAIF with the sharded screening backend. Same result as core.saif."""
+def saif_distributed(X, y, lam: float, mesh, config=None,
+                     inner_backend: str = None):
+    """SAIF with the sharded screening backend. Same result as core.saif.
+
+    The inner solver is NOT sharded (the active block is replicated — see
+    the module docstring), so every inner backend from
+    ``repro.core.inner_backend`` composes with the sharded screen: the
+    ``gram`` engine's (k_max, k_max) buffers replicate like the active
+    block (tiny next to X), and its ADD-time column refresh gathers only
+    the <= h touched columns of the feature-sharded X — an O(n h) fetch,
+    not O(n p). ``inner_backend`` overrides ``config.inner_backend``
+    (resolution happens in the core driver against the *padded* problem
+    shape, so "auto" is deterministic across mesh sizes).
+    """
+    import dataclasses
+
     from repro.core.losses import get_loss
     from repro.core.saif import SaifConfig, add_batch_size, saif
 
     config = config or SaifConfig()
+    if inner_backend is not None:
+        config = dataclasses.replace(config, inner_backend=inner_backend)
     loss = get_loss(config.loss)
     y = jnp.asarray(y)
     g0 = loss.grad(jnp.zeros_like(y), y)

@@ -1,18 +1,47 @@
-"""Pallas TPU kernel: VMEM-resident cyclic coordinate-minimization epochs.
+"""Pallas TPU kernels: VMEM-resident cyclic coordinate-minimization bursts.
 
 The SAIF inner loop runs K cyclic soft-threshold sweeps over the active block
-A (n x k). k is small (<= ~1k) so the whole block, the residual, and the
+A (n x k). k is small (<= ~1k) so the whole block, the model vector, and the
 coefficients fit in VMEM; after the initial HBM->VMEM load, an epoch performs
 ZERO HBM traffic — the TPU-native answer to the paper's tight C inner loop.
 
-Least-squares form (residual r = y - A beta maintained incrementally):
+Two entry points:
+
+``cm_epochs_pallas`` — the original least-squares epoch kernel (residual
+r = y - A beta maintained incrementally), kept as the simple oracle-tested
+form:
     g      = a_j^T r
     b_new  = S(b_j + g / ||a_j||^2,  lam / ||a_j||^2)
     r     += (b_j - b_new) a_j
 
+``cm_burst_pallas`` — the production inner-solver backend
+(``repro.core.inner_backend``, DESIGN.md §6). Generalizations over the epoch
+kernel:
+  * **general alpha-smooth losses** via the prox-Newton-majorized step
+    (exactly ``core/cm.py::_coordinate_step``): the model vector z = A beta
+    is VMEM-resident and updated rank-1; the per-step gradient f'(z) is an
+    elementwise VPU pass;
+  * **compact sweeps**: only the ``count`` live slots listed first in
+    ``order`` are visited, and both ``count`` and the epoch count ``n_epochs``
+    are *traced* scalars (read from VMEM inside the kernel) so one compiled
+    kernel serves every outer step of the solver — ADD-phase and polish
+    bursts alike;
+  * **fused dual point + duality gap**: after the burst the kernel computes
+    the feasible dual point (Lemma 2 scaling, with the LS-specific tau*
+    projection) and the sub-problem duality gap from the VMEM-resident
+    state, so one kernel call covers the whole "CM burst + gap" of a SAIF
+    outer step — no second HBM pass over the active block;
+  * **dtype-generic**: computes in A.dtype (f32 on TPU; f64 under the
+    interpreter, where the x64 test suite needs full-precision gaps), and
+    ``interpret=None`` auto-detects the backend exactly like the screening
+    kernels.
+
 The cyclic j-loop is inherently sequential (that's what "cyclic CM" means and
 what Lemma 1's rate analyzes); the n-dimension vectorizes across the 8x128
-VPU lanes. Grid = (1,): a single kernel instance owns the whole sweep.
+VPU lanes. Grid = (1,): a single kernel instance owns the whole burst.
+``cm_vmem_ok`` is the block "autotuner" for this kernel family: with no free
+tiling axis the only decision is whether the burst fits the VMEM budget at
+all — the inner-backend resolver uses it to gate the pallas backend.
 """
 from __future__ import annotations
 
@@ -21,6 +50,15 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+# VMEM budget for the (n, k) active block: leave ~4 MB of the ~16 MB for the
+# (n,)-shaped vectors (y, z, theta), the (k,)-shaped state and headroom.
+CM_VMEM_BUDGET_BYTES = 12 * 2**20
+
+
+def cm_vmem_ok(n: int, k: int, itemsize: int = 4) -> bool:
+    """Does a (n, k) CM burst fit the VMEM budget? (block-fit autotune)."""
+    return (n * k + 4 * n + 6 * k) * itemsize <= CM_VMEM_BUDGET_BYTES
 
 
 def _cm_kernel(a_ref, y_ref, beta_in_ref, colsq_ref, mask_ref, lam_ref,
@@ -63,7 +101,7 @@ def cm_epochs_pallas(A, y, beta, col_sq, mask, lam, *,
     A: (n, k) f32 — must fit VMEM (checked: n*k*4 <= 12 MB).
     """
     n, k = A.shape
-    assert n * k * 4 <= 12 * 2**20, (
+    assert n * k * 4 <= CM_VMEM_BUDGET_BYTES, (
         f"active block {n}x{k} exceeds the VMEM budget; shrink k_max or "
         f"shard the sample dimension (see DESIGN.md §5)")
     kernel = functools.partial(_cm_kernel, n_epochs=n_epochs, k=k)
@@ -91,3 +129,125 @@ def cm_epochs_pallas(A, y, beta, col_sq, mask, lam, *,
       beta.astype(jnp.float32), col_sq.astype(jnp.float32),
       mask, jnp.asarray(lam, jnp.float32).reshape(1))
     return beta_out, r_out
+
+
+# --------------------------------------------------------------------------
+# fused burst kernel: compact prox-Newton epochs + dual point + duality gap
+# --------------------------------------------------------------------------
+
+def _cm_burst_kernel(a_ref, y_ref, beta_in_ref, colsq_ref, mask_ref,
+                     order_ref, lam_ref, nep_ref, cnt_ref,
+                     beta_ref, z_ref, theta_ref, gap_ref, *, loss):
+    del beta_in_ref                     # aliased onto beta_ref
+    a = a_ref[...]                      # (n, k) — VMEM resident, dead cols 0
+    y = y_ref[...]
+    lam = lam_ref[0]
+    alpha = loss.smoothness             # static per-loss constant
+    dt = a.dtype
+    z_ref[...] = jnp.dot(a, beta_ref[...], preferred_element_type=dt)
+
+    def coord_step(jj, _):
+        j = order_ref[jj]               # compact sweep: live slots only
+        aj = a[:, j]
+        lj = jnp.maximum(alpha * colsq_ref[j], 1e-30)
+        g = jnp.dot(aj, loss.grad(z_ref[...], y),
+                    preferred_element_type=dt)
+        bj = beta_ref[j]
+        u = bj - g / lj
+        t = lam / lj
+        b_new = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t, 0.0)
+        b_new = jnp.where(mask_ref[j], b_new, 0.0)
+        z_ref[...] += (b_new - bj) * aj
+        beta_ref[j] = b_new
+        return 0
+
+    def epoch(_, carry):
+        return jax.lax.fori_loop(0, cnt_ref[0], coord_step, carry)
+
+    jax.lax.fori_loop(0, nep_ref[0], epoch, 0)
+
+    # ---- fused dual-point / duality-gap tail (still VMEM-resident) -------
+    beta = beta_ref[...]
+    z = jnp.dot(a, beta, preferred_element_type=dt)   # fresh, drift-free
+    z_ref[...] = z
+    hat = -loss.grad(z, y) / lam                      # unscaled dual point
+    corr = jnp.dot(hat, a, preferred_element_type=dt)  # (k,); dead cols -> 0
+    max_corr = jnp.max(jnp.abs(corr))
+    if loss.name == "least_squares":
+        # DPP-style optimal scaling (duality.feasible_dual, LS branch)
+        bound = 1.0 / jnp.maximum(max_corr, 1e-30)
+        sq = jnp.sum(hat * hat)
+        tau_star = jnp.dot(y, hat) / (lam * jnp.maximum(sq, 1e-30))
+        tau = jnp.clip(tau_star, -bound, bound)
+        tau = jnp.where(jnp.isfinite(tau), tau,
+                        1.0 / jnp.maximum(max_corr, 1.0))
+        theta = tau * hat
+    else:
+        theta = hat / jnp.maximum(max_corr, 1.0)
+        theta = -loss.dual_clip(-lam * theta, y) / lam
+    theta_ref[...] = theta
+    p_val = jnp.sum(loss.value(z, y)) + lam * jnp.sum(jnp.abs(beta))
+    d_val = -jnp.sum(loss.conj(-lam * theta, y))
+    gap_ref[0] = p_val - d_val
+
+
+@functools.partial(jax.jit, static_argnames=("loss_name", "interpret"))
+def cm_burst_pallas(A, y, beta, col_sq, mask, order, lam, n_epochs, count,
+                    *, loss_name: str = "least_squares",
+                    interpret: bool | None = None):
+    """One fused "CM burst + gap" call on the active block.
+
+    Args:
+      A:        (n, k) active design block, dead columns zeroed. Computation
+                runs in A.dtype (f32 on TPU; f64 under the interpreter).
+      beta:     (k,) inbound coefficients (0 on dead slots).
+      order:    (k,) int32 slot permutation, the ``count`` live slots first.
+      n_epochs: traced sweep count (the solver batches ADD vs polish bursts
+                through this one compiled kernel).
+      count:    traced live-slot count.
+    Returns (beta, z, theta, gap): the updated coefficients, the fresh model
+    vector z = A beta, the feasible dual point, and the sub-problem duality
+    gap — everything a SAIF outer step needs from the inner solver.
+    """
+    from repro.core.losses import get_loss
+
+    loss = get_loss(loss_name)
+    n, k = A.shape
+    dt = A.dtype
+    assert cm_vmem_ok(n, k, dt.itemsize), (
+        f"active block {n}x{k} ({dt}) exceeds the VMEM budget; shrink "
+        f"k_max or shard the sample dimension (see DESIGN.md §5/§6)")
+    if interpret is None:
+        from repro.kernels.screen.screen import default_interpret
+        interpret = default_interpret()
+    kernel = functools.partial(_cm_burst_kernel, loss=loss)
+    vec_k = pl.BlockSpec((k,), lambda: (0,))
+    vec_n = pl.BlockSpec((n,), lambda: (0,))
+    one = pl.BlockSpec((1,), lambda: (0,))
+    beta_out, z_out, theta_out, gap_out = pl.pallas_call(
+        kernel,
+        in_specs=[
+            pl.BlockSpec(A.shape, lambda: (0, 0)),    # A
+            vec_n,                                    # y
+            vec_k,                                    # beta (aliased)
+            vec_k,                                    # col_sq
+            vec_k,                                    # mask
+            vec_k,                                    # order
+            one,                                      # lam
+            one,                                      # n_epochs
+            one,                                      # count
+        ],
+        out_specs=[vec_k, vec_n, vec_n, one],
+        out_shape=[
+            jax.ShapeDtypeStruct((k,), dt),           # beta
+            jax.ShapeDtypeStruct((n,), dt),           # z
+            jax.ShapeDtypeStruct((n,), dt),           # theta
+            jax.ShapeDtypeStruct((1,), dt),           # gap
+        ],
+        input_output_aliases={2: 0},                  # beta updated in place
+        interpret=interpret,
+    )(A, y.astype(dt), beta.astype(dt), col_sq.astype(dt), mask,
+      order.astype(jnp.int32), jnp.asarray(lam, dt).reshape(1),
+      jnp.asarray(n_epochs, jnp.int32).reshape(1),
+      jnp.asarray(count, jnp.int32).reshape(1))
+    return beta_out, z_out, theta_out, gap_out[0]

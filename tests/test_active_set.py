@@ -7,7 +7,9 @@ from repro.core import active_set as asl
 
 
 def _consistent(aset, p):
-    """Invariant: in_active == set(idx[mask]); no duplicate live ids."""
+    """Invariant: in_active == set(idx[mask]); no duplicate live ids; the
+    incrementally maintained compact order lists exactly the count live
+    slots first and is a permutation of all slots."""
     idx = np.asarray(aset.idx)
     mask = np.asarray(aset.mask)
     live = idx[mask]
@@ -16,6 +18,13 @@ def _consistent(aset, p):
     member[live] = True
     assert (member == np.asarray(aset.in_active)).all()
     assert (np.asarray(aset.beta)[~mask] == 0).all()
+    order = np.asarray(aset.order)
+    count = int(aset.count)
+    k_max = mask.shape[0]
+    assert count == mask.sum(), "count out of sync with mask"
+    assert sorted(order.tolist()) == list(range(k_max)), "not a permutation"
+    assert mask[order[:count]].all(), "dead slot in the live region"
+    assert not mask[order[count:]].any(), "live slot in the dead region"
 
 
 @given(seed=st.integers(0, 10_000))
@@ -69,6 +78,41 @@ def test_scatter_beta_roundtrip():
     assert full.shape == (p,)
     assert float(full[3]) == 1. and float(full[7]) == -2. and float(full[11]) == 3.
     assert float(jnp.abs(full).sum()) == 6.
+
+
+def test_order_is_insertion_stable():
+    """Surviving live slots never reshuffle: ADD appends to the live
+    region, DEL compacts it while preserving relative order."""
+    p, k_max = 20, 8
+    aset = asl.init_active_set(p, k_max, jnp.asarray([3, 7, 11]))
+    order0 = np.asarray(aset.order)[:3].tolist()
+    aset = asl.add_features(aset, jnp.asarray([15, 18], jnp.int32),
+                            jnp.asarray([True, True]))
+    # prior live slots stay in front, in the same relative order
+    assert np.asarray(aset.order)[:3].tolist() == order0
+    assert int(aset.count) == 5
+    # drop the middle original slot: the rest close ranks, order preserved
+    drop = jnp.zeros(k_max, bool).at[1].set(True)
+    aset = asl.delete_features(aset, drop)
+    seq = np.asarray(aset.order)[:int(aset.count)].tolist()
+    assert [s for s in seq if s in order0] == [s for s in order0 if s != 1]
+    _consistent(aset, p)
+
+
+def test_init_live_mask_mode_preserves_slots():
+    """Slots mode: arbitrary live masks keep their slot assignment (the
+    warm-handoff contract of the Gram carry, DESIGN.md §6)."""
+    p, k_max = 30, 6
+    idx = jnp.asarray([4, 9, 2, 9, 25, 0], jnp.int32)
+    beta = jnp.asarray([1., 2., 3., 4., 5., 6.])
+    live = jnp.asarray([True, False, True, False, True, False])
+    aset = asl.init_active_set(p, k_max, idx, jnp.float32, beta,
+                               live_mask=live)
+    assert np.asarray(aset.idx)[np.asarray(live)].tolist() == [4, 2, 25]
+    assert int(aset.count) == 3
+    assert np.asarray(aset.beta)[np.asarray(live)].tolist() == [1., 3., 5.]
+    assert (np.asarray(aset.beta)[~np.asarray(live)] == 0).all()
+    _consistent(aset, p)
 
 
 def test_delete_does_not_clobber_feature_zero():
