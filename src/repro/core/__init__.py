@@ -13,8 +13,14 @@ from repro.core.cm import gram_epochs, solve_lasso_cm, soft_threshold
 from repro.core.dynamic import DynConfig, dynamic_screening
 from repro.core.group import (GroupSaifConfig, group_lambda_max, group_saif,
                               solve_group_lasso_bcd)
-from repro.core.fused import (build_tree, fused_baseline_cm, fused_objective,
-                              recover_beta, saif_fused, transform_design)
+from repro.core.fused import (FusedDesign, FusedPathResult, build_schedule,
+                              build_tree, fused_baseline_cm,
+                              fused_lambda_max, fused_objective, fused_path,
+                              prepare_fused, recover_beta,
+                              recover_beta_device, recover_from_transformed,
+                              saif_fused, saif_fused_eliminated,
+                              transform_design, transform_design_device,
+                              transform_design_scan)
 from repro.core.homotopy import HomotopyConfig, homotopy_path, support_metrics
 from repro.core.losses import get_loss, least_squares, logistic
 from repro.core.path import (PathState, SaifPathResult, lambda_grid,
@@ -40,7 +46,12 @@ __all__ = [
     "dynamic_screening", "DynConfig", "sequential_path", "SeqConfig",
     "homotopy_path", "HomotopyConfig", "support_metrics",
     "group_saif", "GroupSaifConfig", "group_lambda_max",
-    "solve_group_lasso_bcd", "saif_fused", "fused_baseline_cm", "fused_objective", "build_tree",
-    "transform_design", "recover_beta", "solve_lasso_cm", "soft_threshold",
+    "solve_group_lasso_bcd",
+    "saif_fused", "saif_fused_eliminated", "fused_baseline_cm",
+    "fused_objective", "fused_path", "fused_lambda_max", "FusedDesign",
+    "FusedPathResult", "prepare_fused", "build_tree", "build_schedule",
+    "transform_design", "transform_design_scan", "transform_design_device",
+    "recover_beta", "recover_beta_device", "recover_from_transformed",
+    "solve_lasso_cm", "soft_threshold",
     "get_loss", "least_squares", "logistic",
 ]

@@ -101,6 +101,22 @@ def gather_columns(X: jax.Array, aset: ActiveSet) -> jax.Array:
     return jnp.where(aset.mask[None, :], Xa, 0.0)
 
 
+def pen_weights(aset: ActiveSet, unpen_idx: int, dtype=jnp.float32
+                ) -> jax.Array:
+    """(k_max,) per-slot l1 weight: 0 on the always-resident unpenalized
+    slot (fused LASSO's ``b``, DESIGN.md §7), 1 everywhere else.
+
+    ``unpen_idx`` is the *feature id* of the unpenalized coordinate (-1 =
+    none); the weight follows the slot it currently occupies, so it is
+    stable under ADD/DEL churn and capacity growth. Dead slots keep weight
+    1 — their betas are pinned to 0 by the mask anyway.
+    """
+    if unpen_idx < 0:
+        return jnp.ones_like(aset.beta, dtype)
+    unpen_slot = aset.mask & (aset.idx == unpen_idx)
+    return jnp.where(unpen_slot, 0.0, 1.0).astype(dtype)
+
+
 def delete_features(aset: ActiveSet, drop_slot_mask: jax.Array) -> ActiveSet:
     """DEL: clear slots flagged in ``drop_slot_mask`` (bool (k_max,))."""
     p = aset.in_active.shape[0]

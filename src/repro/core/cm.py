@@ -34,21 +34,28 @@ def soft_threshold(x: jax.Array, t: jax.Array) -> jax.Array:
 
 def _coordinate_step(loss: Loss, Xa: jax.Array, y: jax.Array,
                      mask: jax.Array, lam: jax.Array, col_sq: jax.Array,
+                     pen: jax.Array | None,
                      j: jax.Array, beta: jax.Array, z: jax.Array
                      ) -> Tuple[jax.Array, jax.Array]:
-    """One prox coordinate update of slot ``j`` (shared epoch body)."""
+    """One prox coordinate update of slot ``j`` (shared epoch body).
+
+    ``pen`` (optional, (k,)) is the per-slot l1 weight: 0 on an unpenalized
+    slot (the threshold vanishes and the step is the exact/prox-Newton
+    unconstrained minimizer), 1 elsewhere.
+    """
     xj = Xa[:, j]
     lj = jnp.maximum(loss.smoothness * col_sq[j], 1e-30)
     g = jnp.dot(xj, loss.grad(z, y))
-    bj_new = soft_threshold(beta[j] - g / lj, lam / lj)
+    lam_j = lam if pen is None else lam * pen[j]
+    bj_new = soft_threshold(beta[j] - g / lj, lam_j / lj)
     bj_new = jnp.where(mask[j], bj_new, 0.0)
     z = z + (bj_new - beta[j]) * xj
     return beta.at[j].set(bj_new), z
 
 
 def cm_epoch(loss: Loss, Xa: jax.Array, y: jax.Array, beta: jax.Array,
-             z: jax.Array, mask: jax.Array, lam: jax.Array
-             ) -> Tuple[jax.Array, jax.Array]:
+             z: jax.Array, mask: jax.Array, lam: jax.Array,
+             pen: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
     """One full cyclic sweep over the (masked) coordinates.
 
     Args:
@@ -56,13 +63,15 @@ def cm_epoch(loss: Loss, Xa: jax.Array, y: jax.Array, beta: jax.Array,
       beta: (k,) current coefficients (padded entries must be 0).
       z:    (n,) current model vector Xa @ beta.
       mask: (k,) bool validity of each column.
+      pen:  (k,) optional per-column l1 weight (0 = unpenalized).
     Returns updated (beta, z).
     """
     col_sq = jnp.sum(Xa * Xa, axis=0)  # (k,)
     k = beta.shape[0]
 
     def body(j, carry):
-        return _coordinate_step(loss, Xa, y, mask, lam, col_sq, j, *carry)
+        return _coordinate_step(loss, Xa, y, mask, lam, col_sq, pen, j,
+                                *carry)
 
     return jax.lax.fori_loop(0, k, body, (beta, z))
 
@@ -82,14 +91,16 @@ def cm_epoch_compact(loss: Loss, Xa: jax.Array, y: jax.Array,
 def cm_epochs_compact(loss: Loss, Xa: jax.Array, y: jax.Array,
                       beta: jax.Array, z: jax.Array, mask: jax.Array,
                       lam: jax.Array, order: jax.Array, count: jax.Array,
-                      n_epochs: jax.Array) -> Tuple[jax.Array, jax.Array]:
+                      n_epochs: jax.Array,
+                      pen: jax.Array | None = None
+                      ) -> Tuple[jax.Array, jax.Array]:
     """``n_epochs`` compact sweeps (n_epochs may be traced — the solver
     batches a longer polish burst through the same compiled epoch)."""
     col_sq = jnp.sum(Xa * Xa, axis=0)   # hoisted out of the epoch loop
 
     def step(jj, carry):
-        return _coordinate_step(loss, Xa, y, mask, lam, col_sq, order[jj],
-                                *carry)
+        return _coordinate_step(loss, Xa, y, mask, lam, col_sq, pen,
+                                order[jj], *carry)
 
     def epoch(_, carry):
         return jax.lax.fori_loop(0, count, step, carry)
@@ -100,7 +111,8 @@ def cm_epochs_compact(loss: Loss, Xa: jax.Array, y: jax.Array,
 def gram_epochs(G: jax.Array, rho: jax.Array, beta: jax.Array,
                 mask: jax.Array, lam: jax.Array, order: jax.Array,
                 count: jax.Array, n_epochs: jax.Array,
-                smoothness: float = 1.0) -> jax.Array:
+                smoothness: float = 1.0,
+                pen: jax.Array | None = None) -> jax.Array:
     """Covariance-update CM sweeps: every coordinate step is O(k_max), not O(n).
 
     Least-squares only (the gradient must be linear in z for the Gram trick):
@@ -118,12 +130,13 @@ def gram_epochs(G: jax.Array, rho: jax.Array, beta: jax.Array,
       beta:  (k_max,) coefficients (0 on dead slots).
       order: (k_max,) slot permutation, the ``count`` live slots first.
       n_epochs: traced sweep count.
+      pen:   (k_max,) optional per-slot l1 weight (0 = unpenalized slot).
     Returns the updated beta. (The model vector z = Xa beta is intentionally
     NOT maintained here — the caller reconstitutes it once per burst.)
     """
     diag = jnp.diagonal(G)
     inv_l = 1.0 / jnp.maximum(smoothness * diag, 1e-30)
-    thr = lam * inv_l
+    thr = lam * inv_l if pen is None else lam * pen * inv_l
     qr = G @ beta - rho                     # q - rho; garbage on dead slots
 
     def step(jj, carry):
@@ -157,18 +170,25 @@ def cm_epochs(loss: Loss, Xa: jax.Array, y: jax.Array, beta: jax.Array,
 
 
 def solve_lasso_cm(loss: Loss, X: jax.Array, y: jax.Array, lam: float,
-                   tol: float = 1e-9, max_epochs: int = 100_000
-                   ) -> jax.Array:
+                   tol: float = 1e-9, max_epochs: int = 100_000,
+                   unpen_idx: int | None = None) -> jax.Array:
     """Unscreened full LASSO solve to duality gap <= tol (the "No Scr." baseline).
 
     Used both as the paper's no-screening baseline and as the ground-truth
     oracle in tests (safety checks compare active sets against this solve).
+    ``unpen_idx`` exempts one coordinate from the l1 penalty (fused LASSO's
+    ``b`` slot, Thm 7): its coordinate step is unthresholded and the dual
+    point is projected onto its equality constraint before scaling.
     """
     from repro.core.duality import duality_gap, feasible_dual
 
     p = X.shape[1]
     mask = jnp.ones((p,), dtype=bool)
     lam = jnp.asarray(lam, X.dtype)
+    pen = x_unpen = None
+    if unpen_idx is not None:
+        pen = jnp.ones((p,), X.dtype).at[unpen_idx].set(0.0)
+        x_unpen = X[:, unpen_idx]
 
     def cond(state):
         beta, z, gap, epoch = state
@@ -176,10 +196,17 @@ def solve_lasso_cm(loss: Loss, X: jax.Array, y: jax.Array, lam: float,
 
     def body(state):
         beta, z, _, epoch = state
-        beta, z = cm_epoch(loss, X, y, beta, z, mask, lam)
+        beta, z = cm_epoch(loss, X, y, beta, z, mask, lam, pen=pen)
+        if unpen_idx is not None and loss.name != "least_squares":
+            # keep the dual point's equality constraint satisfied through
+            # the gradient itself (duality.polish_unpen, DESIGN.md §7)
+            from repro.core.duality import polish_unpen
+            b_new, z = polish_unpen(loss, x_unpen, y, z, beta[unpen_idx])
+            beta = beta.at[unpen_idx].set(b_new)
         hat = -loss.grad(z, y) / lam
-        theta = feasible_dual(loss, X, y, hat, lam)
-        gap = duality_gap(loss, X, y, beta, theta, lam)
+        theta = feasible_dual(loss, X, y, hat, lam, pen=pen,
+                              x_unpen=x_unpen)
+        gap = duality_gap(loss, X, y, beta, theta, lam, pen=pen)
         return beta, z, gap, epoch + 1
 
     beta0 = jnp.zeros((p,), X.dtype)

@@ -34,7 +34,9 @@ def dual_point(loss: Loss, Xa: jax.Array, y: jax.Array, beta: jax.Array,
 
 def feasible_dual(loss: Loss, X_for_constraints: jax.Array, y: jax.Array,
                   hat_theta: jax.Array, lam: jax.Array,
-                  mask: jax.Array | None = None) -> jax.Array:
+                  mask: jax.Array | None = None,
+                  pen: jax.Array | None = None,
+                  x_unpen: jax.Array | None = None) -> jax.Array:
     """Scale hat_theta into Omega = {theta : |x_i^T theta| <= 1 for i in set}.
 
     Lemma 2: theta = tau * hat_theta with tau = 1 / max_i |x_i^T hat_theta|
@@ -44,10 +46,25 @@ def feasible_dual(loss: Loss, X_for_constraints: jax.Array, y: jax.Array,
     range, which is the projection of theta* direction (paper Thm 7 logic).
 
     ``mask`` marks valid columns of ``X_for_constraints`` (padded actives).
+
+    Unpenalized coordinate (fused LASSO's ``b``, Thm 7): its dual constraint
+    is the *equality* ``x_b^T theta = 0``. Pass its column as ``x_unpen`` and
+    a per-column weight vector ``pen`` (0 on the unpenalized column, 1
+    elsewhere): ``hat_theta`` is first projected onto the hyperplane, the
+    |corr|-scaling then only sees penalized columns, and (scaling through 0)
+    the equality survives the rescale. For general losses the final
+    dom-f* clamp can leave an O(clip) residual on the equality — same
+    approximation grade as the existing general-loss rescale (DESIGN.md §7).
     """
+    if x_unpen is not None:
+        sq_b = jnp.sum(x_unpen * x_unpen)
+        hat_theta = hat_theta - x_unpen * (
+            jnp.dot(x_unpen, hat_theta) / jnp.maximum(sq_b, 1e-30))
     corr = X_for_constraints.T @ hat_theta  # (k,)
     if mask is not None:
         corr = jnp.where(mask, corr, 0.0)
+    if pen is not None:
+        corr = corr * pen
     max_corr = jnp.max(jnp.abs(corr))
     denom = jnp.maximum(max_corr, 1.0)
     bound = 1.0 / jnp.maximum(max_corr, 1e-30)
@@ -66,11 +83,16 @@ def feasible_dual(loss: Loss, X_for_constraints: jax.Array, y: jax.Array,
 
 def duality_gap(loss: Loss, Xa: jax.Array, y: jax.Array, beta: jax.Array,
                 theta: jax.Array, lam: jax.Array,
-                mask: jax.Array | None = None) -> jax.Array:
-    """P_t(beta) - D_t(theta) for the sub-problem restricted to ``Xa``."""
+                mask: jax.Array | None = None,
+                pen: jax.Array | None = None) -> jax.Array:
+    """P_t(beta) - D_t(theta) for the sub-problem restricted to ``Xa``.
+
+    ``pen`` (optional, (k,)) weights the l1 term per column — 0 on an
+    unpenalized coordinate (fused LASSO's ``b``), 1 elsewhere.
+    """
     if mask is not None:
         beta = jnp.where(mask, beta, 0.0)
-    p_val = loss.primal_objective(Xa, y, beta, lam)
+    p_val = loss.primal_objective(Xa, y, beta, lam, weights=pen)
     d_val = loss.dual_objective(y, theta, lam)
     return p_val - d_val
 
@@ -151,3 +173,72 @@ def lambda_max(loss: Loss, X: jax.Array, y: jax.Array) -> jax.Array:
     """Smallest lam with beta* = 0:  max_i |x_i^T f'(0)|   (paper Sec 2.2)."""
     g0 = loss.grad(jnp.zeros_like(y), y)
     return jnp.max(jnp.abs(X.T @ g0))
+
+
+def polish_unpen(loss: Loss, x: jax.Array, y: jax.Array, z: jax.Array,
+                 b: jax.Array, iters: int = 4):
+    """Newton-polish the unpenalized coordinate to stationarity.
+
+    ``iters`` exact 1-D Newton steps on ``b`` along column ``x`` from the
+    point ``z`` (the full model vector, which already includes ``x b``).
+    Returns the updated ``(b, z)`` with ``x^T f'(z) ~ 0``.
+
+    Why this exists (DESIGN.md §7): the CM burst's prox step on ``b`` uses
+    the *majorized* curvature ``alpha ||x||^2``, so ``x^T f'(z)`` is small
+    but not ~0 after a burst. For general losses the dual point must
+    satisfy the equality constraint ``x^T theta = 0`` WITHOUT a geometric
+    projection — projecting ``-f'(z)/lam`` can flip the sign structure
+    (for logistic: theta_j y_j > 0) and the subsequent dom-f* clamp then
+    moves theta far enough that D(theta) is no longer a lower bound
+    (observed as *negative* duality gaps => bogus instant convergence).
+    Driving ``b`` to stationarity makes the gradient itself satisfy the
+    equality, so the projection inside :func:`feasible_dual` is a benign
+    ~0 correction and the clamp stays epsilon-grade. The Hessian is
+    floored and the step clipped so separable logistic data cannot send
+    the iterate to infinity.
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30)
+    lim = 1e3 / scale
+
+    def step(_, carry):
+        b, z = carry
+        g = jnp.dot(x, loss.grad(z, y))
+        H = jnp.dot(x * x, loss.hess(z, y))
+        d = jnp.clip(g / jnp.maximum(H, 1e-30), -lim, lim)
+        return b - d, z - d * x
+
+    return jax.lax.fori_loop(0, iters, step, (b, z))
+
+
+def fit_unpenalized(loss: Loss, x: jax.Array, y: jax.Array,
+                    iters: int = 30) -> jax.Array:
+    """1-D Newton for ``min_b sum_j f(x_j b, y_j)`` (the unpenalized slot).
+
+    The penalized-null model of a problem with one unpenalized coordinate
+    ``b`` (fused LASSO, Thm 7) is beta_tilde = 0 with b at its partial
+    optimum — NOT beta = 0.
+    """
+    b0 = jnp.asarray(0.0, x.dtype)
+    b, _ = polish_unpen(loss, x, y, jnp.zeros_like(y), b0, iters=iters)
+    return b
+
+
+def null_gradient(loss: Loss, X: jax.Array, y: jax.Array,
+                  unpen_idx: int | None = None):
+    """(g0, c0, b0) of the penalized-null model.
+
+    Plain LASSO (unpen_idx None): g0 = f'(0), c0 = |X^T g0|, b0 = 0 — the
+    quantities every SAIF driver derives lambda_max / h / the initial
+    active set from. With an unpenalized coordinate the null model is the
+    partial optimum over that coordinate alone: g0 = f'(x_b b0), and
+    c0[unpen] is forced to 0 (the slot is always resident, never a
+    screening candidate, and must not distort lambda_max).
+    """
+    if unpen_idx is None:
+        g0 = loss.grad(jnp.zeros_like(y), y)
+        return g0, jnp.abs(X.T @ g0), jnp.asarray(0.0, X.dtype)
+    xb = X[:, unpen_idx]
+    b0 = fit_unpenalized(loss, xb, y)
+    g0 = loss.grad(xb * b0, y)
+    c0 = jnp.abs(X.T @ g0).at[unpen_idx].set(0.0)
+    return g0, c0, b0

@@ -60,7 +60,7 @@ import jax.numpy as jnp
 from repro.core import active_set as aset_lib
 from repro.core.active_set import ActiveSet
 from repro.core.cm import cm_epochs_compact, gram_epochs
-from repro.core.duality import duality_gap, feasible_dual
+from repro.core.duality import duality_gap, feasible_dual, polish_unpen
 from repro.core.losses import Loss
 
 
@@ -113,23 +113,43 @@ def cold_inner_carry(k_max: int, dtype=jnp.float32,
                       gidx=jnp.full((k_max,), -1, jnp.int32))
 
 
-def _dual_and_gap(loss: Loss, Xa, y, beta, z, mask, lam):
+def _dual_and_gap(loss: Loss, Xa, y, beta, z, mask, lam,
+                  pen=None, x_unpen=None):
     """Shared post-burst tail of the jnp and gram backends — byte-for-byte
-    the dual/gap computation the pre-backend solver did inline."""
+    the dual/gap computation the pre-backend solver did inline. ``pen`` /
+    ``x_unpen`` carry the unpenalized-slot machinery (DESIGN.md §7): the
+    dual point is projected onto x_unpen's equality constraint and the l1
+    term of the gap skips the unpenalized coordinate."""
     hat = -loss.grad(z, y) / lam
-    theta = feasible_dual(loss, Xa, y, hat, lam, mask)
-    gap = duality_gap(loss, Xa, y, beta, theta, lam, mask)
+    theta = feasible_dual(loss, Xa, y, hat, lam, mask, pen=pen,
+                          x_unpen=x_unpen)
+    gap = duality_gap(loss, Xa, y, beta, theta, lam, mask, pen=pen)
     return theta, gap
 
 
-def make_inner_jnp(loss: Loss, X: jax.Array, y: jax.Array) -> InnerBackend:
+def make_inner_jnp(loss: Loss, X: jax.Array, y: jax.Array,
+                   unpen_idx: int = -1) -> InnerBackend:
     """Reference backend: residual-update epochs, O(n) per coordinate step."""
+    x_unpen = X[:, unpen_idx] if unpen_idx >= 0 else None
 
     def run(carry, aset, Xa, lam, n_ep):
+        pen = (aset_lib.pen_weights(aset, unpen_idx, X.dtype)
+               if unpen_idx >= 0 else None)
         beta, z = cm_epochs_compact(loss, Xa, y, aset.beta, Xa @ aset.beta,
                                     aset.mask, lam, aset.order, aset.count,
-                                    n_ep)
-        theta, gap = _dual_and_gap(loss, Xa, y, beta, z, aset.mask, lam)
+                                    n_ep, pen=pen)
+        if unpen_idx >= 0 and loss.name != "least_squares":
+            # general loss: Newton-polish b to stationarity so the dual
+            # point satisfies its equality constraint through the gradient
+            # itself — see duality.polish_unpen (DESIGN.md §7)
+            unpen_slot = aset.mask & (aset.idx == unpen_idx)
+            slot = jnp.argmax(unpen_slot)
+            present = jnp.any(unpen_slot)
+            b_new, z_new = polish_unpen(loss, x_unpen, y, z, beta[slot])
+            beta = beta.at[slot].set(jnp.where(present, b_new, beta[slot]))
+            z = jnp.where(present, z_new, z)
+        theta, gap = _dual_and_gap(loss, Xa, y, beta, z, aset.mask, lam,
+                                   pen=pen, x_unpen=x_unpen)
         return InnerOut(beta=beta, z=z, theta=theta, gap=gap)
 
     return InnerBackend(name="jnp",
@@ -139,11 +159,18 @@ def make_inner_jnp(loss: Loss, X: jax.Array, y: jax.Array) -> InnerBackend:
 
 
 def make_inner_gram(loss: Loss, X: jax.Array, y: jax.Array,
-                    h: int) -> InnerBackend:
-    """Covariance-update backend: O(k_max) coordinate steps (LS only)."""
+                    h: int, unpen_idx: int = -1) -> InnerBackend:
+    """Covariance-update backend: O(k_max) coordinate steps (LS only).
+
+    The unpenalized slot (``unpen_idx`` >= 0, fused LASSO) needs no special
+    Gram handling: it is always resident, so its row/column of G stays hot
+    across the whole solve — only its threshold (0) and the dual tail's
+    equality projection differ.
+    """
     if loss.name != "least_squares":
         raise ValueError("the gram inner backend needs a linear gradient "
                          f"(least squares); got loss {loss.name!r}")
+    x_unpen = X[:, unpen_idx] if unpen_idx >= 0 else None
 
     def _rebuild(aset, Xa):
         G = Xa.T @ Xa
@@ -194,11 +221,14 @@ def make_inner_gram(loss: Loss, X: jax.Array, y: jax.Array,
         return jax.lax.cond(jnp.any(dirty), do_refresh, lambda c: c, carry)
 
     def run(carry, aset, Xa, lam, n_ep):
+        pen = (aset_lib.pen_weights(aset, unpen_idx, X.dtype)
+               if unpen_idx >= 0 else None)
         beta = gram_epochs(carry.G, carry.rho, aset.beta, aset.mask, lam,
                            aset.order, aset.count, n_ep,
-                           smoothness=loss.smoothness)
+                           smoothness=loss.smoothness, pen=pen)
         z = Xa @ beta                # the only O(n k) term: once per burst
-        theta, gap = _dual_and_gap(loss, Xa, y, beta, z, aset.mask, lam)
+        theta, gap = _dual_and_gap(loss, Xa, y, beta, z, aset.mask, lam,
+                                   pen=pen, x_unpen=x_unpen)
         return InnerOut(beta=beta, z=z, theta=theta, gap=gap)
 
     return InnerBackend(name="gram", init=init, refresh=refresh, run=run)
@@ -206,7 +236,8 @@ def make_inner_gram(loss: Loss, X: jax.Array, y: jax.Array,
 
 def make_inner_pallas(loss: Loss, X: jax.Array, y: jax.Array,
                       col_norm: jax.Array,
-                      interpret: bool | None = None) -> InnerBackend:
+                      interpret: bool | None = None,
+                      unpen_idx: int = -1) -> InnerBackend:
     """VMEM-resident fused-kernel backend (kernels/cm/cm.py)."""
     from repro.kernels.cm.cm import cm_burst_pallas
 
@@ -215,9 +246,11 @@ def make_inner_pallas(loss: Loss, X: jax.Array, y: jax.Array,
         # an O(n k_max) reduction over the gathered block
         norms = jnp.where(aset.mask, jnp.take(col_norm, aset.idx), 0.0)
         col_sq = norms * norms
+        pen = (aset_lib.pen_weights(aset, unpen_idx, X.dtype)
+               if unpen_idx >= 0 else None)
         beta, z, theta, gap = cm_burst_pallas(
             Xa, y, aset.beta, col_sq, aset.mask, aset.order, lam, n_ep,
-            aset.count, loss_name=loss.name, interpret=interpret)
+            aset.count, pen=pen, loss_name=loss.name, interpret=interpret)
         return InnerOut(beta=beta, z=z, theta=theta, gap=gap)
 
     return InnerBackend(name="pallas",
@@ -227,13 +260,14 @@ def make_inner_pallas(loss: Loss, X: jax.Array, y: jax.Array,
 
 
 def make_inner(name: str, loss: Loss, X: jax.Array, y: jax.Array,
-               col_norm: jax.Array, h: int) -> InnerBackend:
+               col_norm: jax.Array, h: int,
+               unpen_idx: int = -1) -> InnerBackend:
     """Factory used inside ``_saif_jit`` (name is a jit-static string)."""
     if name == "gram":
-        return make_inner_gram(loss, X, y, h)
+        return make_inner_gram(loss, X, y, h, unpen_idx)
     if name == "pallas":
-        return make_inner_pallas(loss, X, y, col_norm)
-    return make_inner_jnp(loss, X, y)
+        return make_inner_pallas(loss, X, y, col_norm, unpen_idx=unpen_idx)
+    return make_inner_jnp(loss, X, y, unpen_idx)
 
 
 # n/k_max crossover of the auto policy: the gram step is an O(k_max) axpy

@@ -35,12 +35,21 @@ class Loss:
     conj: Callable[[jax.Array, jax.Array], jax.Array]
     smoothness: float  # alpha: f is alpha-smooth  =>  f* is (1/alpha)-strongly convex
     dual_clip: Callable[[jax.Array, jax.Array], jax.Array]
+    hess: Callable[[jax.Array, jax.Array], jax.Array]  # elementwise f''(z, y)
+    #   (exact curvature — the unpenalized-slot Newton polish needs it;
+    #    `smoothness` is only its upper bound)
 
     def primal_objective(self, X: jax.Array, y: jax.Array, beta: jax.Array,
-                         lam: jax.Array) -> jax.Array:
-        """P(beta) = sum_j f(x_j. beta, y_j) + lam ||beta||_1."""
+                         lam: jax.Array,
+                         weights: jax.Array | None = None) -> jax.Array:
+        """P(beta) = sum_j f(x_j. beta, y_j) + lam sum_i w_i |beta_i|.
+
+        ``weights`` (optional) is the per-coordinate l1 weight — 0 on an
+        unpenalized coordinate (fused LASSO's ``b``), 1 elsewhere/default.
+        """
         z = X @ beta
-        return jnp.sum(self.value(z, y)) + lam * jnp.sum(jnp.abs(beta))
+        l1 = jnp.abs(beta) if weights is None else weights * jnp.abs(beta)
+        return jnp.sum(self.value(z, y)) + lam * jnp.sum(l1)
 
     def dual_objective(self, y: jax.Array, theta: jax.Array,
                        lam: jax.Array) -> jax.Array:
@@ -71,6 +80,10 @@ def _ls_dual_clip(u, y):
     return u
 
 
+def _ls_hess(z, y):
+    return jnp.ones_like(z)
+
+
 least_squares = Loss(
     name="least_squares",
     value=_ls_value,
@@ -78,6 +91,7 @@ least_squares = Loss(
     conj=_ls_conj,
     smoothness=1.0,
     dual_clip=_ls_dual_clip,
+    hess=_ls_hess,
 )
 
 
@@ -114,6 +128,11 @@ def _logit_dual_clip(u, y):
     return -s * y
 
 
+def _logit_hess(z, y):
+    s = jax.nn.sigmoid(-y * z)
+    return s * (1.0 - s)          # y^2 = 1 for labels in {-1, +1}
+
+
 logistic = Loss(
     name="logistic",
     value=_logit_value,
@@ -121,6 +140,7 @@ logistic = Loss(
     conj=_logit_conj,
     smoothness=0.25,
     dual_clip=_logit_dual_clip,
+    hess=_logit_hess,
 )
 
 

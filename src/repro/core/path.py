@@ -54,11 +54,12 @@ class PathState(NamedTuple):
     """One-time O(np) preprocessing shared by every lambda on the path."""
     X: jax.Array          # (n, p)
     y: jax.Array          # (n,)
-    c0: jax.Array         # (p,) |X^T f'(0)|
+    c0: jax.Array         # (p,) |X^T f'(null model)|
     col_norm: jax.Array   # (p,)
     lam_max: float
     c0_max: float         # host copies of the c0 statistics the h formula
     c0_median: float      # needs — synced exactly once per path
+    b0: float = 0.0       # unpenalized-slot null fit (fused paths; §7)
 
 
 class SaifPathResult(NamedTuple):
@@ -69,31 +70,37 @@ class SaifPathResult(NamedTuple):
 
 
 def prepare_path(X, y, config: SaifConfig) -> PathState:
+    from repro.core.duality import null_gradient
+
     loss = get_loss(config.loss)
     X = jnp.asarray(X)
     y = jnp.asarray(y)
-    g0 = loss.grad(jnp.zeros_like(y), y)
-    c0 = jnp.abs(X.T @ g0)
+    _, c0, b0 = null_gradient(loss, X, y, config.unpen_idx)
     col_norm = jnp.linalg.norm(X, axis=0)
-    c0_max, c0_median = jax.device_get((jnp.max(c0), jnp.median(c0)))
+    c0_max, c0_median, b0 = jax.device_get(
+        (jnp.max(c0), jnp.median(c0), b0))
     return PathState(X=X, y=y, c0=c0, col_norm=col_norm,
                      lam_max=float(c0_max), c0_max=float(c0_max),
-                     c0_median=float(c0_median))
+                     c0_median=float(c0_median), b0=float(b0))
 
 
-@jax.jit
+@partial(jax.jit, static_argnames=("unpen_idx",))
 def _warm_state(active_idx: jax.Array, active_mask: jax.Array,
-                beta_full: jax.Array, inner: InnerCarry):
+                beta_full: jax.Array, inner: InnerCarry,
+                unpen_idx: int = -1):
     """Device-side warm-start extraction, *slot-preserving*.
 
     The next lambda is seeded with the previous solve's final slot layout
     (masked down to the nonzero support), so the Gram buffers in ``inner``
     — which are indexed by slot — remain valid verbatim: the next
     ``_saif_jit``'s init finds zero dirty slots and skips the O(n k^2)
-    rebuild entirely (DESIGN.md §6). No host round-trip anywhere.
+    rebuild entirely (DESIGN.md §6). No host round-trip anywhere. The
+    unpenalized slot (fused paths) stays resident even at b = 0 exactly.
     """
     vals = jnp.where(active_mask, jnp.take(beta_full, active_idx), 0.0)
     live = active_mask & (vals != 0)
+    if unpen_idx >= 0:
+        live = live | (active_mask & (active_idx == unpen_idx))
     return active_idx, jnp.where(live, vals, 0.0), live, inner
 
 
@@ -117,6 +124,9 @@ def saif_path(X, y, lams: Sequence[float],
     prep = prepare_path(X, y, config)
     X, y, c0, col_norm = prep.X, prep.y, prep.c0, prep.col_norm
     n, p = X.shape
+    unpen = config.unpen_idx
+    unpen_static = -1 if unpen is None else unpen
+    use_seq = config.use_seq_ball and unpen is None   # DESIGN.md §7
     lams_np = np.asarray(sorted([float(l) for l in lams], reverse=True))
     backend = resolve_backend(config.screen_backend)
     n_compile0 = saif_jit_compile_count()
@@ -151,18 +161,18 @@ def saif_path(X, y, lams: Sequence[float],
             loss_name=config.loss, h=h, k_max=k_max,
             inner_epochs=config.inner_epochs,
             polish_factor=config.polish_factor,
-            max_outer=config.max_outer, use_seq_ball=config.use_seq_ball,
+            max_outer=config.max_outer, use_seq_ball=use_seq,
             screen_backend=backend, inner_backend=inner_name(k_max),
-            screen_fn=screen_fn)
+            unpen_idx=unpen_static, screen_fn=screen_fn)
 
     def cold_start(k: int):
         # seed with the FIRST lambda's own batch size (hs[0]), not the
         # grid-max h: the cold solve must match a standalone solve at
-        # lams[0] exactly
-        n_init = min(hs[0] if hs else 1, k, p)
-        top = jax.lax.top_k(c0, n_init)[1].astype(jnp.int32)
-        idx = jnp.zeros((k,), jnp.int32).at[:n_init].set(top)
-        return (idx, jnp.zeros((k,), X.dtype), jnp.arange(k) < n_init,
+        # lams[0] exactly (initial_support is the shared constructor)
+        from repro.core.saif import initial_support
+        idx, beta, n_init = initial_support(c0, hs[0] if hs else 1, k, p,
+                                            unpen, prep.b0, X.dtype)
+        return (idx, beta, jnp.arange(k) < n_init,
                 cold_inner_carry(k, X.dtype, backend=inner_name(k)))
 
     def grow(warm, k: int):
@@ -191,7 +201,8 @@ def saif_path(X, y, lams: Sequence[float],
                 res = run_lam(float(lam), hs[j], cur)
                 seg_results.append(res)
                 cur = _warm_state(res.active_idx, res.active_mask,
-                                  res.beta, res.inner)
+                                  res.beta, res.inner,
+                                  unpen_idx=unpen_static)
             # ONE host sync per segment: the batched overflow check
             flags = jnp.stack([r.overflowed for r in seg_results])
             if not bool(jnp.any(flags)) or k_max >= p:

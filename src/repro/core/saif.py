@@ -57,6 +57,11 @@ class SaifConfig:
     loss: str = "least_squares"
     screen_backend: str = "auto"  # "auto" | "jnp" | "pallas" (DESIGN.md §3)
     inner_backend: str = "auto"   # "auto" | "jnp" | "gram" | "pallas" (§6)
+    unpen_idx: Optional[int] = None  # feature id exempt from the l1 penalty
+    #   (fused LASSO's always-resident ``b`` slot, Thm 7 / DESIGN.md §7);
+    #   None = plain LASSO. The slot is pinned in the active set, never
+    #   DELed, its coordinate step is unthresholded, and the dual point is
+    #   projected onto its equality constraint.
 
 
 class SaifResult(NamedTuple):
@@ -116,6 +121,33 @@ def default_capacity(h: int, p: int) -> int:
     return int(min(p, max(8 * h, 64)))
 
 
+def initial_support(c0, h: int, k_max: int, p: int,
+                    unpen_idx: Optional[int] = None, b0=0.0,
+                    dtype=jnp.float32):
+    """Cold-start support (Algorithm 1 line 1): top-h' features by c0.
+
+    Returns ``(init_idx (k_max,), init_beta (k_max,), n_init)``. With an
+    unpenalized coordinate (fused LASSO) the slot is pinned at position 0,
+    seeded at its null-fit value ``b0``, and masked out of the top-k so it
+    can never occupy two slots. Shared by the single-lambda driver and the
+    path engine's cold start so both produce bitwise-identical layouts.
+    """
+    if unpen_idx is None:
+        n_init = min(h, k_max, p)
+        top = jax.lax.top_k(c0, n_init)[1].astype(jnp.int32)
+        init_idx = jnp.zeros((k_max,), jnp.int32).at[:n_init].set(top)
+        return init_idx, jnp.zeros((k_max,), dtype), n_init
+    n_init = min(h + 1, k_max, p)
+    n_top = n_init - 1
+    c0_top = c0.at[unpen_idx].set(-jnp.inf)     # ties at 0 must not pick it
+    top = jax.lax.top_k(c0_top, max(n_top, 1))[1].astype(jnp.int32)
+    init_idx = jnp.zeros((k_max,), jnp.int32).at[0].set(unpen_idx)
+    init_idx = init_idx.at[1:n_init].set(top[:n_top])
+    init_beta = jnp.zeros((k_max,), dtype).at[0].set(
+        jnp.asarray(b0, dtype))
+    return init_idx, init_beta, n_init
+
+
 ScanFn = Callable[[jax.Array], jax.Array]
 # legacy signature: theta (n,) -> |X^T theta| (p,)
 
@@ -124,13 +156,13 @@ ScanFn = Callable[[jax.Array], jax.Array]
                                    "inner_epochs", "polish_factor",
                                    "max_outer", "use_seq_ball",
                                    "screen_backend", "inner_backend",
-                                   "screen_fn", "scan_fn"))
+                                   "unpen_idx", "screen_fn", "scan_fn"))
 def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
               init_mask, init_G, init_rho, init_gidx, h_tilde, h_cap,
               *, loss_name: str, h: int, k_max: int,
               inner_epochs: int, polish_factor: int, max_outer: int,
               use_seq_ball: bool, screen_backend: str = "jnp",
-              inner_backend: str = "jnp",
+              inner_backend: str = "jnp", unpen_idx: int = -1,
               screen_fn: Optional[ScreenFn] = None,
               scan_fn: Optional[ScanFn] = None) -> SaifResult:
     # h (static) sizes the candidate shapes; h_tilde (the violation
@@ -155,7 +187,7 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
         screen = make_screen_pallas(X, col_norm, h)
     else:
         screen = make_screen_jnp(X, col_norm, h)
-    inner = make_inner(inner_backend, loss, X, y, col_norm, h)
+    inner = make_inner(inner_backend, loss, X, y, col_norm, h, unpen_idx)
 
     g0 = loss.grad(jnp.zeros_like(y), y)   # f'(0)
 
@@ -220,6 +252,10 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
         corr_act = jnp.abs(Xa.T @ theta_c)                     # (k_max,)
         norm_act = jnp.where(aset.mask, jnp.take(col_norm, aset.idx), 0.0)
         del_mask = aset.mask & (corr_act + norm_act * r_del < 1.0)
+        if unpen_idx >= 0:
+            # the unpenalized slot is always resident: its dual constraint
+            # is an equality (Thm 7), so the <1 DEL rule never applies
+            del_mask = del_mask & (aset.idx != unpen_idx)
         aset = jax.lax.cond(
             stop_now, lambda a: a,
             lambda a: aset_lib.delete_features(a, del_mask), aset)
@@ -317,14 +353,23 @@ def saif(X, y, lam: float, config: SaifConfig = SaifConfig(),
     custom backend (e.g. the sharded one); ``scan_fn`` is the legacy
     bare-scan hook, adapted on the fly.
     """
+    from repro.core.duality import null_gradient
+
     loss = get_loss(config.loss)
     X = jnp.asarray(X)
     y = jnp.asarray(y)
     n, p = X.shape
-    g0 = loss.grad(jnp.zeros_like(y), y)
-    c0 = jnp.abs(X.T @ g0)
+    unpen = config.unpen_idx
+    # Penalized-null model: f'(0) for plain LASSO; with an unpenalized
+    # coordinate the null model sits at its partial optimum b0 (Thm 7) and
+    # c0[unpen] is 0, so lambda_max / h / the initial set stay exact.
+    _, c0, b0 = null_gradient(loss, X, y, unpen)
     col_norm = jnp.linalg.norm(X, axis=0)
     lam_max = float(jnp.max(c0))
+    # The Thm-2 sequential ball assumes the all-penalized null dual
+    # theta0 = -f'(0)/lam_max — invalid once b is unpenalized (DESIGN.md
+    # §7), so the gap ball alone drives screening there.
+    use_seq = config.use_seq_ball and unpen is None
 
     h = add_batch_size(config.c, lam, c0, p)
     h_tilde = max(int(math.ceil(config.zeta * h)), 1)
@@ -338,18 +383,34 @@ def saif(X, y, lam: float, config: SaifConfig = SaifConfig(),
     # Always padded to (k_max,) so warm-started paths share one compilation.
     if warm_idx is not None:
         k_max = max(k_max, default_capacity(h, p))
-        n_init = min(int(warm_idx.shape[0]), k_max, p)
-        init_idx = jnp.zeros((k_max,), jnp.int32).at[:n_init].set(
-            warm_idx[:n_init].astype(jnp.int32))
-        init_beta = jnp.zeros((k_max,), X.dtype)
-        if warm_beta is not None:
-            init_beta = init_beta.at[:n_init].set(
-                warm_beta[:n_init].astype(X.dtype))
+        if unpen is None:
+            # plain LASSO: stay on device, no host round-trip
+            n_init = min(int(warm_idx.shape[0]), k_max, p)
+            init_idx = jnp.zeros((k_max,), jnp.int32).at[:n_init].set(
+                jnp.asarray(warm_idx)[:n_init].astype(jnp.int32))
+            init_beta = jnp.zeros((k_max,), X.dtype)
+            if warm_beta is not None:
+                init_beta = init_beta.at[:n_init].set(
+                    jnp.asarray(warm_beta)[:n_init].astype(X.dtype))
+        else:
+            warm_ids = [int(i) for i in jnp.asarray(warm_idx).tolist()]
+            warm_vals = (list(jnp.asarray(warm_beta).tolist())
+                         if warm_beta is not None
+                         else [0.0] * len(warm_ids))
+            if unpen not in warm_ids:
+                # the unpenalized slot is always resident, even when the
+                # previous lambda left b exactly 0 — PREPEND it so a
+                # capacity-full warm support can never truncate it away
+                warm_ids.insert(0, unpen)
+                warm_vals.insert(0, float(b0))
+            n_init = min(len(warm_ids), k_max, p)
+            init_idx = jnp.zeros((k_max,), jnp.int32).at[:n_init].set(
+                jnp.asarray(warm_ids[:n_init], jnp.int32))
+            init_beta = jnp.zeros((k_max,), X.dtype).at[:n_init].set(
+                jnp.asarray(warm_vals[:n_init], X.dtype))
     else:
-        n_init = min(h, k_max, p)
-        top = jax.lax.top_k(c0, n_init)[1]
-        init_idx = jnp.zeros((k_max,), jnp.int32).at[:n_init].set(top)
-        init_beta = jnp.zeros((k_max,), X.dtype)
+        init_idx, init_beta, n_init = initial_support(
+            c0, h, k_max, p, unpen, b0, X.dtype)
 
     while True:
         init_idx = init_idx[:k_max]
@@ -373,8 +434,9 @@ def saif(X, y, lam: float, config: SaifConfig = SaifConfig(),
                         k_max=k_max, inner_epochs=config.inner_epochs,
                         polish_factor=config.polish_factor,
                         max_outer=config.max_outer,
-                        use_seq_ball=config.use_seq_ball,
+                        use_seq_ball=use_seq,
                         screen_backend=backend, inner_backend=inner,
+                        unpen_idx=-1 if unpen is None else unpen,
                         screen_fn=screen_fn, scan_fn=scan_fn)
         if not bool(res.overflowed) or k_max >= p:
             return res

@@ -24,6 +24,14 @@ All three produce *identical integers* for the violation counts and the same
 candidate sets (ties break to the lowest feature id everywhere), which is
 what makes the backends interchangeable mid-path.
 
+Fused problems (DESIGN.md §7) screen through this same interface: the
+Theorem-6 transform materializes the edge columns + the b column once, and
+every backend — the sharded one included (``saif_fused_distributed``) —
+scans the transformed design like any other; the always-resident
+unpenalized slot is excluded the same way any active feature is (it is in
+``in_active`` from step 0 and never DELed), so no backend needs a fused
+special case.
+
 Violation counts without the O(p log p) sort
 --------------------------------------------
 The legacy implementation sorted the (p,) ub vector and binary-searched each

@@ -206,6 +206,7 @@ def saif_distributed(X, y, lam: float, mesh, config=None,
     """
     import dataclasses
 
+    from repro.core.duality import null_gradient
     from repro.core.losses import get_loss
     from repro.core.saif import SaifConfig, add_batch_size, saif
 
@@ -214,7 +215,12 @@ def saif_distributed(X, y, lam: float, mesh, config=None,
         config = dataclasses.replace(config, inner_backend=inner_backend)
     loss = get_loss(config.loss)
     y = jnp.asarray(y)
-    g0 = loss.grad(jnp.zeros_like(y), y)
+    X = jnp.asarray(X)
+    # Penalized-null gradient: f'(0) for plain LASSO; at the unpenalized
+    # slot's partial optimum for fused problems (Thm 7, DESIGN.md §7) —
+    # the same construction saif() uses internally, so the h derived here
+    # matches the solver's static h exactly.
+    g0, _, _ = null_gradient(loss, X, y, config.unpen_idx)
     design = shard_design(X, g0, mesh)
     # X itself is also consumed (gathers of active columns, duality gap);
     # padded to p_pad, so run SAIF on the padded problem — padding columns
@@ -222,7 +228,34 @@ def saif_distributed(X, y, lam: float, mesh, config=None,
     # h must match what saif() derives for the padded problem (same c0,
     # same p_pad), so the backend's candidate count lines up with the
     # solver's static h.
-    h = add_batch_size(config.c, lam, design.c0, design.X.shape[1])
+    c0 = design.c0
+    if config.unpen_idx is not None:
+        c0 = c0.at[config.unpen_idx].set(0.0)
+    h = add_batch_size(config.c, lam, c0, design.X.shape[1])
     screen_fn = make_sharded_screen(design, h)
     res = saif(design.X, y, lam, config, screen_fn=screen_fn)
     return res._replace(beta=res.beta[:design.p])
+
+
+def saif_fused_distributed(X, y, parent, lam: float, mesh, config=None,
+                           transform_backend: str = "auto"):
+    """Tree fused LASSO with feature-sharded screening (DESIGN.md §5/§7).
+
+    The Theorem-6 transform runs once (device-native, chain Pallas kernel
+    or level-schedule scan); the *transformed* design — edge columns plus
+    the unpenalized b column — is then column-partitioned across the mesh
+    exactly like a plain design, so the O(p) fused screening scan is the
+    sharded collective while the active block, the b slot and the CM
+    sweeps stay replicated. Returns (beta in node space, SaifResult).
+    """
+    import dataclasses
+
+    from repro.core.fused import prepare_fused, recover_from_transformed
+    from repro.core.saif import SaifConfig
+
+    config = config or SaifConfig()
+    fdesign = prepare_fused(X, parent, backend=transform_backend)
+    cfg = dataclasses.replace(config, unpen_idx=fdesign.unpen_idx)
+    y = jnp.asarray(y, fdesign.Xt.dtype)
+    res = saif_distributed(fdesign.Xt, y, lam, mesh, cfg)
+    return recover_from_transformed(res.beta, fdesign), res

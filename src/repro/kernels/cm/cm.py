@@ -136,8 +136,10 @@ def cm_epochs_pallas(A, y, beta, col_sq, mask, lam, *,
 # --------------------------------------------------------------------------
 
 def _cm_burst_kernel(a_ref, y_ref, beta_in_ref, colsq_ref, mask_ref,
-                     order_ref, lam_ref, nep_ref, cnt_ref,
-                     beta_ref, z_ref, theta_ref, gap_ref, *, loss):
+                     order_ref, pen_ref, lam_ref, nep_ref, cnt_ref,
+                     beta_ref, z_ref, theta_ref, gap_ref, *, loss,
+                     has_unpen: bool):
+    from repro.core.duality import polish_unpen
     del beta_in_ref                     # aliased onto beta_ref
     a = a_ref[...]                      # (n, k) — VMEM resident, dead cols 0
     y = y_ref[...]
@@ -154,7 +156,7 @@ def _cm_burst_kernel(a_ref, y_ref, beta_in_ref, colsq_ref, mask_ref,
                     preferred_element_type=dt)
         bj = beta_ref[j]
         u = bj - g / lj
-        t = lam / lj
+        t = lam * pen_ref[j] / lj       # pen=0: exact unpenalized step
         b_new = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t, 0.0)
         b_new = jnp.where(mask_ref[j], b_new, 0.0)
         z_ref[...] += (b_new - bj) * aj
@@ -168,11 +170,33 @@ def _cm_burst_kernel(a_ref, y_ref, beta_in_ref, colsq_ref, mask_ref,
 
     # ---- fused dual-point / duality-gap tail (still VMEM-resident) -------
     beta = beta_ref[...]
+    pen = pen_ref[...]
     z = jnp.dot(a, beta, preferred_element_type=dt)   # fresh, drift-free
+    if has_unpen:
+        # b's column — the one live slot with pen = 0 — shared by the
+        # Newton polish and the equality projection below
+        w = jnp.where(mask_ref[...], 1.0 - pen, 0.0).astype(dt)
+        ab = jnp.dot(a, w, preferred_element_type=dt)   # (n,)
+        if loss.name != "least_squares":
+            # General loss: Newton-polish the unpenalized coordinate to
+            # stationarity before forming the dual point, so x_b^T f'(z)
+            # ~ 0 and the equality projection is a benign ~0 correction
+            # (duality.polish_unpen — the same pure-jax fold runs inside
+            # the kernel, DESIGN.md §7).
+            b_cur = jnp.dot(beta, w, preferred_element_type=dt)
+            b_new, z = polish_unpen(loss, ab, y, z, b_cur)
+            beta = jnp.where(w > 0.5, b_new, beta)
+            beta_ref[...] = beta
     z_ref[...] = z
     hat = -loss.grad(z, y) / lam                      # unscaled dual point
+    if has_unpen:
+        # Thm-7 equality constraint x_b^T theta = 0: project hat onto the
+        # hyperplane before scaling (duality.feasible_dual, DESIGN.md §7)
+        sq_b = jnp.dot(ab, ab, preferred_element_type=dt)
+        hat = hat - ab * (jnp.dot(ab, hat, preferred_element_type=dt)
+                          / jnp.maximum(sq_b, 1e-30))
     corr = jnp.dot(hat, a, preferred_element_type=dt)  # (k,); dead cols -> 0
-    max_corr = jnp.max(jnp.abs(corr))
+    max_corr = jnp.max(jnp.abs(corr) * pen)            # penalized cols only
     if loss.name == "least_squares":
         # DPP-style optimal scaling (duality.feasible_dual, LS branch)
         bound = 1.0 / jnp.maximum(max_corr, 1e-30)
@@ -186,14 +210,14 @@ def _cm_burst_kernel(a_ref, y_ref, beta_in_ref, colsq_ref, mask_ref,
         theta = hat / jnp.maximum(max_corr, 1.0)
         theta = -loss.dual_clip(-lam * theta, y) / lam
     theta_ref[...] = theta
-    p_val = jnp.sum(loss.value(z, y)) + lam * jnp.sum(jnp.abs(beta))
+    p_val = jnp.sum(loss.value(z, y)) + lam * jnp.sum(pen * jnp.abs(beta))
     d_val = -jnp.sum(loss.conj(-lam * theta, y))
     gap_ref[0] = p_val - d_val
 
 
 @functools.partial(jax.jit, static_argnames=("loss_name", "interpret"))
 def cm_burst_pallas(A, y, beta, col_sq, mask, order, lam, n_epochs, count,
-                    *, loss_name: str = "least_squares",
+                    pen=None, *, loss_name: str = "least_squares",
                     interpret: bool | None = None):
     """One fused "CM burst + gap" call on the active block.
 
@@ -205,6 +229,10 @@ def cm_burst_pallas(A, y, beta, col_sq, mask, order, lam, n_epochs, count,
       n_epochs: traced sweep count (the solver batches ADD vs polish bursts
                 through this one compiled kernel).
       count:    traced live-slot count.
+      pen:      (k,) optional per-slot l1 weight: 0 marks the always-resident
+                unpenalized slot (fused LASSO's ``b``, DESIGN.md §7), which
+                also switches the dual tail to the Thm-7 equality-projected
+                scaling. None = all penalized (the plain-LASSO fast path).
     Returns (beta, z, theta, gap): the updated coefficients, the fresh model
     vector z = A beta, the feasible dual point, and the sub-problem duality
     gap — everything a SAIF outer step needs from the inner solver.
@@ -220,7 +248,11 @@ def cm_burst_pallas(A, y, beta, col_sq, mask, order, lam, n_epochs, count,
     if interpret is None:
         from repro.kernels.screen.screen import default_interpret
         interpret = default_interpret()
-    kernel = functools.partial(_cm_burst_kernel, loss=loss)
+    has_unpen = pen is not None
+    if pen is None:
+        pen = jnp.ones((k,), dt)
+    kernel = functools.partial(_cm_burst_kernel, loss=loss,
+                               has_unpen=has_unpen)
     vec_k = pl.BlockSpec((k,), lambda: (0,))
     vec_n = pl.BlockSpec((n,), lambda: (0,))
     one = pl.BlockSpec((1,), lambda: (0,))
@@ -233,6 +265,7 @@ def cm_burst_pallas(A, y, beta, col_sq, mask, order, lam, n_epochs, count,
             vec_k,                                    # col_sq
             vec_k,                                    # mask
             vec_k,                                    # order
+            vec_k,                                    # pen
             one,                                      # lam
             one,                                      # n_epochs
             one,                                      # count
@@ -247,7 +280,8 @@ def cm_burst_pallas(A, y, beta, col_sq, mask, order, lam, n_epochs, count,
         input_output_aliases={2: 0},                  # beta updated in place
         interpret=interpret,
     )(A, y.astype(dt), beta.astype(dt), col_sq.astype(dt), mask,
-      order.astype(jnp.int32), jnp.asarray(lam, dt).reshape(1),
+      order.astype(jnp.int32), pen.astype(dt),
+      jnp.asarray(lam, dt).reshape(1),
       jnp.asarray(n_epochs, jnp.int32).reshape(1),
       jnp.asarray(count, jnp.int32).reshape(1))
     return beta_out, z_out, theta_out, gap_out[0]

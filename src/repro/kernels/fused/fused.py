@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: the chain-graph Theorem-6 column transform.
+
+For the 1-D fused LASSO (path graph 0-1-...-p-1 rooted at 0) the subtree
+below the edge into node v is exactly {v, v+1, ..., p-1}, so the whole
+Theorem-6 transform collapses to the *suffix sums* of the design columns:
+
+    S[:, v] = sum_{u >= v} X[:, u]
+    x_tilde_e = S[:, e+1]          (edge e's transformed column)
+    x_b       = S[:, 0]            (the unpenalized b column)
+
+TPU mapping: grid = (p/BP,), tiles visited RIGHT to LEFT (the index map
+reverses the program id — TPU grids execute sequentially, so the (n,)-
+shaped running carry can live in an output block with a constant index map
+that every step revisits, the same accumulation pattern as the screening
+kernels). Inside a tile the suffix is an exact *right fold*
+(acc = x[:, l] + acc, one IEEE add per column): bitwise-identical to the
+dense numpy reference ``repro.core.fused.transform_design``, which is what
+the device-transform parity suite asserts. A triangular-matmul form would
+feed the MXU but re-associates the sums; the transform runs once per fused
+problem, so the exact fold wins (DESIGN.md §7).
+
+Execution mode: ``interpret=None`` auto-detects like every other kernel in
+``repro.kernels`` — compiled Mosaic on TPU, interpreter fallback on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.screen.screen import default_interpret
+
+# the (n_pad, bp) tile + its output + the (n_pad,) carry, double-buffered
+FUSED_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def autotune_chain_block(n: int, p: int, *, dtype_bytes: int = 4) -> int:
+    """Lane-dim tile width bp for the suffix-sum kernel (multiple of 128),
+    shrunk until in+out tiles fit the VMEM budget at this n."""
+    n_pad = _round_up(max(n, 1), 8)
+    bp = min(512, _round_up(max(p, 1), 128))
+    while bp > 128 and 2 * n_pad * bp * dtype_bytes > FUSED_VMEM_BUDGET_BYTES:
+        bp //= 2
+    return bp
+
+
+def _chain_suffix_kernel(x_ref, s_ref, tot_ref, *, bp: int):
+    i = pl.program_id(0)        # i-th tile from the RIGHT (index map flips)
+
+    @pl.when(i == 0)
+    def _init():
+        tot_ref[...] = jnp.zeros_like(tot_ref)
+
+    x = x_ref[...]              # (n_pad, bp)
+    carry = tot_ref[...]        # (n_pad,) suffix total of all tiles right
+
+    def fold(jj, state):
+        acc, out = state
+        l = bp - 1 - jj
+        acc = x[:, l] + acc     # ONE IEEE add per column: exact right fold
+        out = jax.lax.dynamic_update_index_in_dim(out, acc, l, 1)
+        return acc, out
+
+    acc, out = jax.lax.fori_loop(0, bp, fold, (carry, jnp.zeros_like(x)))
+    s_ref[...] = out
+    tot_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "interpret"))
+def chain_suffix_sums_pallas(X, *, bp: int | None = None,
+                             interpret: bool | None = None):
+    """Suffix sums S[:, v] = sum_{u >= v} X[:, u] of the design columns.
+
+    Computation runs in X.dtype (f32 on TPU, f64 under the x64
+    interpreter); the fold order matches the dense numpy reference exactly
+    (see the module docstring), so the parity tests compare bitwise.
+    """
+    n, p = X.shape
+    dt = X.dtype
+    if bp is None:
+        bp = autotune_chain_block(n, p, dtype_bytes=dt.itemsize)
+    if interpret is None:
+        interpret = default_interpret()
+    n_pad = -n % 8
+    p_pad = -p % bp
+    # rows pad with zeros (sliced off); columns pad on the RIGHT with
+    # zeros — a zero column leaves the right fold bitwise unchanged
+    Xp = jnp.pad(X, ((0, n_pad), (0, p_pad)))
+    np_, pp = Xp.shape
+    p_blocks = pp // bp
+    kernel = functools.partial(_chain_suffix_kernel, bp=bp)
+    S, _ = pl.pallas_call(
+        kernel,
+        grid=(p_blocks,),
+        in_specs=[
+            # visit tiles right-to-left so the carry always holds the
+            # completed suffix of everything to the right
+            pl.BlockSpec((np_, bp), lambda i: (0, p_blocks - 1 - i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((np_, bp), lambda i: (0, p_blocks - 1 - i)),
+            pl.BlockSpec((np_,), lambda i: (0,)),   # carry (revisited)
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, pp), dt),    # S
+            jax.ShapeDtypeStruct((np_,), dt),       # running total
+        ],
+        interpret=interpret,
+    )(Xp)
+    return S[:n, :p]
+
+
+def chain_suffix_sums_ref(X):
+    """Dense jnp reference: the same exact right fold, no tiling."""
+    X = jnp.asarray(X)
+    n, p = X.shape
+
+    def fold(jj, S):
+        v = p - 2 - jj
+        return S.at[:, v].set(X[:, v] + S[:, v + 1])
+
+    S0 = jnp.zeros_like(X).at[:, p - 1].set(X[:, p - 1])
+    return jax.lax.fori_loop(0, p - 1, fold, S0)

@@ -12,6 +12,9 @@ import jax
 from repro.kernels.cm.cm import (CM_VMEM_BUDGET_BYTES, cm_burst_pallas,
                                  cm_epochs_pallas, cm_vmem_ok)
 from repro.kernels.cm.ref import cm_epochs_ref
+from repro.kernels.fused.fused import (autotune_chain_block,
+                                       chain_suffix_sums_pallas,
+                                       chain_suffix_sums_ref)
 from repro.kernels.screen.ref import (screen_fused_ref, screen_scores_ref,
                                       ub_histogram_ref)
 from repro.kernels.screen.screen import (autotune_screen_blocks,
@@ -53,15 +56,24 @@ def cm_epochs(A, y, beta, col_sq, mask, lam, *, n_epochs=1,
                             n_epochs=n_epochs, interpret=interpret)
 
 
-def cm_burst(A, y, beta, col_sq, mask, order, lam, n_epochs, count, *,
-             loss_name="least_squares", interpret: bool | None = None):
+def cm_burst(A, y, beta, col_sq, mask, order, lam, n_epochs, count,
+             pen=None, *, loss_name="least_squares",
+             interpret: bool | None = None):
     """Fused CM burst + dual point + duality gap (general smooth losses)."""
     return cm_burst_pallas(A, y, beta, col_sq, mask, order, lam, n_epochs,
-                           count, loss_name=loss_name, interpret=interpret)
+                           count, pen=pen, loss_name=loss_name,
+                           interpret=interpret)
+
+
+def chain_suffix_sums(X, *, bp=None, interpret: bool | None = None):
+    """Chain fused-LASSO column transform (suffix sums of design columns)."""
+    return chain_suffix_sums_pallas(X, bp=bp, interpret=interpret)
 
 
 __all__ = ["screen_scores", "screen_fused", "ub_histogram", "cm_epochs",
            "cm_burst", "cm_burst_pallas", "cm_vmem_ok",
+           "chain_suffix_sums", "chain_suffix_sums_pallas",
+           "chain_suffix_sums_ref", "autotune_chain_block",
            "CM_VMEM_BUDGET_BYTES",
            "screen_scores_ref", "screen_fused_ref", "ub_histogram_ref",
            "cm_epochs_ref", "on_tpu", "autotune_screen_blocks",
