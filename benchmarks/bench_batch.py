@@ -1,0 +1,163 @@
+"""Batch-engine benchmarks: one fleet compilation vs sequential solves.
+
+Measures the serving-engine economics of ``core/batch.py`` (DESIGN.md §8):
+``saif_batch`` at B=16 against 16 sequential warm ``saif`` calls on the
+CI shape, across the fleet screen modes (default bitwise per-problem
+scans vs the opt-in shared-X ``matmul`` fast path), plus the K-fold
+``cv_path`` against solving every (fold, lambda) cell serially.
+
+Acceptance (asserted):
+  * the fleet runs in exactly ONE ``_saif_batch_jit`` compilation;
+  * >= 2x over 16 sequential warm solves on the 2-core CPU CI.
+
+Why the CPU gate is 2x and not more: with the bitwise-parity contract
+every per-problem active-block stage must execute the literal serial
+computation (lax.map) — batched reductions re-associate and lockstep
+sweeps hit XLA:CPU gather overheads ~30x the serial dynamic-slice steps
+(both measured; see DESIGN.md §8) — so the CPU fleet only amortizes the
+per-solve fixed costs (driver, preprocessing, dispatch, syncs) and the
+shared screening traffic. Measured headroom on the CI shape is ~2.5-2.7x;
+the >= 4x regime belongs to the problem-gridded Pallas kernels on a real
+TPU, where the fleet's bursts share the VMEM-resident design. The JSON
+records both so the trajectory is tracked per PR.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import simulation_data
+from repro.core import (SaifConfig, cv_path, get_loss, saif, saif_batch,
+                        saif_batch_compile_count)
+from repro.core.duality import lambda_max
+
+B_FLEET = 16        # the acceptance fleet size
+MIN_SPEEDUP = 2.0   # CPU-CI acceptance (see module docstring)
+
+
+def _fleet_problem(n, p, b, frac, seed=1):
+    loss = get_loss("least_squares")
+    X, _, _ = simulation_data(n=n, p=p, seed=0)
+    rng = np.random.default_rng(seed)
+    Ys, lams = [], []
+    for _ in range(b):
+        w = np.zeros(p)
+        w[rng.choice(p, 15, replace=False)] = rng.uniform(-1, 1, 15)
+        y = X @ w + rng.normal(0, 1, n)
+        Ys.append(y)
+        lams.append(frac * float(lambda_max(loss, jnp.asarray(X),
+                                            jnp.asarray(y))))
+    return X, np.stack(Ys), lams
+
+
+def _min_of(fn, reps):
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_fleet_rows(full: bool = False):
+    n, p = (100, 2000) if full else (50, 500)
+    frac, reps = 0.8, 4
+    X, Y, lams = _fleet_problem(n, p, B_FLEET, frac)
+    cfg = SaifConfig(eps=1e-6, inner_epochs=3, polish_factor=4,
+                     inner_backend="gram")
+    lam_arr = jnp.asarray(lams)
+
+    def sequential():
+        outs = [saif(X, Y[i], lams[i], cfg) for i in range(B_FLEET)]
+        return outs[-1].beta
+
+    # warm both paths (compiles excluded: the comparison is warm serving)
+    sequential()
+    c0 = saif_batch_compile_count()
+    saif_batch(X, Y, lam_arr, cfg)
+    n_comp = (saif_batch_compile_count() - c0
+              if c0 >= 0 else None)
+    if n_comp is not None:
+        assert n_comp == 1, (
+            f"fleet used {n_comp} _saif_batch_jit compilations (contract: 1)")
+
+    t_seq = _min_of(sequential, reps)
+    rows = []
+    for screen in ("jnp", "matmul"):
+        cfg_f = dataclasses.replace(cfg, screen_backend=screen)
+        saif_batch(X, Y, lam_arr, cfg_f)    # warm this screen mode
+        t_fleet = _min_of(lambda: saif_batch(X, Y, lam_arr, cfg_f).beta,
+                          reps)
+        speedup = t_seq / max(t_fleet, 1e-12)
+        rows.append({
+            "b": B_FLEET, "n": n, "p": p, "lam_frac": frac,
+            "screen": screen, "seq_s": round(t_seq, 4),
+            "fleet_s": round(t_fleet, 4), "speedup": round(speedup, 3),
+            "fleet_compilations": n_comp, "min_speedup": MIN_SPEEDUP,
+        })
+        print(f"[batch] B={B_FLEET} n={n} p={p} screen={screen} "
+              f"seq={t_seq*1e3:.0f}ms fleet={t_fleet*1e3:.0f}ms "
+              f"speedup={speedup:.2f}x (gate {MIN_SPEEDUP}x, compiles="
+              f"{n_comp})")
+    best = max(r["speedup"] for r in rows)
+    assert best >= MIN_SPEEDUP, (
+        f"saif_batch(B={B_FLEET}) reached only {best:.2f}x over sequential "
+        f"warm solves (CPU acceptance {MIN_SPEEDUP}x)")
+    return rows
+
+
+def run_cv_row(full: bool = False):
+    n, p, K, L = (100, 1000, 5, 10) if full else (60, 300, 4, 6)
+    loss = get_loss("least_squares")
+    X, _, _ = simulation_data(n=n, p=p, seed=3)
+    rng = np.random.default_rng(4)
+    w = np.zeros(p)
+    w[rng.choice(p, 12, replace=False)] = rng.uniform(-1, 1, 12)
+    y = X @ w + rng.normal(0, 1, n)
+    lmax = float(lambda_max(loss, jnp.asarray(X), jnp.asarray(y)))
+    lams = np.geomspace(0.8 * lmax, 0.1 * lmax, L)
+    cfg = SaifConfig(eps=1e-6, inner_epochs=3, polish_factor=4,
+                     inner_backend="gram")
+
+    from repro.core import kfold_weights
+    W = np.asarray(kfold_weights(n, K, seed=0))
+
+    def sequential_cells():
+        outs = []
+        for lam in lams:
+            for k in range(K):
+                tr = W[k] > 0
+                outs.append(saif(X[tr], y[tr], float(lam),
+                                 dataclasses.replace(cfg,
+                                                     use_seq_ball=False)))
+        return outs[-1].beta
+
+    sequential_cells()
+    res = cv_path(X, y, lams, n_folds=K, config=cfg, refit=False)
+    t_cells = _min_of(sequential_cells, 2)
+    t_cv = _min_of(lambda: cv_path(X, y, lams, n_folds=K, config=cfg,
+                                   refit=False).cv_mean, 2)
+    row = {
+        "k_folds": K, "n_lambda": L, "n": n, "p": p,
+        "cells_seq_s": round(t_cells, 4), "cv_path_s": round(t_cv, 4),
+        "speedup": round(t_cells / max(t_cv, 1e-12), 3),
+        "cv_compilations": res.n_compilations,
+        "best_lam_frac": round(float(res.best_lam) / lmax, 4),
+    }
+    print(f"[batch] cv_path {K}x{L} cells={t_cells*1e3:.0f}ms "
+          f"cv={t_cv*1e3:.0f}ms speedup={row['speedup']:.2f}x "
+          f"compiles={res.n_compilations}")
+    return [row]
+
+
+def run(full: bool = False):
+    return run_fleet_rows(full=full) + run_cv_row(full=full)
+
+
+if __name__ == "__main__":
+    run()

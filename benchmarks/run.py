@@ -42,14 +42,15 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: runtime,trajectory,heatmap,logistic,"
-                         "path,fused,complexity,inner")
+                         "path,fused,complexity,inner,batch,baselines")
     ap.add_argument("--no-json", action="store_true",
                     help="skip the BENCH_<suite>.json artifacts")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_complexity, bench_fused, bench_heatmap,
-                            bench_inner, bench_logistic, bench_path,
-                            bench_runtime, bench_trajectory)
+    from benchmarks import (bench_baselines, bench_batch, bench_complexity,
+                            bench_fused, bench_heatmap, bench_inner,
+                            bench_logistic, bench_path, bench_runtime,
+                            bench_trajectory)
 
     suites = {
         "runtime": bench_runtime,        # Fig 2
@@ -60,6 +61,8 @@ def main(argv=None):
         "fused": bench_fused,            # Fig 7
         "complexity": bench_complexity,  # Thm 4/5
         "inner": bench_inner,            # inner-backend epoch cost (PR 2)
+        "batch": bench_batch,            # fleet engine vs sequential (PR 4)
+        "baselines": bench_baselines,    # Sec 5 "50x vs dynamic" tracking
     }
     if args.only:
         keep = set(args.only.split(","))
@@ -70,7 +73,8 @@ def main(argv=None):
         rows = mod.run(full=args.full)
         for i, row in enumerate(rows):
             t = (row.get("saif_s") or row.get("saif_path_s")
-                 or row.get("engine_s") or row.get("epoch_s") or 0.0)
+                 or row.get("engine_s") or row.get("epoch_s")
+                 or row.get("fleet_s") or row.get("cv_path_s") or 0.0)
             derived = ";".join(f"{k}={v}" for k, v in row.items())
             print(f"{name}[{i}],{t*1e6:.1f},{derived}")
         if not args.no_json:

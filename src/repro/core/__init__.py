@@ -3,12 +3,17 @@
 Public API:
   saif, SaifConfig, SaifResult           — Algorithm 1/2
   saif_path                              — warm-started lambda path (Sec 5.3)
+  saif_batch                             — lockstep fleet solves (DESIGN §8)
+  cv_path                                — K-fold CV lambda selection (§8)
   dynamic_screening                      — gap-safe dynamic baseline
   sequential_path                        — DPP-style sequential baseline
   homotopy_path                          — unsafe strong-rule baseline (Table 1)
   saif_fused / fused_baseline_cm         — tree fused LASSO (Sec 4)
   solve_lasso_cm                         — unscreened oracle solver
 """
+from repro.core.batch import (prepare_fleet, saif_batch,
+                              saif_batch_compile_count)
+from repro.core.cv import CVPathResult, cv_path, kfold_weights
 from repro.core.cm import gram_epochs, solve_lasso_cm, soft_threshold
 from repro.core.dynamic import DynConfig, dynamic_screening
 from repro.core.group import (GroupSaifConfig, group_lambda_max, group_saif,
@@ -38,6 +43,8 @@ from repro.core.sequential import SeqConfig, sequential_path
 __all__ = [
     "saif", "SaifConfig", "SaifResult", "saif_path", "saif_path_naive",
     "SaifPathResult", "PathState", "prepare_path", "lambda_grid",
+    "saif_batch", "saif_batch_compile_count", "prepare_fleet",
+    "cv_path", "CVPathResult", "kfold_weights",
     "saif_jit_compile_count", "ScreenFn", "ScreenOut", "make_screen_jnp",
     "make_screen_pallas", "resolve_backend",
     "InnerBackend", "InnerCarry", "InnerOut", "make_inner_jnp",

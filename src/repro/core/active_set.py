@@ -180,3 +180,43 @@ def scatter_beta(aset: ActiveSet, p: int) -> jax.Array:
     out = jnp.zeros((p,), aset.beta.dtype)
     vals = jnp.where(aset.mask, aset.beta, 0.0)
     return out.at[jnp.where(aset.mask, aset.idx, p)].add(vals, mode="drop")
+
+
+# --------------------------------------------------------------------------
+# batched (problem-axis) views — the fleet engine (core/batch.py, DESIGN §8)
+# --------------------------------------------------------------------------
+# A *fleet* active set is the same ActiveSet NamedTuple with a leading
+# problem axis B on every field: idx/mask/beta/order (B, k_max),
+# in_active (B, p), overflowed/count (B,). All mutations are per-problem
+# independent (cumsum/scatter over the slot axis only), so the batched
+# forms are vmaps of the serial ones — each problem's slot arithmetic is
+# bit-for-bit the serial computation, which is what the batch-parity
+# acceptance (bitwise-identical active sets vs B serial solves) rests on.
+
+def init_active_set_batch(p: int, k_max: int, init_idx: jax.Array,
+                          dtype=jnp.float32,
+                          init_beta: jax.Array | None = None,
+                          live_mask: jax.Array | None = None) -> ActiveSet:
+    """Batched slots-mode :func:`init_active_set` (leading problem axis)."""
+    if init_beta is None:
+        init_beta = jnp.zeros(init_idx.shape, dtype)
+    if live_mask is None:
+        raise ValueError("the batched init is slots-mode only: pass "
+                         "(k_max,)-shaped per-problem buffers + live_mask")
+    return jax.vmap(
+        lambda i, b, m: init_active_set(p, k_max, i, dtype, b, m)
+    )(init_idx, init_beta, live_mask)
+
+
+def gather_columns_batch(X: jax.Array, aset: ActiveSet) -> jax.Array:
+    """(B, n, k_max) active blocks from a shared (n, p) design."""
+    return jax.vmap(gather_columns, in_axes=(None, 0))(X, aset)
+
+
+delete_features_batch = jax.vmap(delete_features)
+add_features_batch = jax.vmap(add_features)
+
+
+def scatter_beta_batch(aset: ActiveSet, p: int) -> jax.Array:
+    """(B, p) full solutions from a fleet active set."""
+    return jax.vmap(scatter_beta, in_axes=(0, None))(aset, p)

@@ -1,0 +1,514 @@
+"""Batch-polymorphic SAIF: one compilation solving a fleet of B problems.
+
+Real traffic arrives as *fleets* of related solves — many responses over a
+shared design, K-fold cross-validation over a lambda grid (the glmnet-style
+workload; see Fercoq et al.'s CV protocol). The serial engine
+(``core/saif.py``) prices Theorem 5's economics — a tiny active block plus
+one O(p) scan — per problem; this module re-prices them per *fleet*:
+
+  * **one compilation** — ``_saif_batch_jit`` is a single hand-batched
+    ``lax.while_loop`` whose every state leaf carries a leading problem
+    axis B. One XLA program drives B lockstep solves; the compile counter
+    (``saif_jit_compile_count``) must move by exactly 1 per fleet.
+  * **amortized fixed costs + shared scans** — the fleet pays ONE host
+    driver, ONE preprocessing pass, ONE dispatch and ONE set of device
+    syncs where B serial calls pay B of each (the dominant term for
+    serving-sized solves), and the screening stage is pluggable per fleet:
+    the default keeps per-problem serial scans (bitwise, and skipped per
+    problem outside its ADD phase), while the opt-in ``matmul`` shared-X
+    path and the problem-gridded Pallas kernels read the O(n p) design
+    once per outer step for the entire fleet.
+  * **per-problem masks, not a barrier** — ``lam``/``eps``/``h_cap``/
+    ``h~``/``delta`` are traced (B,) vectors; convergence, the ADD ramp
+    and capacity overflow are all per-problem. A finished problem is
+    *frozen*: its state is select-masked, its inner burst runs zero
+    epochs, and it never forces extra work on stragglers. This is why the
+    loop is hand-batched — ``vmap`` over the serial while_loop would
+    re-run every problem's full body until the whole fleet converges and
+    could not give per-problem burst budgets.
+
+The batching discipline (DESIGN.md §8): every float path of the default
+configuration — bursts, dual points, gaps, balls, DEL certificates, the
+screening scans, even the c0 preprocessing — runs as a ``lax.map`` of the
+*literal serial code* over the fleet, under per-problem liveness conds.
+Batch-dim float contractions provably re-associate on XLA:CPU (a batched
+dot is not bitwise the serial dot, and near an ADD-stop boundary an ulp
+flips a decision), so mapping the serial bodies is what makes fleet
+supports, coefficients, gaps and traces byte-for-byte those of B serial
+solves — asserted across every screen x inner backend combination in
+``tests/test_batch_parity.py``. The explicitly opt-in deviations are the
+``matmul`` screen and the sharded collective, which trade ulp-grade score
+equality for fleet-shared memory traffic.
+
+Frontends: :func:`saif_batch` (B responses, one X, per-problem lambdas)
+here; :func:`repro.core.cv.cv_path` (K-fold CV fleets via the
+sample-weight trick); ``repro.distributed.saif_sharded.
+saif_batch_distributed`` (the §5 collective serving all B problems per
+wire round). DESIGN.md §8 documents the layer.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import active_set as aset_lib
+from repro.core.duality import (gap_ball, gap_precision_floor,
+                                intersect_balls, sequential_ball)
+from repro.core.inner_backend import (InnerCarry, cold_inner_carry_batch,
+                                      make_batch_inner)
+from repro.core.losses import get_loss
+from repro.core.saif import (SaifConfig, SaifResult, add_batch_size_static,
+                             default_capacity)
+from repro.core.screen_backend import (BatchScreenFn, ScreenOut,
+                                       make_batch_screen,
+                                       resolve_batch_screen)
+
+
+class _BatchState(NamedTuple):
+    aset: aset_lib.ActiveSet   # every field with leading problem axis B
+    z: jax.Array        # (B, n)
+    gap: jax.Array      # (B,)
+    delta: jax.Array    # (B,)
+    is_add: jax.Array   # (B,) bool
+    stop: jax.Array     # (B,) bool
+    t: jax.Array        # (B,) int32 per-problem outer counters
+    inner: InnerCarry   # batched inner carry
+    trace_n_active: jax.Array   # (B, max_outer)
+    trace_gap: jax.Array
+    trace_dual: jax.Array
+
+
+def _freeze_select(live: jax.Array, old, new):
+    """Per-problem state freeze: keep ``old`` wherever ``live`` is False."""
+    def sel(o, n):
+        m = live.reshape(live.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree.map(sel, old, new)
+
+
+@partial(jax.jit, static_argnames=("loss_name", "h", "k_max",
+                                   "inner_epochs", "polish_factor",
+                                   "max_outer", "use_seq_ball",
+                                   "screen_backend", "inner_backend",
+                                   "has_weights", "screen_fn"))
+def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
+                    init_beta, init_mask, init_G, init_rho, init_gidx,
+                    h_tilde, h_cap, *, loss_name: str, h: int, k_max: int,
+                    inner_epochs: int, polish_factor: int, max_outer: int,
+                    use_seq_ball: bool, screen_backend: str = "jnp",
+                    inner_backend: str = "jnp", has_weights: bool = False,
+                    screen_fn: Optional[BatchScreenFn] = None
+                    ) -> SaifResult:
+    """The fleet while_loop. Mirrors ``_saif_jit`` body-for-body with a
+    leading problem axis; see the module docstring for the batching rules.
+    ``lam``/``eps``/``delta0``/``h_tilde``/``h_cap`` are (B,) traced
+    vectors, ``col_norm``/``c0`` fleet (B, p) matrices, ``W`` the sample
+    weights ((B, n); a (1, 1) placeholder when ``has_weights`` is False).
+    Returns a :class:`SaifResult` whose every field has a leading B.
+    """
+    loss = get_loss(loss_name)
+    n, p = X.shape
+    b = Y.shape[0]
+    barange = jnp.arange(b)
+    lam = jnp.asarray(lam, X.dtype)
+    weights = W if has_weights else None
+    if screen_fn is not None:
+        screen = screen_fn
+    else:
+        screen = make_batch_screen(screen_backend, X, col_norm, h)
+    inner = make_batch_inner(inner_backend, loss, X, Y, col_norm, h,
+                             weights=weights)
+
+    aset0 = aset_lib.init_active_set_batch(p, k_max, init_idx, X.dtype,
+                                           init_beta, live_mask=init_mask)
+    carry_in = InnerCarry(G=init_G, rho=init_rho, gidx=init_gidx)
+    inner0 = inner.init(aset0, carry_in,
+                        aset_lib.gather_columns_batch(X, aset0))
+    trace0 = jnp.full((b, max_outer), -1.0, X.dtype)
+    state0 = _BatchState(
+        aset=aset0, z=jnp.zeros_like(Y),
+        gap=jnp.full((b,), jnp.inf, X.dtype),
+        delta=jnp.asarray(delta0, X.dtype),
+        is_add=jnp.ones((b,), bool), stop=jnp.zeros((b,), bool),
+        t=jnp.zeros((b,), jnp.int32), inner=inner0,
+        trace_n_active=trace0, trace_gap=trace0, trace_dual=trace0)
+
+    def cond(s: _BatchState):
+        return jnp.any(~s.stop & (s.t < max_outer))
+
+    def _certify(y_b, w_b, theta_b, gap_b, lam_b, eps_b, delta_b,
+                 is_add_b, Xa_b, idx_b, mask_b, cn_b, c0_b):
+        """Serial ball / stop / DEL certificates for one problem — the
+        exact serial body arithmetic (module docstring: batch-dim
+        reductions re-associate, serial maps don't)."""
+        ball = gap_ball(loss, theta_b, gap_b, lam_b,
+                        floor=gap_precision_floor(theta_b, lam_b))
+        if use_seq_ball:
+            c0_active = jnp.where(mask_b, jnp.take(c0_b, idx_b), -jnp.inf)
+            lam0t = jnp.maximum(jnp.max(c0_active), lam_b * (1 + 1e-12))
+            g0_b = loss.grad(jnp.zeros_like(y_b), y_b)
+            theta0t = -g0_b / lam0t
+            b_seq = sequential_ball(loss, y_b, theta0t, lam0t, lam_b)
+            ball = intersect_balls(b_seq, ball)
+        stop_now_b = (~is_add_b) & (gap_b <= eps_b)
+        corr_act = jnp.abs(Xa_b.T @ ball.center)
+        norm_act = jnp.where(mask_b, jnp.take(cn_b, idx_b), 0.0)
+        del_row = mask_b & (corr_act + norm_act * ball.radius < 1.0)
+        conj = loss.conj(-lam_b * theta_b, y_b)
+        if w_b is not None:
+            conj = w_b * conj
+        dual_val = -jnp.sum(conj)
+        return (ball.center, delta_b * ball.radius, stop_now_b, del_row,
+                dual_val)
+
+    def body(s: _BatchState) -> _BatchState:
+        live = ~s.stop & (s.t < max_outer)       # (B,) frozen problems coast
+        aset = s.aset
+        n_ep = jnp.where(s.is_add, inner_epochs,
+                         inner_epochs * polish_factor)
+        n_ep = jnp.where(live, n_ep, 0).astype(jnp.int32)
+
+        if inner.make_one is not None:
+            # --- map-fused path: ONE lax.map owns gather + refresh +
+            # burst + certificates per problem, and a per-problem liveness
+            # cond skips the whole body — a frozen problem costs nothing.
+            def solve_one(args):
+                if has_weights:
+                    (live_b, y_b, w_b, lam_b, eps_b, nep_b, delta_b,
+                     is_add_b, z_b, gap_b, carry_b, aset_b, cn_b,
+                     c0_b) = args
+                else:
+                    (live_b, y_b, lam_b, eps_b, nep_b, delta_b,
+                     is_add_b, z_b, gap_b, carry_b, aset_b, cn_b,
+                     c0_b) = args
+                    w_b = None
+
+                def live_branch(_):
+                    Xa_b = aset_lib.gather_columns(X, aset_b)
+                    be = inner.make_one(y_b, w_b)
+                    carry2 = be.refresh(carry_b, aset_b, Xa_b)
+                    out = be.run(carry2, aset_b, Xa_b, lam_b, nep_b)
+                    cert = _certify(y_b, w_b, out.theta,
+                                    jnp.asarray(out.gap, X.dtype), lam_b,
+                                    eps_b, delta_b, is_add_b, Xa_b,
+                                    aset_b.idx, aset_b.mask, cn_b, c0_b)
+                    return (out.beta, out.z,
+                            jnp.asarray(out.gap, X.dtype), carry2) + cert
+
+                def frozen_branch(_):
+                    k = aset_b.beta.shape[0]
+                    return (aset_b.beta, z_b, gap_b, carry_b,
+                            jnp.zeros_like(z_b),
+                            jnp.zeros((), X.dtype),
+                            jnp.asarray(True),
+                            jnp.zeros((k,), bool),
+                            jnp.zeros((), X.dtype))
+
+                return jax.lax.cond(live_b, live_branch, frozen_branch,
+                                    None)
+
+            xs = (live, Y, lam, eps, n_ep, s.delta, s.is_add, s.z, s.gap,
+                  s.inner, aset, col_norm, c0)
+            if has_weights:
+                xs = (live, Y, weights) + xs[2:]
+            (beta, z, gap, inner_carry, theta_c, r_eff, stop_now, del_row,
+             dual_val) = jax.lax.map(solve_one, xs)
+        else:
+            # --- fleet-step path (the pallas problem-gridded kernel): the
+            # backend owns the whole fleet's bursts in one launch, then
+            # the per-problem certificate map runs (liveness-gated,
+            # gathering each live problem's block like the serial body).
+            out, inner_carry = inner.fleet_step(s.inner, aset, lam, n_ep)
+            beta = jnp.where(live[:, None], out.beta, aset.beta)
+            z = jnp.where(live[:, None], out.z, s.z)
+            gap = jnp.where(live, jnp.asarray(out.gap, X.dtype), s.gap)
+            theta = out.theta
+
+            def certify_one(args):
+                if has_weights:
+                    (live_b, y_b, w_b, theta_b, gap_b, lam_b, eps_b,
+                     delta_b, is_add_b, aset_b, cn_b, c0_b) = args
+                else:
+                    (live_b, y_b, theta_b, gap_b, lam_b, eps_b, delta_b,
+                     is_add_b, aset_b, cn_b, c0_b) = args
+                    w_b = None
+
+                def live_branch(_):
+                    Xa_b = aset_lib.gather_columns(X, aset_b)
+                    return _certify(y_b, w_b, theta_b, gap_b, lam_b,
+                                    eps_b, delta_b, is_add_b, Xa_b,
+                                    aset_b.idx, aset_b.mask, cn_b, c0_b)
+
+                def frozen_branch(_):
+                    k = aset_b.mask.shape[0]
+                    return (jnp.zeros_like(theta_b),
+                            jnp.zeros((), X.dtype), jnp.asarray(True),
+                            jnp.zeros((k,), bool), jnp.zeros((), X.dtype))
+
+                return jax.lax.cond(live_b, live_branch, frozen_branch,
+                                    None)
+
+            xs = (live, Y, theta, gap, lam, eps, s.delta, s.is_add,
+                  aset, col_norm, c0)
+            if has_weights:
+                xs = (live, Y, weights) + xs[2:]
+            theta_c, r_eff, stop_now, del_row, dual_val = jax.lax.map(
+                certify_one, xs)
+
+        aset = aset._replace(beta=beta)
+
+        # --- DEL (per-problem gap-safe rule) ------------------------------
+        deleting = live & ~stop_now
+        del_mask = del_row & deleting[:, None]
+        aset = aset_lib.delete_features_batch(aset, del_mask)
+
+        # --- ADD phase (skipped fleet-wide once every problem is done) ----
+        do_add = live & s.is_add & ~stop_now
+
+        def do_add_phase(args):
+            aset, delta, is_add = args
+            out: ScreenOut = screen(theta_c, r_eff, aset.in_active, do_add)
+            add_done = out.max_ub < 1.0                       # (B,)
+            ranks = jnp.arange(h)
+            v_count = jnp.maximum(out.cand_ge - 1 - ranks[None, :], 0)
+            keep = ((v_count < h_tilde[:, None]) &
+                    (ranks[None, :] < h_cap[:, None]) &
+                    jnp.isfinite(out.cand_score))
+            keep = jnp.cumprod(keep.astype(jnp.int32), axis=1).astype(bool)
+            # progress guarantee, per problem (DESIGN.md §2)
+            stuck = gap <= 100.0 * eps
+            keep = keep.at[:, 0].set(
+                keep[:, 0] | (stuck & jnp.isfinite(out.cand_score[:, 0])))
+            adding = do_add & ~add_done
+            aset = aset_lib.add_features_batch(aset, out.cand_idx,
+                                               keep & adding[:, None])
+            done = do_add & add_done
+            grown = jnp.minimum(10.0 * delta, 1.0)
+            new_delta = jnp.where(done & (delta < 1.0), grown, delta)
+            new_is_add = jnp.where(done & (delta >= 1.0), False, is_add)
+            return aset, new_delta, new_is_add
+
+        aset, delta, is_add = jax.lax.cond(
+            jnp.any(do_add), do_add_phase, lambda a: a,
+            (aset, s.delta, s.is_add))
+
+        n_act = aset.count.astype(X.dtype)
+        new = _BatchState(
+            aset=aset, z=z, gap=gap, delta=delta, is_add=is_add,
+            stop=stop_now, t=s.t + 1, inner=inner_carry,
+            trace_n_active=s.trace_n_active.at[barange, s.t].set(
+                n_act, mode="drop"),
+            trace_gap=s.trace_gap.at[barange, s.t].set(gap, mode="drop"),
+            trace_dual=s.trace_dual.at[barange, s.t].set(
+                dual_val, mode="drop"))
+        return _freeze_select(live, s, new)
+
+    final = jax.lax.while_loop(cond, body, state0)
+    beta_full = aset_lib.scatter_beta_batch(final.aset, p)
+    return SaifResult(beta=beta_full, gap=final.gap, n_outer=final.t,
+                      n_active=final.aset.count,
+                      overflowed=final.aset.overflowed,
+                      trace_n_active=final.trace_n_active,
+                      trace_gap=final.trace_gap,
+                      trace_dual=final.trace_dual,
+                      active_idx=final.aset.idx,
+                      active_mask=final.aset.mask,
+                      inner=final.inner)
+
+
+def saif_batch_compile_count() -> int:
+    """Distinct ``_saif_batch_jit`` compilations alive in this process."""
+    try:
+        return int(_saif_batch_jit._cache_size())
+    except Exception:       # pragma: no cover - jit internals moved
+        return -1
+
+
+class FleetPrep(NamedTuple):
+    """One-time per-fleet preprocessing (one host sync for the h formula).
+    ``c0_max`` doubles as the per-problem lambda_max: for the penalized-
+    null model, lambda_max = max_i |x_i^T f'(null)| = max(c0) exactly."""
+    X: jax.Array            # (n, p) shared design
+    Y: jax.Array            # (B, n)
+    W: Optional[jax.Array]  # (B, n) sample weights or None
+    c0: jax.Array           # (B, p) per-problem |X^T f'(null)|
+    col_norm: jax.Array     # (B, p) per-problem column norms
+    c0_max: list            # B host floats (= per-problem lambda_max)
+    c0_median: list
+
+
+def prepare_fleet(X, Y, config: SaifConfig, weights=None) -> FleetPrep:
+    """Per-problem null gradients, c0, column norms + ONE host sync of the
+    c0 statistics the (host-side) h formula needs."""
+    loss = get_loss(config.loss)
+    X = jnp.asarray(X)
+    Y = jnp.asarray(Y)
+    if Y.ndim == 1:
+        Y = Y[None, :]
+    W = None if weights is None else jnp.asarray(weights, X.dtype)
+    G0 = loss.grad(jnp.zeros_like(Y), Y)
+    if W is not None:
+        G0 = W * G0
+    # per-problem c0 scans as B EAGER serial matvecs — the literal op the
+    # serial driver's null_gradient dispatches, so lambda_max, delta0, the
+    # cold-start top-h and the seq-ball lam0t are bitwise per problem (a
+    # (B, n) x (n, p) matmul — or even a lax.map'd matvec, which compiles
+    # under scan instead of dispatching the eager dot executable —
+    # re-associates the reduction at the ulp level; same rule as the §8
+    # screen paths). One-time prep cost, off the hot path.
+    c0 = jnp.stack([jnp.abs(X.T @ G0[i]) for i in range(Y.shape[0])])
+    if W is None:
+        col_norm = jnp.broadcast_to(jnp.linalg.norm(X, axis=0),
+                                    c0.shape)
+    else:
+        col_norm = jnp.sqrt(W @ (X * X))                   # (B, p)
+    c0_max, c0_med = jax.device_get(
+        (jnp.max(c0, axis=1), jnp.median(c0, axis=1)))
+    return FleetPrep(X=X, Y=Y, W=W, c0=c0, col_norm=col_norm,
+                     c0_max=[float(v) for v in c0_max],
+                     c0_median=[float(v) for v in c0_med])
+
+
+def fleet_batch_sizes(prep: FleetPrep, lams, config: SaifConfig):
+    """Per-problem h values + the fleet-static maximum (pow2-bucketed by
+    ``add_batch_size_static`` already)."""
+    p = prep.X.shape[1]
+    hs = [add_batch_size_static(config.c, float(lam), mx, md, p)
+          for lam, mx, md in zip(lams, prep.c0_max, prep.c0_median)]
+    return hs, (max(hs) if hs else 1)
+
+
+def initial_support_batch(c0: jax.Array, hs, k_max: int, p: int,
+                          dtype=jnp.float32):
+    """Batched cold start: per-problem top-h_b features by c0.
+
+    Per-problem counts ride on the static fleet maximum via top_k's prefix
+    property (top_k(x, m)[: j] == top_k(x, j) for j <= m, ties to the
+    lowest id), so every problem's initial slots are bitwise the serial
+    :func:`repro.core.saif.initial_support` layout.
+    """
+    b = c0.shape[0]
+    n_cap = min(max(hs), k_max, p)
+    top = jax.lax.top_k(c0, n_cap)[1].astype(jnp.int32)    # (B, n_cap)
+    n_init = jnp.asarray([min(h_b, k_max, p) for h_b in hs], jnp.int32)
+    ranks = jnp.arange(k_max)
+    init_idx = jnp.zeros((b, k_max), jnp.int32).at[:, :n_cap].set(top)
+    mask = ranks[None, :] < n_init[:, None]
+    init_idx = jnp.where(mask, init_idx, 0)
+    return init_idx, jnp.zeros((b, k_max), dtype), mask
+
+
+def _delta0s(prep: FleetPrep, lams, config: SaifConfig):
+    if config.delta0 is not None:
+        return [float(config.delta0)] * len(lams)
+    return [min(max(float(lam) / mx, 1e-3), 1.0)
+            for lam, mx in zip(lams, prep.c0_max)]
+
+
+def resolve_batch_inner(config: SaifConfig, n: int, k_max: int,
+                        b: int) -> str:
+    """Fleet inner-backend policy: the serial policy with the
+    double-buffered fleet VMEM budget gating the pallas kernel."""
+    from repro.kernels.cm.cm import cm_vmem_ok
+
+    name, loss_name = config.inner_backend, config.loss
+    from repro.core.inner_backend import GRAM_CROSSOVER
+    if name == "auto":
+        if loss_name == "least_squares" and GRAM_CROSSOVER * n >= k_max:
+            return "gram"
+        if jax.default_backend() == "tpu" and cm_vmem_ok(n, k_max, batch=b):
+            return "pallas"
+        return "jnp"
+    if name not in ("jnp", "gram", "pallas"):
+        raise ValueError(f"unknown inner backend {name!r}")
+    if name == "gram" and loss_name != "least_squares":
+        raise ValueError("inner_backend='gram' requires "
+                         "loss='least_squares'")
+    if name == "pallas" and not cm_vmem_ok(n, k_max, batch=b):
+        raise ValueError(
+            f"inner_backend='pallas': a fleet of {b} {n}x{k_max} active "
+            f"blocks exceeds the double-buffered VMEM budget (DESIGN.md "
+            f"§8); shrink k_max or use 'gram'/'jnp'")
+    return name
+
+
+def saif_batch(X, Y, lam, config: SaifConfig = SaifConfig(),
+               weights=None,
+               screen_fn: Optional[BatchScreenFn] = None) -> SaifResult:
+    """Solve a fleet of B LASSO problems over a shared design in lockstep.
+
+    Args:
+      X:       (n, p) shared design.
+      Y:       (B, n) per-problem responses (a (n,) vector is a fleet of 1).
+      lam:     scalar or (B,) per-problem regularization.
+      weights: optional (B, n) per-problem sample weights (binary row
+               masks = the K-fold CV trick, DESIGN.md §8; disables the
+               Thm-2 sequential ball exactly like the fused subsystem).
+      screen_fn: custom batched screening backend (e.g. the sharded
+               collective from ``repro.distributed.saif_sharded``).
+
+    Returns a :class:`~repro.core.saif.SaifResult` whose every field has a
+    leading problem axis. The whole fleet runs in ONE ``_saif_batch_jit``
+    compilation (plus the rare elastic-capacity recompile, exactly like
+    the serial driver); supports and coefficients are bitwise those of B
+    serial :func:`~repro.core.saif.saif` calls.
+    """
+    if config.unpen_idx is not None:
+        raise NotImplementedError(
+            "saif_batch solves plain-LASSO fleets; the fused unpenalized "
+            "slot is serial-only for now (DESIGN.md §8)")
+    prep = prepare_fleet(X, Y, config, weights=weights)
+    X, Y, W = prep.X, prep.Y, prep.W
+    n, p = X.shape
+    b = Y.shape[0]
+    lam_arr = jnp.broadcast_to(
+        jnp.asarray(lam, X.dtype).reshape(-1), (b,))
+    lams = [float(v) for v in jax.device_get(lam_arr)]
+    use_seq = config.use_seq_ball and W is None
+    backend = resolve_batch_screen(config.screen_backend)
+
+    hs, h = fleet_batch_sizes(prep, lams, config)
+    h_tilde = jnp.asarray(
+        [max(int(math.ceil(config.zeta * h_b)), 1) for h_b in hs],
+        jnp.int32)
+    h_cap = jnp.asarray(hs, jnp.int32)
+    k_max = config.k_max or default_capacity(h, p)
+    delta0 = jnp.asarray(_delta0s(prep, lams, config), X.dtype)
+    W_arg = W if W is not None else jnp.zeros((1, 1), X.dtype)
+
+    # cold start computed ONCE at the original capacity: like the serial
+    # driver, elastic growth pads the buffers but keeps the original
+    # (possibly capacity-truncated) initial support, so a re-entered fleet
+    # reproduces the serial overflow-recovery trajectories bitwise
+    init_idx, init_beta, init_mask = initial_support_batch(
+        prep.c0, hs, k_max, p, X.dtype)
+    while True:
+        pad = k_max - init_idx.shape[1]
+        if pad > 0:
+            init_idx = jnp.pad(init_idx, ((0, 0), (0, pad)))
+            init_beta = jnp.pad(init_beta, ((0, 0), (0, pad)))
+            init_mask = jnp.pad(init_mask, ((0, 0), (0, pad)))
+        inner = resolve_batch_inner(config, n, k_max, b)
+        carry = cold_inner_carry_batch(b, k_max, X.dtype, backend=inner)
+        res = _saif_batch_jit(
+            X, Y, W_arg, prep.col_norm, prep.c0, lam_arr,
+            jnp.full((b,), config.eps, X.dtype), delta0,
+            init_idx, init_beta, init_mask,
+            carry.G, carry.rho, carry.gidx, h_tilde, h_cap,
+            loss_name=config.loss, h=h, k_max=k_max,
+            inner_epochs=config.inner_epochs,
+            polish_factor=config.polish_factor,
+            max_outer=config.max_outer, use_seq_ball=use_seq,
+            screen_backend=backend, inner_backend=inner,
+            has_weights=W is not None, screen_fn=screen_fn)
+        # ONE host sync for the whole fleet's overflow flags; elastic
+        # growth re-enters cold at doubled capacity (per-problem results
+        # are capacity-invariant, so non-overflowing problems reproduce
+        # their previous answers bitwise)
+        if not bool(jnp.any(res.overflowed)) or k_max >= p:
+            return res
+        k_max = min(2 * k_max, p)

@@ -35,17 +35,27 @@ def soft_threshold(x: jax.Array, t: jax.Array) -> jax.Array:
 def _coordinate_step(loss: Loss, Xa: jax.Array, y: jax.Array,
                      mask: jax.Array, lam: jax.Array, col_sq: jax.Array,
                      pen: jax.Array | None,
-                     j: jax.Array, beta: jax.Array, z: jax.Array
+                     j: jax.Array, beta: jax.Array, z: jax.Array,
+                     sample_w: jax.Array | None = None
                      ) -> Tuple[jax.Array, jax.Array]:
     """One prox coordinate update of slot ``j`` (shared epoch body).
 
     ``pen`` (optional, (k,)) is the per-slot l1 weight: 0 on an unpenalized
     slot (the threshold vanishes and the step is the exact/prox-Newton
     unconstrained minimizer), 1 elsewhere.
+
+    ``sample_w`` (optional, (n,)) is the per-SAMPLE weight of the weighted
+    loss sum_i w_i f(z_i, y_i) — the K-fold CV row-mask trick (DESIGN.md
+    §8): the gradient picks up the elementwise weight while z and the
+    design column stay unweighted, so X is shared across a CV fleet. The
+    caller must pass a matching weighted ``col_sq`` (sum_i w_i x_ij^2).
     """
     xj = Xa[:, j]
     lj = jnp.maximum(loss.smoothness * col_sq[j], 1e-30)
-    g = jnp.dot(xj, loss.grad(z, y))
+    g_vec = loss.grad(z, y)
+    if sample_w is not None:
+        g_vec = sample_w * g_vec
+    g = jnp.dot(xj, g_vec)
     lam_j = lam if pen is None else lam * pen[j]
     bj_new = soft_threshold(beta[j] - g / lj, lam_j / lj)
     bj_new = jnp.where(mask[j], bj_new, 0.0)
@@ -92,15 +102,20 @@ def cm_epochs_compact(loss: Loss, Xa: jax.Array, y: jax.Array,
                       beta: jax.Array, z: jax.Array, mask: jax.Array,
                       lam: jax.Array, order: jax.Array, count: jax.Array,
                       n_epochs: jax.Array,
-                      pen: jax.Array | None = None
+                      pen: jax.Array | None = None,
+                      sample_w: jax.Array | None = None
                       ) -> Tuple[jax.Array, jax.Array]:
     """``n_epochs`` compact sweeps (n_epochs may be traced — the solver
-    batches a longer polish burst through the same compiled epoch)."""
-    col_sq = jnp.sum(Xa * Xa, axis=0)   # hoisted out of the epoch loop
+    batches a longer polish burst through the same compiled epoch).
+    ``sample_w`` weights the loss per sample (CV fleets, DESIGN.md §8)."""
+    if sample_w is None:
+        col_sq = jnp.sum(Xa * Xa, axis=0)   # hoisted out of the epoch loop
+    else:
+        col_sq = jnp.sum(sample_w[:, None] * Xa * Xa, axis=0)
 
     def step(jj, carry):
         return _coordinate_step(loss, Xa, y, mask, lam, col_sq, pen,
-                                order[jj], *carry)
+                                order[jj], *carry, sample_w=sample_w)
 
     def epoch(_, carry):
         return jax.lax.fori_loop(0, count, step, carry)

@@ -98,16 +98,46 @@ def duality_gap(loss: Loss, Xa: jax.Array, y: jax.Array, beta: jax.Array,
 
 
 def gap_ball(loss: Loss, theta: jax.Array, gap: jax.Array,
-             lam: jax.Array) -> Ball:
+             lam: jax.Array, floor: jax.Array | float = 0.0) -> Ball:
     """Gap-safe ball (Eq. 6 generalized): r^2 = 2*alpha*gap / lam^2.
 
     f is alpha-smooth => f* is (1/alpha)-strongly convex => the dual objective
     is (lam^2/alpha)-strongly concave, giving the radius below. For least
     squares alpha=1 recovers Eq. (6) exactly.
+
+    ``floor`` (optional) lower-bounds the gap before the radius is derived.
+    The computed gap is a *difference* P - D of two near-equal objective
+    values, so it is only accurate to ~eps_machine * |D|; once the
+    sub-problem is solved to machine precision the raw gap underflows to 0
+    (or goes negative) and the radius collapses to exactly 0 — at which
+    point the strict <1 DEL rule and the <1 ADD-stop operate with zero
+    margin and evict/ignore boundary features (|x^T theta*| = 1) on
+    floating-point noise. Passing the gap's own arithmetic-precision scale
+    (see :func:`gap_precision_floor`) restores the honest uncertainty
+    radius. Default 0.0 preserves the textbook formula.
     """
-    gap = jnp.maximum(gap, 0.0)
+    gap = jnp.maximum(gap, floor)
     r = jnp.sqrt(2.0 * loss.smoothness * gap) / lam
     return Ball(center=theta, radius=r)
+
+
+def gap_precision_floor(theta: jax.Array, lam: jax.Array) -> jax.Array:
+    """Arithmetic-precision scale of a duality-gap estimate at ``theta``.
+
+    P - D cancels against objective values of magnitude ~|D(theta)|; the
+    0.5 lam^2 ||theta||^2 term bounds that magnitude for least squares (and
+    its order for the bounded-conjugate losses), so the gap cannot be
+    trusted below ~eps_dtype times it. The factor 8 covers the O(n)-term
+    accumulation of the two objective sums. Discovered root cause of the
+    near-lambda_max support misses on gaussian designs (ROADMAP open item;
+    the Thm-2 ball and the h formula were innocent): with the raw gap
+    flooring at exactly 0, a truly-active boundary feature sits at
+    |x^T theta| = 1 - O(eps) and the full-radius DEL rule deletes it.
+    """
+    eps_m = jnp.finfo(theta.dtype).eps
+    scale = jnp.maximum(
+        0.5 * lam * lam * jnp.sum(theta * theta, axis=-1), 1.0)
+    return 8.0 * eps_m * scale
 
 
 def sequential_ball(loss: Loss, y: jax.Array, theta0: jax.Array,

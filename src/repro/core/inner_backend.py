@@ -52,7 +52,7 @@ n-vs-k_max crossover and the VMEM gate are documented in DESIGN.md §6.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -114,22 +114,49 @@ def cold_inner_carry(k_max: int, dtype=jnp.float32,
 
 
 def _dual_and_gap(loss: Loss, Xa, y, beta, z, mask, lam,
-                  pen=None, x_unpen=None):
+                  pen=None, x_unpen=None, sample_w=None):
     """Shared post-burst tail of the jnp and gram backends — byte-for-byte
     the dual/gap computation the pre-backend solver did inline. ``pen`` /
     ``x_unpen`` carry the unpenalized-slot machinery (DESIGN.md §7): the
     dual point is projected onto x_unpen's equality constraint and the l1
-    term of the gap skips the unpenalized coordinate."""
-    hat = -loss.grad(z, y) / lam
+    term of the gap skips the unpenalized coordinate.
+
+    ``sample_w`` (optional, (n,)) is a per-sample loss weight (the K-fold
+    CV row-mask trick, DESIGN.md §8): the gradient, primal value and
+    conjugate sums pick up the elementwise weight. With binary weights the
+    unscaled dual candidate is supported on the weight-1 rows by
+    construction, so the LS tau* scaling and the constraint correlations
+    against the *shared* Xa equal their row-subsampled counterparts
+    exactly; the general-loss dom-f* clamp can move an exact 0 off 0, so
+    theta is re-zeroed on the weight-0 rows after it."""
+    if sample_w is None:
+        hat = -loss.grad(z, y) / lam
+        theta = feasible_dual(loss, Xa, y, hat, lam, mask, pen=pen,
+                              x_unpen=x_unpen)
+        gap = duality_gap(loss, Xa, y, beta, theta, lam, mask, pen=pen)
+        return theta, gap
+    hat = -(sample_w * loss.grad(z, y)) / lam
     theta = feasible_dual(loss, Xa, y, hat, lam, mask, pen=pen,
                           x_unpen=x_unpen)
-    gap = duality_gap(loss, Xa, y, beta, theta, lam, mask, pen=pen)
-    return theta, gap
+    if loss.name != "least_squares":
+        theta = jnp.where(sample_w > 0, theta, 0.0)
+    beta_m = jnp.where(mask, beta, 0.0) if mask is not None else beta
+    l1 = jnp.abs(beta_m) if pen is None else pen * jnp.abs(beta_m)
+    p_val = (jnp.sum(sample_w * loss.value(Xa @ beta_m, y)) +
+             lam * jnp.sum(l1))
+    d_val = -jnp.sum(sample_w * loss.conj(-lam * theta, y))
+    return theta, p_val - d_val
 
 
 def make_inner_jnp(loss: Loss, X: jax.Array, y: jax.Array,
-                   unpen_idx: int = -1) -> InnerBackend:
-    """Reference backend: residual-update epochs, O(n) per coordinate step."""
+                   unpen_idx: int = -1,
+                   sample_w: jax.Array | None = None) -> InnerBackend:
+    """Reference backend: residual-update epochs, O(n) per coordinate step.
+    ``sample_w`` weights the loss per sample (CV fleets, DESIGN.md §8);
+    it composes with everything except the fused unpenalized slot."""
+    if unpen_idx >= 0 and sample_w is not None:
+        raise ValueError("sample weights do not compose with the fused "
+                         "unpenalized slot (DESIGN.md §8)")
     x_unpen = X[:, unpen_idx] if unpen_idx >= 0 else None
 
     def run(carry, aset, Xa, lam, n_ep):
@@ -137,7 +164,7 @@ def make_inner_jnp(loss: Loss, X: jax.Array, y: jax.Array,
                if unpen_idx >= 0 else None)
         beta, z = cm_epochs_compact(loss, Xa, y, aset.beta, Xa @ aset.beta,
                                     aset.mask, lam, aset.order, aset.count,
-                                    n_ep, pen=pen)
+                                    n_ep, pen=pen, sample_w=sample_w)
         if unpen_idx >= 0 and loss.name != "least_squares":
             # general loss: Newton-polish b to stationarity so the dual
             # point satisfies its equality constraint through the gradient
@@ -149,7 +176,8 @@ def make_inner_jnp(loss: Loss, X: jax.Array, y: jax.Array,
             beta = beta.at[slot].set(jnp.where(present, b_new, beta[slot]))
             z = jnp.where(present, z_new, z)
         theta, gap = _dual_and_gap(loss, Xa, y, beta, z, aset.mask, lam,
-                                   pen=pen, x_unpen=x_unpen)
+                                   pen=pen, x_unpen=x_unpen,
+                                   sample_w=sample_w)
         return InnerOut(beta=beta, z=z, theta=theta, gap=gap)
 
     return InnerBackend(name="jnp",
@@ -159,22 +187,34 @@ def make_inner_jnp(loss: Loss, X: jax.Array, y: jax.Array,
 
 
 def make_inner_gram(loss: Loss, X: jax.Array, y: jax.Array,
-                    h: int, unpen_idx: int = -1) -> InnerBackend:
+                    h: int, unpen_idx: int = -1,
+                    sample_w: jax.Array | None = None) -> InnerBackend:
     """Covariance-update backend: O(k_max) coordinate steps (LS only).
 
     The unpenalized slot (``unpen_idx`` >= 0, fused LASSO) needs no special
     Gram handling: it is always resident, so its row/column of G stays hot
     across the whole solve — only its threshold (0) and the dual tail's
     equality projection differ.
+
+    ``sample_w`` (CV fleets, §8) folds into the carry itself — G becomes
+    Xa^T diag(w) Xa and rho becomes Xa^T diag(w) y — so the O(k_max)
+    sweep needs no weight hook at all; only the carry builds and the
+    dual/gap tail see the weights.
     """
     if loss.name != "least_squares":
         raise ValueError("the gram inner backend needs a linear gradient "
                          f"(least squares); got loss {loss.name!r}")
+    if unpen_idx >= 0 and sample_w is not None:
+        raise ValueError("sample weights do not compose with the fused "
+                         "unpenalized slot (DESIGN.md §8)")
     x_unpen = X[:, unpen_idx] if unpen_idx >= 0 else None
 
+    def _wgt(cols):
+        return cols if sample_w is None else sample_w[:, None] * cols
+
     def _rebuild(aset, Xa):
-        G = Xa.T @ Xa
-        rho = Xa.T @ y
+        G = Xa.T @ _wgt(Xa)
+        rho = _wgt(Xa).T @ y
         gidx = jnp.where(aset.mask, aset.idx, -1)
         return InnerCarry(G=G, rho=rho, gidx=gidx.astype(jnp.int32))
 
@@ -205,15 +245,16 @@ def make_inner_gram(loss: Loss, X: jax.Array, y: jax.Array,
             sl = jnp.minimum(slots, kc - 1)
             ids = jnp.where(valid, jnp.take(aset.idx, sl), 0)
             cols = jnp.take(X, ids, axis=1) * valid.astype(X.dtype)[None, :]
+            cols_w = _wgt(cols)
             # two dots rather than one dot + transpose: each orientation is
             # consumed in its natural layout (XLA:CPU's dot thunk rejects
             # transposed-output fusions), and the column refresh stays
             # O(n k h) either way
-            Gblk = Xa.T @ cols                        # (k_max, h)
-            GblkT = cols.T @ Xa                       # (h, k_max)
+            Gblk = Xa.T @ cols_w                      # (k_max, h)
+            GblkT = cols_w.T @ Xa                     # (h, k_max)
             G = c.G.at[:, slots].set(Gblk, mode="drop")
             G = G.at[slots, :].set(GblkT, mode="drop")
-            rho = c.rho.at[slots].set(cols.T @ y, mode="drop")
+            rho = c.rho.at[slots].set(cols_w.T @ y, mode="drop")
             new_gidx = c.gidx.at[slots].set(
                 jnp.where(valid, ids, -1), mode="drop")
             return InnerCarry(G=G, rho=rho, gidx=new_gidx)
@@ -228,7 +269,8 @@ def make_inner_gram(loss: Loss, X: jax.Array, y: jax.Array,
                            smoothness=loss.smoothness, pen=pen)
         z = Xa @ beta                # the only O(n k) term: once per burst
         theta, gap = _dual_and_gap(loss, Xa, y, beta, z, aset.mask, lam,
-                                   pen=pen, x_unpen=x_unpen)
+                                   pen=pen, x_unpen=x_unpen,
+                                   sample_w=sample_w)
         return InnerOut(beta=beta, z=z, theta=theta, gap=gap)
 
     return InnerBackend(name="gram", init=init, refresh=refresh, run=run)
@@ -268,6 +310,150 @@ def make_inner(name: str, loss: Loss, X: jax.Array, y: jax.Array,
     if name == "pallas":
         return make_inner_pallas(loss, X, y, col_norm, unpen_idx=unpen_idx)
     return make_inner_jnp(loss, X, y, unpen_idx)
+
+
+# --------------------------------------------------------------------------
+# batched (problem-axis) backends — the fleet engine (core/batch.py, §8)
+# --------------------------------------------------------------------------
+# The same three backends lifted to a fleet of B problems. The jnp and
+# gram fleet backends are ``lax.map``s of the *serial* per-problem bodies
+# (the very factories above, instantiated inside the traced map body with
+# that problem's response/weights as operands): each problem's burst, dual
+# point and gap are the literal serial computation — same HLO shapes, same
+# reduction association — which is what makes fleet coefficients bitwise
+# against B serial solves (batch-dim contractions provably re-associate on
+# XLA:CPU; see DESIGN.md §8). The map's per-problem *traced* trip counts
+# (n_epochs, count) also mean a finished problem's burst is a genuine
+# zero-trip loop — zero marginal flops, not a masked no-op. A plain
+# ``vmap`` could deliver neither property. The pallas fleet backend is the
+# problem-gridded kernel instead: one launch, one grid step per problem,
+# each step executing the serial kernel body on that problem's VMEM block.
+# Optional ``weights`` (B, n) are the K-fold CV sample-weight trick (§8).
+
+
+class BatchInnerBackend(NamedTuple):
+    """The batched inner-solver interface ``_saif_batch_jit`` consumes.
+
+    Two structural paths (engine picks by which field is set):
+
+      * ``make_one(y_b, w_b) -> InnerBackend`` — the *map-fused* path
+        (jnp / gram): the engine lax.maps one per-problem body that
+        gathers the active block, refreshes and runs the SERIAL backend
+        built here, all under a per-problem liveness ``lax.cond`` — a
+        frozen problem costs literally nothing per outer step.
+      * ``fleet_step(carry, aset, lam, n_ep) -> (InnerOut, carry)`` — the
+        *gridded-kernel* path (pallas): gathers its own fleet blocks and
+        runs one problem-gridded launch for every burst; frozen problems
+        ride along with zero-trip epoch loops (cheap, not free — the
+        kernel still runs their z/dual tail).
+
+    ``init`` is fleet-level either way (outside the while_loop).
+    """
+    name: str
+    init: Callable[[ActiveSet, InnerCarry, jax.Array], InnerCarry]
+    make_one: Optional[Callable] = None
+    fleet_step: Optional[Callable] = None
+
+
+def cold_inner_carry_batch(b: int, k_max: int, dtype=jnp.float32,
+                           backend: str = "gram") -> InnerCarry:
+    """Fleet-shaped all-invalid carry (leading problem axis)."""
+    if backend != "gram":
+        return InnerCarry(G=jnp.zeros((b, 1, 1), dtype),
+                          rho=jnp.zeros((b, 1), dtype),
+                          gidx=jnp.full((b, 1), -1, jnp.int32))
+    return InnerCarry(G=jnp.zeros((b, k_max, k_max), dtype),
+                      rho=jnp.zeros((b, k_max), dtype),
+                      gidx=jnp.full((b, k_max), -1, jnp.int32))
+
+
+def _fleet_init(make_backend, Y, weights):
+    """Fleet-level init: lax.map of the serial backend's init (one
+    O(n k^2) reconcile per problem, outside the while_loop)."""
+    def init(aset, carry, Xa):
+        def one(args):
+            if weights is None:
+                y_b, carry_b, aset_b, Xa_b = args
+                w_b = None
+            else:
+                y_b, w_b, carry_b, aset_b, Xa_b = args
+            return make_backend(y_b, w_b).init(aset_b, carry_b, Xa_b)
+        xs = ((Y, carry, aset, Xa) if weights is None
+              else (Y, weights, carry, aset, Xa))
+        return jax.lax.map(one, xs)
+    return init
+
+
+def make_batch_inner_jnp(loss: Loss, X: jax.Array, Y: jax.Array,
+                         weights=None) -> BatchInnerBackend:
+    """Fleet reference backend: the serial jnp backend, map-fused."""
+    def make_one(y_b, w_b):
+        return make_inner_jnp(loss, X, y_b, sample_w=w_b)
+    return BatchInnerBackend(name="jnp",
+                             init=_fleet_init(make_one, Y, weights),
+                             make_one=make_one)
+
+
+def make_batch_inner_gram(loss: Loss, X: jax.Array, Y: jax.Array,
+                          h: int, weights=None) -> BatchInnerBackend:
+    """Fleet covariance-update backend: the serial gram backend,
+    map-fused — per-problem (k_max, k_max) Gram buffers with the refresh
+    invariants 1-4 applied per problem (including the per-problem
+    ``lax.cond`` skip when no slots are dirty). Sample weights fold into
+    each problem's G/rho (G_b = Xa^T diag(w_b) Xa). A lockstep batched
+    sweep was tried and rejected: per-problem dynamic indexing across a
+    batch lowers to XLA gather/scatter ops whose per-op overhead on CPU
+    exceeds the serial sweep's dynamic-slice steps ~30-fold, and batched
+    float updates pick up FMA contractions that break bitwise parity —
+    the map keeps the sweep serial-exact and lets the fleet win where it
+    structurally should, on the shared O(p) scan."""
+    def make_one(y_b, w_b):
+        return make_inner_gram(loss, X, y_b, h, sample_w=w_b)
+    return BatchInnerBackend(name="gram",
+                             init=_fleet_init(make_one, Y, weights),
+                             make_one=make_one)
+
+
+def make_batch_inner_pallas(loss: Loss, X: jax.Array, Y: jax.Array,
+                            col_norm: jax.Array,
+                            interpret: bool | None = None,
+                            weights=None) -> BatchInnerBackend:
+    """Fleet VMEM-resident kernel backend: ONE problem-gridded launch
+    drives the whole fleet's bursts (kernels/cm/cm.py)."""
+    from repro.kernels.cm.cm import cm_burst_batch_pallas
+
+    if weights is not None:
+        raise ValueError("the batched pallas inner backend does not take "
+                         "sample weights; use 'jnp' or 'gram' for CV "
+                         "fleets (DESIGN.md §8)")
+
+    def fleet_step(carry, aset, lam, n_ep):
+        Xa = aset_lib.gather_columns_batch(X, aset)
+        # col_norm is the fleet (B, p) matrix (shared designs broadcast it)
+        norms = jnp.where(aset.mask,
+                          jnp.take_along_axis(col_norm, aset.idx, axis=1),
+                          0.0)
+        col_sq = norms * norms
+        beta, z, theta, gap = cm_burst_batch_pallas(
+            Xa, Y, aset.beta, col_sq, aset.mask, aset.order, lam, n_ep,
+            aset.count, loss_name=loss.name, interpret=interpret)
+        return InnerOut(beta=beta, z=z, theta=theta, gap=gap), carry
+
+    return BatchInnerBackend(name="pallas",
+                             init=lambda aset, carry, Xa: carry,
+                             fleet_step=fleet_step)
+
+
+def make_batch_inner(name: str, loss: Loss, X: jax.Array, Y: jax.Array,
+                     col_norm: jax.Array, h: int,
+                     weights=None) -> BatchInnerBackend:
+    """Factory used inside ``_saif_batch_jit`` (name is jit-static)."""
+    if name == "gram":
+        return make_batch_inner_gram(loss, X, Y, h, weights=weights)
+    if name == "pallas":
+        return make_batch_inner_pallas(loss, X, Y, col_norm,
+                                       weights=weights)
+    return make_batch_inner_jnp(loss, X, Y, weights=weights)
 
 
 # n/k_max crossover of the auto policy: the gram step is an O(k_max) axpy

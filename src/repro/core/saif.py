@@ -30,7 +30,8 @@ import jax.numpy as jnp
 
 from repro.core import active_set as aset_lib
 from repro.core.active_set import ActiveSet
-from repro.core.duality import gap_ball, intersect_balls, sequential_ball
+from repro.core.duality import (gap_ball, gap_precision_floor,
+                                intersect_balls, sequential_ball)
 from repro.core.inner_backend import (InnerCarry, cold_inner_carry,
                                       make_inner, resolve_inner_backend)
 from repro.core.losses import get_loss
@@ -227,7 +228,13 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
         aset = aset._replace(beta=beta)
 
         # --- ball region from the backend's dual point (Thm 2 / Eq. 12) ----
-        ball = gap_ball(loss, theta, gap, lam)
+        # The radius is floored at the gap's own arithmetic precision: a
+        # machine-converged sub-problem reports gap 0 (or negative) and a
+        # zero radius would let the strict DEL / ADD-stop comparisons evict
+        # or ignore boundary features (|x^T theta*| = 1) on float noise —
+        # the near-lambda_max gaussian-design support misses (ROADMAP item).
+        ball = gap_ball(loss, theta, gap, lam,
+                        floor=gap_precision_floor(theta, lam))
         if use_seq_ball:
             # lam_max(t) over the *active* features (paper Sec 2.2).
             c0_active = jnp.where(aset.mask, jnp.take(c0, aset.idx), -jnp.inf)
@@ -329,15 +336,26 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
 
 
 def saif_jit_compile_count() -> int:
-    """Number of distinct ``_saif_jit`` compilations alive in this process.
+    """Number of distinct solver-core compilations alive in this process
+    (the serial ``_saif_jit`` cache plus the fleet engine's
+    ``_saif_batch_jit`` cache, once that module has been imported).
 
-    The compile-first path engine and the benchmarks assert on deltas of
-    this counter (acceptance: O(log p) compilations per lambda path).
+    The compile-first path engine, the batch engine and the benchmarks
+    assert on deltas of this counter (acceptance: O(log p) compilations
+    per lambda path; exactly 1 per fleet).
     """
     try:
-        return int(_saif_jit._cache_size())
+        total = int(_saif_jit._cache_size())
     except Exception:       # pragma: no cover - older/newer jit internals
         return -1
+    try:
+        import sys
+        batch_mod = sys.modules.get("repro.core.batch")
+        if batch_mod is not None:
+            total += int(batch_mod._saif_batch_jit._cache_size())
+    except Exception:       # pragma: no cover
+        pass
+    return total
 
 
 def saif(X, y, lam: float, config: SaifConfig = SaifConfig(),

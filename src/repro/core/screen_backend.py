@@ -140,6 +140,156 @@ def make_screen_pallas(X: jax.Array, col_norm: jax.Array, h: int,
     return screen
 
 
+# --------------------------------------------------------------------------
+# batched (problem-axis) screens — the fleet engine (core/batch.py, §8)
+# --------------------------------------------------------------------------
+# A batched ScreenFn maps (Theta (B, n), r (B,), in_active (B, p),
+# do (B,)) to a ScreenOut whose every field carries a leading problem
+# axis; ``do`` flags the problems whose ADD phase is actually running this
+# outer step (the serial solver's per-solve screen gate, per problem).
+#
+# The default ``jnp`` fleet screen is a liveness-gated lax.map of the
+# SERIAL screen: each problem's scan is the literal serial matvec — the
+# bitwise-parity contract — and polish-phase/frozen problems skip their
+# scan entirely, exactly like the serial solver's lax.cond. The shared-X
+# ``matmul`` fast path turns the fleet's scans into ONE (B, n) x (n, p)
+# matmul (the design is read once per outer step for the whole fleet);
+# its re-tiled reduction can differ from a serial matvec by an ulp, which
+# near an ADD-stop boundary (max_ub == 1 exactly) can flip one decision —
+# opt in for scan-bound fleets where that trade is right (DESIGN.md §8).
+# The distinct-X fallback (per-problem designs, (B, n, p)) keeps the
+# problem axis a batch dim of the contraction and stays bitwise.
+
+# signature: (Theta (B,n), r (B,), in_active (B,p), do (B,)) -> ScreenOut
+BatchScreenFn = Callable[[jax.Array, jax.Array, jax.Array, jax.Array],
+                         ScreenOut]
+
+
+def _candidate_out_batch(masked, ub, col_norm, r, h) -> ScreenOut:
+    """Batched :func:`_candidate_out`: per-problem top-h + bounds + counts.
+    ``col_norm`` is the fleet (B, p) matrix."""
+    cand_score, cand_idx = jax.lax.top_k(masked, h)          # (B, h)
+    cand_idx = cand_idx.astype(jnp.int32)
+    cand_lb = jnp.abs(cand_score -
+                      jnp.take_along_axis(col_norm, cand_idx, axis=1)
+                      * r[:, None])
+    cand_ge = jax.vmap(violation_ge_counts)(ub, cand_lb)
+    return ScreenOut(max_ub=jnp.max(ub, axis=1), cand_score=cand_score,
+                     cand_idx=cand_idx, cand_lb=cand_lb, cand_ge=cand_ge)
+
+
+def fleet_col_norms(col_norm: jax.Array, b: int) -> jax.Array:
+    """(B, p) fleet column norms from a shared (p,) vector or pass-through."""
+    cn = jnp.asarray(col_norm)
+    return jnp.broadcast_to(cn, (b,) + cn.shape) if cn.ndim == 1 else cn
+
+
+def _skip_screen_out(h: int, dtype) -> ScreenOut:
+    """Neutral per-problem ScreenOut for a skipped scan: max_ub = -inf
+    (reads as add_done, but the engine's do-mask already gates every
+    consumer), no finite candidates."""
+    return ScreenOut(max_ub=jnp.asarray(-jnp.inf, dtype),
+                     cand_score=jnp.full((h,), -jnp.inf, dtype),
+                     cand_idx=jnp.zeros((h,), jnp.int32),
+                     cand_lb=jnp.full((h,), jnp.inf, dtype),
+                     cand_ge=jnp.zeros((h,), jnp.int32))
+
+
+def make_batch_screen_jnp(X: jax.Array, col_norm: jax.Array,
+                          h: int) -> BatchScreenFn:
+    """Default fleet screen: per-problem serial scans, lax.mapped, with a
+    per-problem skip for problems whose ADD phase is off this step."""
+    def screen(Theta, r, in_active, do):
+        cn = fleet_col_norms(col_norm, Theta.shape[0])
+
+        def one(args):
+            do_b, theta_b, r_b, act_b, cn_b = args
+            return jax.lax.cond(
+                do_b,
+                lambda _: make_screen_jnp(X, cn_b, h)(theta_b, r_b, act_b),
+                lambda _: _skip_screen_out(h, Theta.dtype), None)
+
+        return jax.lax.map(one, (do, Theta, r, in_active, cn))
+    return screen
+
+
+def make_batch_screen_matmul(X: jax.Array, col_norm: jax.Array,
+                             h: int) -> BatchScreenFn:
+    """Shared-X fast path: one (B, n) x (n, p) matmul scans the fleet
+    (ulp-grade vs serial scans — see the section comment)."""
+    def screen(Theta, r, in_active, do):
+        cn = fleet_col_norms(col_norm, Theta.shape[0])
+        score = jnp.abs(Theta @ X)                           # (B, p)
+        masked = jnp.where(in_active, -jnp.inf, score)
+        ub = masked + cn * r[:, None]
+        return _candidate_out_batch(masked, ub, cn, r, h)
+    return screen
+
+
+def make_batch_screen_distinct(Xs: jax.Array, col_norm: jax.Array,
+                               h: int) -> BatchScreenFn:
+    """Distinct-X fallback: per-problem designs Xs (B, n, p). The problem
+    axis stays a batch dim of the contraction, so every problem's scan is
+    bitwise its serial matvec (no shared-operand re-tiling)."""
+    def screen(Theta, r, in_active, do):
+        cn = fleet_col_norms(col_norm, Theta.shape[0])
+        score = jnp.abs(jnp.einsum("bnp,bn->bp", Xs, Theta))
+        masked = jnp.where(in_active, -jnp.inf, score)
+        ub = masked + cn * r[:, None]
+        return _candidate_out_batch(masked, ub, cn, r, h)
+    return screen
+
+
+def make_batch_screen_pallas(X: jax.Array, col_norm: jax.Array, h: int,
+                             bn: Optional[int] = None,
+                             bp: Optional[int] = None,
+                             interpret: Optional[bool] = None
+                             ) -> BatchScreenFn:
+    """Problem-gridded fused kernels: grid axis over the fleet, shared X
+    tiles revisited across problems (kernels/screen/screen.py). Each grid
+    step runs the serial kernel body on one problem's blocks, so the
+    per-problem scores match the serial pallas screen bitwise."""
+    from repro.kernels.screen.screen import (screen_fused_batch_pallas,
+                                             ub_histogram_batch_pallas)
+
+    def screen(Theta, r, in_active, do):
+        b = Theta.shape[0]
+        cn = fleet_col_norms(col_norm, b)
+        _, ub, _, tops, topi, tmax = screen_fused_batch_pallas(
+            X, Theta, cn, in_active, r, h=h, bn=bn, bp=bp,
+            interpret=interpret)
+        cand_score, pos = jax.lax.top_k(tops.reshape(b, -1), h)
+        cand_idx = jnp.take_along_axis(topi.reshape(b, -1), pos, axis=1)
+        cand_lb = jnp.abs(
+            cand_score - jnp.take_along_axis(cn, cand_idx, axis=1)
+            .astype(cand_score.dtype) * r[:, None].astype(cand_score.dtype))
+        lb_sorted = jnp.sort(cand_lb, axis=1)
+        hist = ub_histogram_batch_pallas(ub, lb_sorted, interpret=interpret)
+        cand_ge = jax.vmap(ge_counts_from_hist)(hist, lb_sorted, cand_lb)
+        return ScreenOut(max_ub=jnp.max(tmax, axis=1),
+                         cand_score=cand_score, cand_idx=cand_idx,
+                         cand_lb=cand_lb, cand_ge=cand_ge)
+    return screen
+
+
+def make_batch_screen(name: str, X: jax.Array, col_norm: jax.Array,
+                      h: int) -> BatchScreenFn:
+    """Factory used inside ``_saif_batch_jit`` (name is jit-static)."""
+    if name == "pallas":
+        return make_batch_screen_pallas(X, col_norm, h)
+    if name == "matmul":
+        return make_batch_screen_matmul(X, col_norm, h)
+    return make_batch_screen_jnp(X, col_norm, h)
+
+
+def resolve_batch_screen(name: str) -> str:
+    """Fleet screen policy: the serial policy plus the opt-in ``matmul``
+    shared-X fast path (DESIGN.md §8)."""
+    if name == "matmul":
+        return name
+    return resolve_backend(name)
+
+
 def resolve_backend(name: str) -> str:
     """Backend-selection policy (DESIGN.md §3): explicit name wins; ``auto``
     compiles the fused kernels on TPU and keeps the XLA path elsewhere

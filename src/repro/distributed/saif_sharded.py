@@ -146,6 +146,124 @@ def make_sharded_screen(design: ShardedDesign, h: int):
     return screen
 
 
+def make_sharded_screen_batch(design: ShardedDesign, h: int):
+    """Batched sharded screen: the §5 collective serving a whole fleet.
+
+    One shard_map round screens ALL B problems: each device computes its
+    (B, p_local) masked-score block with a single local (B, n) x
+    (n, p_local) matmul (the shared-X fast path on sharded iron), reduces
+    per-problem local top-h and a per-problem pmax of ub, and the gathered
+    devs*h candidate pairs merge per problem. Wire bytes per outer step:
+    O(B * devs * h) for the candidates — B problems ride one collective
+    instead of B of them (the batched ``saif_distributed`` economics,
+    DESIGN.md §8). Per-problem column norms are supported (CV fleets), so
+    the design carries the *shared* norms and the caller passes fleet
+    norms explicitly when they differ.
+    """
+    from repro.core.screen_backend import ScreenOut, violation_ge_counts
+
+    mesh = design.mesh
+    axes = _feature_axes(mesh)
+    devs = int(np.prod(list(mesh.shape.values())))
+    p_pad = design.X.shape[1]
+    p_local = p_pad // devs
+    k = min(h, p_local)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(None, axes), P(axes), P(None, None), P(None),
+                  P(None, axes)),
+        out_specs=(P(None, axes), P(None, axes), P(None, axes), P(None)))
+    def local(X_local, norm_local, Theta, r, excl_local):
+        ax_index = sum(jax.lax.axis_index(a) *
+                       int(np.prod([mesh.shape[b]
+                                    for b in axes[axes.index(a) + 1:]]))
+                       for a in axes)
+        offset = ax_index * p_local
+        scores = jnp.abs(Theta @ X_local)                 # (B, p_local)
+        pad_col = offset + jnp.arange(p_local) >= design.p
+        masked = jnp.where(excl_local | pad_col[None, :], -jnp.inf, scores)
+        ub = masked + norm_local[None, :] * r[:, None]
+        top_s, top_i = jax.lax.top_k(masked, k)           # (B, k)
+        if k < h:
+            top_s = jnp.pad(top_s, ((0, 0), (0, h - k)),
+                            constant_values=-jnp.inf)
+            top_i = jnp.pad(top_i, ((0, 0), (0, h - k)))
+        gid = top_i + offset
+        max_ub = jax.lax.pmax(jnp.max(ub, axis=1), axes)  # (B,)
+        return top_s, gid.astype(jnp.int32), ub, max_ub
+
+    def screen(Theta, r, in_active, do=None):
+        # ``do`` (per-problem ADD gate) is unused: the collective runs for
+        # the whole fleet whenever any problem screens — that is the point
+        del do
+        r = jnp.asarray(r, design.X.dtype)
+        excl = jnp.asarray(in_active, bool)
+        if excl.shape[1] != p_pad:                        # pad fleet masks
+            excl = jnp.pad(excl, ((0, 0), (0, p_pad - excl.shape[1])),
+                           constant_values=True)
+        ts, gid, ub, max_ub = local(design.X, design.col_norm, Theta, r,
+                                    excl)
+        cand_score, pos = jax.lax.top_k(ts, h)            # (B, h) merge
+        cand_idx = jnp.take_along_axis(gid, pos, axis=1)
+        cand_lb = jnp.abs(cand_score -
+                          jnp.take(design.col_norm, cand_idx) * r[:, None])
+        cand_ge = jax.vmap(violation_ge_counts)(ub, cand_lb)
+        return ScreenOut(max_ub=max_ub, cand_score=cand_score,
+                         cand_idx=cand_idx, cand_lb=cand_lb,
+                         cand_ge=cand_ge)
+    return screen
+
+
+def saif_batch_distributed(X, Y, lam, mesh, config=None,
+                           inner_backend: str = None):
+    """Fleet SAIF with the feature-sharded screening collective: B lockstep
+    solves whose O(p) scans ride one shard_map round per outer step.
+
+    Same results as ``repro.core.batch.saif_batch`` (which equals B serial
+    solves); the active blocks, CM bursts and the per-problem Gram buffers
+    replicate across the mesh exactly like the serial distributed driver —
+    only the scan is sharded, now amortized over the fleet (DESIGN.md §8).
+    Plain-LASSO fleets over one shared design (no sample weights: a CV
+    fleet's per-fold column norms live on the replicated path for now).
+    """
+    import dataclasses
+
+    from repro.core.batch import (fleet_batch_sizes, prepare_fleet,
+                                  saif_batch)
+    from repro.core.losses import get_loss
+    from repro.core.saif import SaifConfig
+
+    config = config or SaifConfig()
+    if inner_backend is not None:
+        config = dataclasses.replace(config, inner_backend=inner_backend)
+    if config.unpen_idx is not None:
+        raise NotImplementedError("fused fleets are serial-only for now")
+    loss = get_loss(config.loss)
+    X = jnp.asarray(X)
+    Y = jnp.asarray(Y)
+    if Y.ndim == 1:
+        Y = Y[None, :]
+    b = Y.shape[0]
+    # the sharded design is built once from a representative null gradient
+    # (only X and the norms matter; c0 is recomputed per problem inside
+    # the fleet driver against the padded design)
+    g0 = loss.grad(jnp.zeros_like(Y[0]), Y[0])
+    design = shard_design(X, g0, mesh)
+    lam_arr = jnp.broadcast_to(jnp.asarray(lam, X.dtype).reshape(-1), (b,))
+    # the screen's candidate width must equal the engine's static h, so
+    # derive it through the EXACT code path the fleet driver uses on the
+    # padded design (prepare_fleet's per-problem serial matvecs — a
+    # differently-associated matmul here could land an ulp on a pow2
+    # bucket boundary and break the kernel shapes)
+    prep = prepare_fleet(design.X, Y, config)
+    _, h = fleet_batch_sizes(prep, [float(l) for l in
+                                    jax.device_get(lam_arr)], config)
+    screen_fn = make_sharded_screen_batch(design, h)
+    res = saif_batch(design.X, Y, lam_arr, config, screen_fn=screen_fn)
+    return res._replace(beta=res.beta[:, :design.p])
+
+
 class ScreenResult(NamedTuple):
     top_scores: jax.Array   # (h,)
     top_idx: jax.Array      # (h,) global feature ids

@@ -56,9 +56,18 @@ from jax.experimental import pallas as pl
 CM_VMEM_BUDGET_BYTES = 12 * 2**20
 
 
-def cm_vmem_ok(n: int, k: int, itemsize: int = 4) -> bool:
-    """Does a (n, k) CM burst fit the VMEM budget? (block-fit autotune)."""
-    return (n * k + 4 * n + 6 * k) * itemsize <= CM_VMEM_BUDGET_BYTES
+def cm_vmem_ok(n: int, k: int, itemsize: int = 4, batch: int = 1) -> bool:
+    """Does a (n, k) CM burst fit the VMEM budget? (block-fit autotune).
+
+    ``batch`` > 1 is the problem-gridded fleet kernel: each grid step owns
+    ONE problem's (n, k) block, but the pipeline double-buffers the next
+    problem's block while the current burst runs, so the fleet budget is
+    two problems' working sets — independent of the fleet size B beyond
+    that. This is the "batched budget" the inner-backend resolver consults
+    for fleets (DESIGN.md §8).
+    """
+    per_problem = (n * k + 4 * n + 6 * k) * itemsize
+    return per_problem * (2 if batch > 1 else 1) <= CM_VMEM_BUDGET_BYTES
 
 
 def _cm_kernel(a_ref, y_ref, beta_in_ref, colsq_ref, mask_ref, lam_ref,
@@ -213,6 +222,133 @@ def _cm_burst_kernel(a_ref, y_ref, beta_in_ref, colsq_ref, mask_ref,
     p_val = jnp.sum(loss.value(z, y)) + lam * jnp.sum(pen * jnp.abs(beta))
     d_val = -jnp.sum(loss.conj(-lam * theta, y))
     gap_ref[0] = p_val - d_val
+
+
+# --------------------------------------------------------------------------
+# problem-gridded fleet burst kernel (batch engine, DESIGN.md §8)
+# --------------------------------------------------------------------------
+
+def _cm_burst_batch_kernel(a_ref, y_ref, beta_in_ref, colsq_ref, mask_ref,
+                           order_ref, lam_ref, nep_ref, cnt_ref,
+                           beta_ref, z_ref, theta_ref, gap_ref, *, loss):
+    """One grid step = one problem's whole "CM burst + dual + gap".
+
+    The body is :func:`_cm_burst_kernel` without the unpenalized-slot
+    machinery (fleets are plain LASSO, §8), reading this problem's blocks
+    (leading length-1 problem dim). Per-problem traced epoch/live counts
+    arrive through the (1,)-blocked ``nep``/``cnt`` operands, so a finished
+    problem's grid step runs a zero-trip burst — only the initial z matmul
+    and the dual/gap tail touch the VPU for it.
+    """
+    del beta_in_ref                     # aliased onto beta_ref
+    a = a_ref[0]                        # (n, k) this problem's active block
+    y = y_ref[0, :]
+    lam = lam_ref[0]
+    alpha = loss.smoothness
+    dt = a.dtype
+    z_ref[0, :] = jnp.dot(a, beta_ref[0, :], preferred_element_type=dt)
+
+    def coord_step(jj, _):
+        j = order_ref[0, jj]
+        aj = a[:, j]
+        lj = jnp.maximum(alpha * colsq_ref[0, j], 1e-30)
+        g = jnp.dot(aj, loss.grad(z_ref[0, :], y),
+                    preferred_element_type=dt)
+        bj = beta_ref[0, j]
+        u = bj - g / lj
+        t = lam / lj
+        b_new = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t, 0.0)
+        b_new = jnp.where(mask_ref[0, j], b_new, 0.0)
+        z_ref[0, :] += (b_new - bj) * aj
+        beta_ref[0, j] = b_new
+        return 0
+
+    def epoch(_, carry):
+        return jax.lax.fori_loop(0, cnt_ref[0], coord_step, carry)
+
+    jax.lax.fori_loop(0, nep_ref[0], epoch, 0)
+
+    # ---- fused dual-point / duality-gap tail (VMEM-resident) -------------
+    beta = beta_ref[0, :]
+    z = jnp.dot(a, beta, preferred_element_type=dt)
+    z_ref[0, :] = z
+    hat = -loss.grad(z, y) / lam
+    corr = jnp.dot(hat, a, preferred_element_type=dt)
+    max_corr = jnp.max(jnp.abs(corr))
+    if loss.name == "least_squares":
+        bound = 1.0 / jnp.maximum(max_corr, 1e-30)
+        sq = jnp.sum(hat * hat)
+        tau_star = jnp.dot(y, hat) / (lam * jnp.maximum(sq, 1e-30))
+        tau = jnp.clip(tau_star, -bound, bound)
+        tau = jnp.where(jnp.isfinite(tau), tau,
+                        1.0 / jnp.maximum(max_corr, 1.0))
+        theta = tau * hat
+    else:
+        theta = hat / jnp.maximum(max_corr, 1.0)
+        theta = -loss.dual_clip(-lam * theta, y) / lam
+    theta_ref[0, :] = theta
+    p_val = jnp.sum(loss.value(z, y)) + lam * jnp.sum(jnp.abs(beta))
+    d_val = -jnp.sum(loss.conj(-lam * theta, y))
+    gap_ref[0] = p_val - d_val
+
+
+@functools.partial(jax.jit, static_argnames=("loss_name", "interpret"))
+def cm_burst_batch_pallas(A, Y, beta, col_sq, mask, order, lam, n_epochs,
+                          count, *, loss_name: str = "least_squares",
+                          interpret: bool | None = None):
+    """Fleet "CM burst + gap": grid axis over problems, one launch for B.
+
+    Args mirror :func:`cm_burst_pallas` with a leading problem axis:
+    A (B, n, k) per-problem active blocks, Y (B, n), beta/col_sq/mask/order
+    (B, k), lam/n_epochs/count (B,). Each grid step owns one problem's
+    burst end-to-end in VMEM; the double-buffered fleet budget is checked
+    by ``cm_vmem_ok(..., batch=B)``.
+    Returns (beta (B, k), z (B, n), theta (B, n), gap (B,)).
+    """
+    from repro.core.losses import get_loss
+
+    loss = get_loss(loss_name)
+    b, n, k = A.shape
+    dt = A.dtype
+    assert cm_vmem_ok(n, k, dt.itemsize, batch=b), (
+        f"a fleet of {b} {n}x{k} active blocks ({dt}) exceeds the "
+        f"double-buffered VMEM budget; shrink k_max or shard the sample "
+        f"dimension (see DESIGN.md §5/§8)")
+    if interpret is None:
+        from repro.kernels.screen.screen import default_interpret
+        interpret = default_interpret()
+    kernel = functools.partial(_cm_burst_batch_kernel, loss=loss)
+    blk = pl.BlockSpec((1, n, k), lambda bb: (bb, 0, 0))
+    vec_k = pl.BlockSpec((1, k), lambda bb: (bb, 0))
+    vec_n = pl.BlockSpec((1, n), lambda bb: (bb, 0))
+    one = pl.BlockSpec((1,), lambda bb: (bb,))
+    beta_out, z_out, theta_out, gap_out = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            blk,                                      # A
+            vec_n,                                    # Y
+            vec_k,                                    # beta (aliased)
+            vec_k,                                    # col_sq
+            vec_k,                                    # mask
+            vec_k,                                    # order
+            one,                                      # lam
+            one,                                      # n_epochs
+            one,                                      # count
+        ],
+        out_specs=[vec_k, vec_n, vec_n, one],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), dt),         # beta
+            jax.ShapeDtypeStruct((b, n), dt),         # z
+            jax.ShapeDtypeStruct((b, n), dt),         # theta
+            jax.ShapeDtypeStruct((b,), dt),           # gap
+        ],
+        input_output_aliases={2: 0},                  # beta updated in place
+        interpret=interpret,
+    )(A, Y.astype(dt), beta.astype(dt), col_sq.astype(dt), mask,
+      order.astype(jnp.int32), jnp.asarray(lam, dt),
+      jnp.asarray(n_epochs, jnp.int32), jnp.asarray(count, jnp.int32))
+    return beta_out, z_out, theta_out, gap_out
 
 
 @functools.partial(jax.jit, static_argnames=("loss_name", "interpret"))

@@ -67,19 +67,28 @@ def _round_up(x: int, m: int) -> int:
 
 
 def autotune_screen_blocks(n: int, p: int, *, dtype_bytes: int = 4,
-                           vmem_budget_bytes: int = VMEM_TILE_BUDGET_BYTES
-                           ) -> tuple:
+                           vmem_budget_bytes: int = VMEM_TILE_BUDGET_BYTES,
+                           batch: int = 1) -> tuple:
     """Pick (bn, bp) for the screening kernels from the problem shape.
 
     bp (lane dim) is a multiple of 128, bn (sublane dim) a multiple of 8;
     both are clipped to the padded problem so tiny problems run one tile,
     and bn shrinks (keeping the wide lane dim) until a double-buffered X
     tile fits the VMEM budget.
+
+    ``batch`` > 1 is the problem-gridded fleet kernel (DESIGN.md §8): the
+    X tile is revisited across the fleet's grid axis, so it must coexist
+    in VMEM with one problem's (bn,)/(bp,)-shaped vector blocks *per
+    in-flight problem* — the budget is charged for the double-buffered
+    vector working set of two problems in addition to the X tile.
     """
     bp = min(512, _round_up(max(p, 1), 128))
     bn = min(DEFAULT_BN, _round_up(max(n, 1), 8))
-    while bn > 8 and 2 * bn * bp * dtype_bytes > vmem_budget_bytes:
+    vec_bytes = (2 * (bn + 4 * bp) * dtype_bytes) if batch > 1 else 0
+    while bn > 8 and 2 * bn * bp * dtype_bytes + vec_bytes > \
+            vmem_budget_bytes:
         bn = max(8, _round_up(bn // 2, 8))
+        vec_bytes = (2 * (bn + 4 * bp) * dtype_bytes) if batch > 1 else 0
     return bn, bp
 
 
@@ -312,6 +321,129 @@ def screen_fused_pallas(X, theta, col_norm, active, r, *, h: int,
 
 
 # --------------------------------------------------------------------------
+# problem-gridded fused ADD-phase kernel (batch fleets, DESIGN.md §8)
+# --------------------------------------------------------------------------
+
+def _screen_fused_batch_kernel(theta_ref, x_ref, norm_ref, act_ref, r_ref,
+                               score_ref, ub_ref, lb_ref,
+                               tops_ref, topi_ref, tmax_ref,
+                               *, n_blocks: int, h_tile: int, bp: int):
+    i = pl.program_id(0)                     # p-axis tile (for global ids)
+    j = pl.program_id(2)                     # n-axis step (innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        score_ref[...] = jnp.zeros_like(score_ref)
+
+    # partial matvec for THIS problem's theta against the SHARED X tile
+    partial = jnp.dot(theta_ref[0, :], x_ref[...],
+                      preferred_element_type=score_ref.dtype)
+    score_ref[0, :] += partial
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        raw = score_ref[0, :]
+        s = jnp.abs(raw)
+        nr = norm_ref[0, :] * r_ref[0]
+        neg = jnp.asarray(-jnp.inf, s.dtype)
+        ms = jnp.where(act_ref[0, :] > 0.5, neg, s)
+        ub = ms + nr
+        score_ref[0, :] = ms
+        ub_ref[0, :] = ub
+        lb_ref[0, :] = jnp.abs(ms - nr)
+        tmax_ref[0, 0] = jnp.max(ub)
+        lanes = jax.lax.broadcasted_iota(jnp.int32, (bp,), 0)
+        ts, ti = _tile_top_h(ms, lanes, h_tile)
+        tops_ref[0, 0, :] = ts
+        topi_ref[0, 0, :] = ti + i * bp                  # global feature ids
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("h", "bn", "bp", "interpret"))
+def screen_fused_batch_pallas(X, Theta, col_norm, active, r, *, h: int,
+                              bn: int | None = None, bp: int | None = None,
+                              interpret: bool | None = None):
+    """Fleet ADD-phase scan: one launch screens all B problems.
+
+    Same per-problem math as :func:`screen_fused_pallas`, with a grid axis
+    over problems. Grid order is (p-tiles, problems, n-steps): the n-axis
+    stays innermost so the per-(problem, p-tile) score accumulator is
+    revisited consecutively (the TPU sequential-grid contract), and
+    whenever the sample dim fits one tile (n <= bn — the SAIF norm) the
+    shared X tile's index map is constant across the problem axis, so the
+    VMEM-resident design block is fetched once and reused by the whole
+    fleet — the shared-X fast path. Distinct-X fleets don't use this
+    kernel; they take the einsum fallback in ``core/screen_backend.py``.
+
+    Args:
+      X:        (n, p) SHARED design.
+      Theta:    (B, n) per-problem dual ball centers.
+      col_norm: (B, p) per-problem column norms (CV fleets differ per
+                problem; multi-response fleets broadcast one row).
+      active:   (B, p) per-problem exclusion masks.
+      r:        (B,) per-problem ball radii.
+
+    Returns (score, ub, lb) as (B, p) plus tile winners
+    (B, p_blocks, h_tile) x2 and tile max-ub (B, p_blocks).
+    """
+    n, p = X.shape
+    b = Theta.shape[0]
+    if bn is None or bp is None:
+        abn, abp = autotune_screen_blocks(n, p,
+                                          dtype_bytes=X.dtype.itemsize,
+                                          batch=b)
+        bn = bn or abn
+        bp = bp or abp
+    if interpret is None:
+        interpret = default_interpret()
+    h_tile = max(1, min(h, bp))
+    dt = X.dtype
+    n_pad = -n % bn
+    p_pad = -p % bp
+    Xp = jnp.pad(X, ((0, n_pad), (0, p_pad)))
+    theta_p = jnp.pad(Theta.astype(dt), ((0, 0), (0, n_pad)))
+    norm_p = jnp.pad(col_norm.astype(dt), ((0, 0), (0, p_pad)))
+    act_p = jnp.pad(jnp.asarray(active).astype(dt), ((0, 0), (0, p_pad)),
+                    constant_values=1.0)
+    np_, pp = Xp.shape
+    n_blocks, p_blocks = np_ // bn, pp // bp
+    r_arr = jnp.asarray(r, dt)
+
+    out_shape = [
+        jax.ShapeDtypeStruct((b, pp), dt),                 # score
+        jax.ShapeDtypeStruct((b, pp), dt),                 # ub
+        jax.ShapeDtypeStruct((b, pp), dt),                 # lb
+        jax.ShapeDtypeStruct((b, p_blocks, h_tile), dt),   # tile top scores
+        jax.ShapeDtypeStruct((b, p_blocks, h_tile), jnp.int32),
+        jax.ShapeDtypeStruct((b, p_blocks), dt),           # tile max ub
+    ]
+    grid = (p_blocks, b, n_blocks)
+    kernel = functools.partial(_screen_fused_batch_kernel,
+                               n_blocks=n_blocks, h_tile=h_tile, bp=bp)
+    vec = pl.BlockSpec((1, bp), lambda i, bb, j: (bb, i))
+    score, ub, lb, tops, topi, tmax = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda i, bb, j: (bb, j)),   # theta
+            pl.BlockSpec((bn, bp), lambda i, bb, j: (j, i)),   # shared X
+            vec,                                               # col_norm
+            vec,                                               # active mask
+            pl.BlockSpec((1,), lambda i, bb, j: (bb,)),        # r
+        ],
+        out_specs=[
+            vec, vec, vec,                                     # score/ub/lb
+            pl.BlockSpec((1, 1, h_tile), lambda i, bb, j: (bb, i, 0)),
+            pl.BlockSpec((1, 1, h_tile), lambda i, bb, j: (bb, i, 0)),
+            pl.BlockSpec((1, 1), lambda i, bb, j: (bb, i)),    # tile max ub
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(theta_p, Xp, norm_p, act_p, r_arr)
+    return (score[:, :p], ub[:, :p], lb[:, :p], tops, topi, tmax)
+
+
+# --------------------------------------------------------------------------
 # violation-count histogram kernel
 # --------------------------------------------------------------------------
 
@@ -361,6 +493,53 @@ def ub_histogram_pallas(ub, lb_sorted, *, bp: int | None = None,
         ],
         out_specs=pl.BlockSpec((n_bins,), lambda i: (0,)),
         out_shape=jax.ShapeDtypeStruct((n_bins,), jnp.int32),
+        interpret=interpret,
+    )(ub_p, lb_sorted)
+    return hist
+
+
+def _ub_hist_batch_kernel(ub_ref, lb_ref, hist_ref, *, n_bins: int):
+    i = pl.program_id(1)                                 # p-tile (innermost)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    ub = ub_ref[0, :]                                    # (bp,)
+    lb = lb_ref[0, :]                                    # (h,)
+    c = jnp.sum((lb[None, :] <= ub[:, None]).astype(jnp.int32), axis=1,
+                dtype=jnp.int32)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (ub.shape[0], n_bins), 1)
+    hist_ref[0, :] += jnp.sum((c[:, None] == bins).astype(jnp.int32),
+                              axis=0, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "interpret"))
+def ub_histogram_batch_pallas(ub, lb_sorted, *, bp: int | None = None,
+                              interpret: bool | None = None):
+    """Per-problem :func:`ub_histogram_pallas`: ub (B, p), lb_sorted (B, h)
+    -> hist (B, h+1). Grid = (problems, p-tiles) with the tile axis
+    innermost so each problem's histogram block accumulates consecutively.
+    """
+    b, p = ub.shape
+    h = lb_sorted.shape[1]
+    if bp is None:
+        bp = min(2048, _round_up(max(p, 1), 128))
+    if interpret is None:
+        interpret = default_interpret()
+    ub_p = jnp.pad(ub, ((0, 0), (0, -p % bp)), constant_values=-jnp.inf)
+    p_blocks = ub_p.shape[1] // bp
+    n_bins = h + 1
+    kernel = functools.partial(_ub_hist_batch_kernel, n_bins=n_bins)
+    hist = pl.pallas_call(
+        kernel,
+        grid=(b, p_blocks),
+        in_specs=[
+            pl.BlockSpec((1, bp), lambda bb, i: (bb, i)),    # ub tile
+            pl.BlockSpec((1, h), lambda bb, i: (bb, 0)),     # lb row
+        ],
+        out_specs=pl.BlockSpec((1, n_bins), lambda bb, i: (bb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_bins), jnp.int32),
         interpret=interpret,
     )(ub_p, lb_sorted)
     return hist

@@ -235,6 +235,47 @@ print("DIST_OK")
     assert "DIST_OK" in r.stdout
 
 
+def test_distributed_saif_batch_subprocess_8dev():
+    """The fleet engine on the batched shard_map collective (DESIGN.md §8):
+    all B problems screened per wire round == B serial solves."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.launch.mesh import make_host_mesh
+from repro.distributed.saif_sharded import saif_batch_distributed
+from repro.core import saif, SaifConfig
+rng = np.random.default_rng(5)
+n, p, B = 30, 240, 3
+X = rng.uniform(-10, 10, (n, p))
+Ys, lams = [], []
+for i in range(B):
+    w = np.zeros(p); w[rng.choice(p, 12, replace=False)] = rng.uniform(-1, 1, 12)
+    y = X @ w + rng.normal(0, 1, n)
+    Ys.append(y)
+    lams.append((0.05 + 0.05 * i) * float(np.max(np.abs(X.T @ y))))
+mesh = make_host_mesh()
+assert jax.device_count() == 8
+cfg = SaifConfig(eps=1e-8, inner_backend="gram")
+with mesh:
+    res = saif_batch_distributed(X, np.stack(Ys), jnp.asarray(lams), mesh, cfg)
+for i in range(B):
+    ref = saif(X, Ys[i], lams[i], cfg)
+    assert np.array_equal(np.abs(np.asarray(res.beta[i])) > 1e-8,
+                          np.abs(np.asarray(ref.beta)) > 1e-8)
+    assert np.allclose(np.asarray(res.beta[i]), np.asarray(ref.beta),
+                       atol=1e-6)
+print("DIST_BATCH_OK")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd="/root/repo", timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "DIST_BATCH_OK" in r.stdout
+
+
 def test_microbatch_equivalence():
     """Grad accumulation over microbatches == full-batch step (fp32)."""
     from repro.configs import smoke_config
