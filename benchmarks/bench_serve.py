@@ -1,0 +1,133 @@
+"""Serving benchmark: hot-session request latency vs cold per-request
+solves (ISSUE 5 acceptance — BENCH_serve.json).
+
+The comparison is the session API's reason to exist. A server WITHOUT a
+session answers each request from scratch: fresh process-equivalent state
+(``jax.clear_caches()``), fresh preparation, fresh ``_saif_jit``
+compilation, then the solve. A server WITH a session pays preparation
+once at ``open_session`` and compilation once per static key, after
+which every request runs at solve cost with device-resident warm
+buffers.
+
+Protocol (CI shape): R scalar requests cycling over a few lambdas inside
+one pow2 h bucket (one static key — the honest serving regime: clients
+ask for nearby lambdas far more often than for new shapes).
+
+  * cold: per request, ``jax.clear_caches()`` + ``saif(X, y, lam)`` —
+    prep + compile + solve every time;
+  * hot: one ``open_session``; after a warmup pass over the distinct
+    lambdas, the measured pass must add ZERO compilations (asserted via
+    ``session.compile_stats()``).
+
+Acceptance (asserted): hot-session latency >= 3x better than cold
+per-request solves. On CPU CI the gap is dominated by the per-request
+XLA compile (seconds) vs the warm solve (milliseconds), so the measured
+ratio is typically 2-3 orders of magnitude; the 3x gate is deliberately
+conservative — it survives a hypothetical persistent-compilation-cache
+world where cold requests only re-pay preparation + dispatch.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import simulation_data
+
+MIN_SPEEDUP = 3.0   # ISSUE 5 acceptance gate
+N_REQUESTS = 6      # cold requests are expensive (a compile each)
+
+
+def _problem(n, p, seed=0):
+    import jax.numpy as jnp
+
+    from repro.core import get_loss
+    from repro.core.duality import lambda_max
+
+    X, _, _ = simulation_data(n=n, p=p, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    w = np.zeros(p)
+    w[rng.choice(p, 15, replace=False)] = rng.uniform(-1, 1, 15)
+    y = X @ w + rng.normal(0, 1, n)
+    lmax = float(lambda_max(get_loss("least_squares"),
+                            jnp.asarray(X), jnp.asarray(y)))
+    return X, y, lmax
+
+
+def _block(res):
+    jax.block_until_ready(jax.tree.leaves(res)[0])
+
+
+def run(full: bool = False):
+    from repro import Problem, SaifConfig, Scalar, open_session
+    from repro.core import saif
+
+    n, p = (100, 2000) if full else (50, 500)
+    cfg = SaifConfig(eps=1e-6, inner_epochs=3, polish_factor=4)
+    X, y, lmax = _problem(n, p)
+    # the request stream: lambdas inside one h bucket (checked below by
+    # the zero-new-compilations assertion), revisited round-robin
+    fracs = [0.30, 0.28, 0.26, 0.29, 0.27, 0.25][:N_REQUESTS]
+    lams = [f * lmax for f in fracs]
+
+    # --- cold: per-request prep + compile + solve ------------------------
+    t_cold = 0.0
+    for lam in lams:
+        jax.clear_caches()
+        t0 = time.perf_counter()
+        _block(saif(X, y, lam, cfg))
+        t_cold += time.perf_counter() - t0
+    cold_per_req = t_cold / len(lams)
+
+    # --- hot: one session, measured pass after warmup --------------------
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    session = open_session(Problem(X=X, y=y), cfg)
+    t_open = time.perf_counter() - t0
+    # warmup: TWO passes over the distinct lambdas. The first pass may
+    # grow the warm capacity mid-stream (a smaller lambda can bump the h
+    # bucket), so a lambda served early can still map to a fresh static
+    # key on its next visit; the second pass compiles any such residue —
+    # after it, the key set is closed and the measured pass is pure
+    # serving.
+    for _ in range(2):
+        for lam in lams:
+            _block(session.solve(Scalar(lam, warm=True)))
+    stats0 = session.compile_stats()
+    t_hot = 0.0
+    for lam in lams:                      # measured: the hot request loop
+        t0 = time.perf_counter()
+        _block(session.solve(Scalar(lam, warm=True)))
+        t_hot += time.perf_counter() - t0
+    hot_per_req = t_hot / len(lams)
+    stats1 = session.compile_stats()
+    hot_compiles = stats1.since_open - stats0.since_open
+    assert hot_compiles == 0, (
+        f"hot session recompiled {hot_compiles} times during the "
+        f"measured pass (contract: one compilation per static key)")
+
+    speedup = cold_per_req / max(hot_per_req, 1e-12)
+    row = {
+        "n": n, "p": p, "requests": len(lams),
+        "cold_s_per_req": round(cold_per_req, 4),
+        "hot_s_per_req": round(hot_per_req, 6),
+        "open_session_s": round(t_open, 4),
+        "speedup": round(speedup, 1),
+        "hot_pass_compilations": hot_compiles,
+        "warm_compilations": stats0.since_open,
+        "min_speedup": MIN_SPEEDUP,
+    }
+    print(f"[serve] n={n} p={p} R={len(lams)} "
+          f"cold={cold_per_req * 1e3:.0f}ms/req "
+          f"hot={hot_per_req * 1e3:.1f}ms/req "
+          f"speedup={speedup:.0f}x (gate {MIN_SPEEDUP}x, "
+          f"hot-pass compiles={hot_compiles})")
+    assert speedup >= MIN_SPEEDUP, (
+        f"hot session reached only {speedup:.2f}x over cold per-request "
+        f"solves (acceptance {MIN_SPEEDUP}x)")
+    return [row]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,13 +1,14 @@
-"""Pick lambda by K-fold cross-validation with the fleet engine.
+"""Pick lambda by K-fold cross-validation through the session API.
 
     PYTHONPATH=src python examples/cv_readme.py
 
-``cv_path`` (DESIGN.md §8) solves the whole K-folds x L-lambdas grid as a
-fleet: the K fold problems share the design matrix (fold masking is done
-with per-problem sample weights, so no row copies are made), run in
-lockstep inside ONE compiled solver, and warm-start each other down the
-lambda grid exactly like the serial path engine. The winner is refit on
-the full data with the serial SAIF solver.
+A ``CV`` request (DESIGN.md §8/§9) solves the whole K-folds x L-lambdas
+grid as a fleet: the K fold problems share the design matrix (fold
+masking is done with per-problem sample weights, so no row copies are
+made), run in lockstep inside ONE compiled solver, and warm-start each
+other down the lambda grid exactly like the serial path engine. The
+winner is refit on the full data with the serial SAIF solver — all of it
+behind one ``session.solve``.
 """
 import jax
 jax.config.update("jax_enable_x64", True)
@@ -15,7 +16,8 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import SaifConfig, cv_path, get_loss, lambda_grid
+from repro import CV, Problem, SaifConfig, open_session
+from repro.core import get_loss, lambda_grid
 from repro.core.duality import lambda_max
 
 
@@ -34,7 +36,8 @@ def main():
     print(f"CV: n={n} p={p} | {len(lams)} lambdas x 5 folds "
           f"(lambda_max={lmax:.1f})")
 
-    res = cv_path(X, y, lams, n_folds=5, config=SaifConfig(eps=1e-7))
+    session = open_session(Problem(X=X, y=y), SaifConfig(eps=1e-7))
+    res = session.solve(CV(n_folds=5, lams=tuple(lams)))
     print(f"fleet compilations: {res.n_compilations} "
           f"(one solver serves all {5 * len(lams)} fold-lambda solves)")
     for lam, m, se in zip(res.lams, res.cv_mean, res.cv_se):

@@ -1,6 +1,12 @@
-"""Quickstart: solve a LASSO problem with SAIF and verify the safe guarantee.
+"""Quickstart: open a SAIF session, solve a LASSO problem, verify the
+safe guarantee against the unscreened oracle.
 
     PYTHONPATH=src python examples/quickstart.py
+
+``open_session`` (DESIGN.md §9) prepares the problem once — null-gradient
+scores, column norms, backend resolution — and then serves any number of
+requests from the same compiled state; ``session.solve(Scalar(lam))`` is
+one such request.
 """
 import jax
 jax.config.update("jax_enable_x64", True)
@@ -8,7 +14,8 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import SaifConfig, get_loss, saif, solve_lasso_cm
+from repro import Problem, SaifConfig, Scalar, open_session
+from repro.core import get_loss, solve_lasso_cm
 from repro.core.duality import lambda_max
 
 
@@ -25,7 +32,8 @@ def main():
     lam = 0.05 * lmax
     print(f"LASSO: n={n} p={p} lambda={lam:.1f} (lambda_max={lmax:.1f})")
 
-    res = saif(X, y, lam, SaifConfig(eps=1e-7))
+    session = open_session(Problem(X=X, y=y), SaifConfig(eps=1e-7))
+    res = session.solve(Scalar(lam))
     print(f"SAIF: {int(res.n_outer)} outer iters, "
           f"|A|={int(res.n_active)}, gap={float(res.gap):.2e}")
 
@@ -38,6 +46,15 @@ def main():
     P = lambda b: float(loss.primal_objective(jnp.asarray(X), jnp.asarray(y),
                                               b, lam))
     print(f"objective: SAIF={P(res.beta):.6f} reference={P(beta_ref):.6f}")
+
+    # the session stays hot: a second request at a nearby lambda reuses
+    # the preparation, the compilation AND (with warm=True) the previous
+    # solve's device-resident active set
+    res2 = session.solve(Scalar(0.8 * lam, warm=True))
+    stats = session.compile_stats()
+    print(f"second request (warm): |A|={int(res2.n_active)}, "
+          f"gap={float(res2.gap):.2e}; session compiles="
+          f"{stats.since_open} over {stats.requests} requests")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,37 @@
+"""Run every SAIF example with repro's own deprecation warnings promoted
+to errors — the CI serve-smoke gate (ISSUE 5).
+
+    PYTHONPATH=src python examples/run_all.py
+
+The examples are the first-party consumers of the public surface; they
+must live entirely on the session API. Every legacy shim's
+``DeprecationWarning`` message contains the literal ``use
+repro.open_session`` (see ``repro/core/_compat.py``), so exactly that
+pattern is an error here: if any example — or any first-party code path
+an example exercises — falls back onto a deprecated frontend, this
+runner fails. Third-party DeprecationWarnings (jax, numpy) are
+untouched.
+"""
+import pathlib
+import runpy
+import sys
+import warnings
+
+EXAMPLES = ["quickstart", "lasso_path", "cv_readme", "serving"]
+
+
+def main():
+    warnings.filterwarnings(
+        "error", category=DeprecationWarning,
+        message=r".*use repro\.open_session.*")
+    here = pathlib.Path(__file__).resolve().parent
+    for name in EXAMPLES:
+        print(f"\n=== examples/{name}.py ===", flush=True)
+        runpy.run_path(str(here / f"{name}.py"), run_name="__main__")
+    print(f"\nall {len(EXAMPLES)} examples ran with zero repro "
+          f"deprecation warnings")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,96 @@
+"""Serving demo: ONE session, a stream of heterogeneous requests.
+
+    PYTHONPATH=src python examples/serving.py
+
+This is the workload the session API exists for (ISSUE 5 / DESIGN.md §9):
+a server holds ``open_session(problem)`` for the lifetime of the problem
+and answers a request stream — scalar solves at client-chosen lambdas
+(warm-started from the previous answer), whole paths, fresh-response
+fleets — without ever re-preparing or re-compiling. Watch the latency
+column: the first request at a new static signature pays the one-time
+compile, every later request runs at solve cost, and
+``session.compile_stats()`` proves the caches stopped moving.
+"""
+import time
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro import Fleet, Path, Problem, SaifConfig, Scalar, open_session
+from repro.core import get_loss
+from repro.core.duality import lambda_max
+
+
+def timed(session, request):
+    t0 = time.perf_counter()
+    res = session.solve(request)
+    jax.block_until_ready(jax.tree.leaves(res)[0])
+    return res, (time.perf_counter() - t0) * 1e3
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, p = 80, 1200
+    X = rng.uniform(-10, 10, (n, p))
+    w = np.zeros(p)
+    w[rng.choice(p, 20, replace=False)] = rng.uniform(-1, 1, 20)
+    y = X @ w + rng.normal(0, 1, n)
+    lmax = float(lambda_max(get_loss("least_squares"),
+                            jnp.asarray(X), jnp.asarray(y)))
+
+    t0 = time.perf_counter()
+    session = open_session(Problem(X=X, y=y), SaifConfig(eps=1e-6))
+    print(f"session open (one-time preparation): "
+          f"{(time.perf_counter() - t0) * 1e3:.0f} ms")
+
+    # a client streaming scalar requests at nearby lambdas — the bread
+    # and butter of a screening server. warm=True hands the previous
+    # solve's device-resident active set + Gram carry to the next one.
+    print("\nscalar request stream (warm-started):")
+    for i, frac in enumerate([0.30, 0.28, 0.26, 0.24, 0.22, 0.20,
+                              0.25, 0.27]):
+        res, ms = timed(session, Scalar(frac * lmax, warm=i > 0))
+        nnz = int(res.n_active)
+        print(f"  req {i}: lam={frac:.2f}*lmax  |A|={nnz:3d}  "
+              f"gap={float(res.gap):.1e}  {ms:8.1f} ms"
+              + ("   <- pays the compile" if i == 0 else ""))
+
+    # a full path request rides the same session
+    grid = np.geomspace(0.6 * lmax, 0.1 * lmax, 8)
+    pr, ms = timed(session, Path(tuple(grid)))
+    print(f"\npath request ({len(grid)} lambdas): {ms:.1f} ms, "
+          f"{pr.n_compilations} new compilations")
+
+    # fresh responses arrive: a fleet request over the SAME design — the
+    # batch engine solves them in lockstep in one compiled program
+    Y = np.stack([X @ (w * s) + rng.normal(0, 1, n)
+                  for s in (0.8, 1.1, 0.9, 1.3)])
+    fleet, ms = timed(session, Fleet(Y=Y, lams=0.25 * lmax))
+    print(f"fleet request (B={Y.shape[0]} new responses): {ms:.1f} ms, "
+          f"gaps={[f'{g:.0e}' for g in np.asarray(fleet.gap)]}")
+
+    # replay part of the stream. The first replay pass may add one last
+    # static key (the path request above grew the warm capacity, and a
+    # warm scalar at the grown capacity is a new shape); the second pass
+    # is the steady state — it must add ZERO compilations.
+    print("\nhot replay (steady state):")
+    for frac in (0.30, 0.24, 0.20):
+        timed(session, Scalar(frac * lmax, warm=True))
+    stats0 = session.compile_stats()
+    for frac in (0.30, 0.24, 0.20):
+        _, ms = timed(session, Scalar(frac * lmax, warm=True))
+        print(f"  lam={frac:.2f}*lmax: {ms:.1f} ms")
+    stats1 = session.compile_stats()
+    print(f"\ncompile_stats: serial={stats1.serial} fleet={stats1.fleet} "
+          f"group={stats1.group} | {stats1.since_open} compilations for "
+          f"{stats1.requests} requests "
+          f"(steady-state replay added "
+          f"{stats1.since_open - stats0.since_open})")
+    assert stats1.since_open == stats0.since_open, "hot session recompiled!"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,2 +1,50 @@
-"""repro: SAIF sparse-learning framework (JAX, multi-pod)."""
-__version__ = "0.1.0"
+"""repro: SAIF sparse-learning framework (JAX, multi-pod).
+
+The public serving surface lives here (DESIGN.md §9)::
+
+    from repro import Problem, Scalar, Path, Fleet, CV, open_session
+
+    session = open_session(Problem(X=X, y=y), SaifConfig(eps=1e-7))
+    res = session.solve(Scalar(lam))          # ... and keep serving
+
+Attributes load lazily (PEP 562): ``from repro import open_session,
+Problem`` imports no jax-heavy solver module — the engines are pulled in
+on first use (``open_session(...)`` / ``session.solve(...)``).
+"""
+from __future__ import annotations
+
+import importlib
+
+__version__ = "0.2.0"
+
+# name -> defining module; resolved on first attribute access
+_EXPORTS = {
+    # the unified Problem/Session API (repro.core.api is import-light)
+    "Problem": "repro.core.api", "Session": "repro.core.api",
+    "open_session": "repro.core.api",
+    "Scalar": "repro.core.api", "Path": "repro.core.api",
+    "Fleet": "repro.core.api", "CV": "repro.core.api",
+    "lasso": "repro.core.api", "fused": "repro.core.api",
+    "group": "repro.core.api",
+    "LassoPenalty": "repro.core.api", "FusedPenalty": "repro.core.api",
+    "GroupPenalty": "repro.core.api",
+    "GroupPathResult": "repro.core.api",
+    "CompileStats": "repro.core.api",
+    "unified_compile_count": "repro.core.api",
+    # configs + the one-shot convenience solver
+    "SaifConfig": "repro.core.saif", "SaifResult": "repro.core.saif",
+    "saif": "repro.core.saif",
+    "GroupSaifConfig": "repro.core.group",
+}
+
+__all__ = sorted(_EXPORTS) + ["__version__"]
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(__all__) | set(globals()))

@@ -1,64 +1,161 @@
 """Core SAIF library — the paper's contribution in JAX.
 
-Public API:
-  saif, SaifConfig, SaifResult           — Algorithm 1/2
-  saif_path                              — warm-started lambda path (Sec 5.3)
-  saif_batch                             — lockstep fleet solves (DESIGN §8)
-  cv_path                                — K-fold CV lambda selection (§8)
-  dynamic_screening                      — gap-safe dynamic baseline
-  sequential_path                        — DPP-style sequential baseline
-  homotopy_path                          — unsafe strong-rule baseline (Table 1)
-  saif_fused / fused_baseline_cm         — tree fused LASSO (Sec 4)
-  solve_lasso_cm                         — unscreened oracle solver
-"""
-from repro.core.batch import (prepare_fleet, saif_batch,
-                              saif_batch_compile_count)
-from repro.core.cv import CVPathResult, cv_path, kfold_weights
-from repro.core.cm import gram_epochs, solve_lasso_cm, soft_threshold
-from repro.core.dynamic import DynConfig, dynamic_screening
-from repro.core.group import (GroupSaifConfig, group_lambda_max, group_saif,
-                              solve_group_lasso_bcd)
-from repro.core.fused import (FusedDesign, FusedPathResult, build_schedule,
-                              build_tree, fused_baseline_cm,
-                              fused_lambda_max, fused_objective, fused_path,
-                              prepare_fused, recover_beta,
-                              recover_beta_device, recover_from_transformed,
-                              saif_fused, saif_fused_eliminated,
-                              transform_design, transform_design_device,
-                              transform_design_scan)
-from repro.core.homotopy import HomotopyConfig, homotopy_path, support_metrics
-from repro.core.losses import get_loss, least_squares, logistic
-from repro.core.path import (PathState, SaifPathResult, lambda_grid,
-                             prepare_path, saif_path, saif_path_naive)
-from repro.core.inner_backend import (InnerBackend, InnerCarry, InnerOut,
-                                      make_inner_gram, make_inner_jnp,
-                                      make_inner_pallas,
-                                      resolve_inner_backend)
-from repro.core.saif import (SaifConfig, SaifResult, saif,
-                             saif_jit_compile_count)
-from repro.core.screen_backend import (ScreenFn, ScreenOut, make_screen_jnp,
-                                       make_screen_pallas, resolve_backend)
-from repro.core.sequential import SeqConfig, sequential_path
+Primary surface (DESIGN.md §9):
+  Problem, open_session, Session          — declarative spec + serving
+  Scalar, Path, Fleet, CV                 — the request types
+  saif, SaifConfig, SaifResult            — one-shot Algorithm 1/2
 
-__all__ = [
-    "saif", "SaifConfig", "SaifResult", "saif_path", "saif_path_naive",
-    "SaifPathResult", "PathState", "prepare_path", "lambda_grid",
-    "saif_batch", "saif_batch_compile_count", "prepare_fleet",
-    "cv_path", "CVPathResult", "kfold_weights",
-    "saif_jit_compile_count", "ScreenFn", "ScreenOut", "make_screen_jnp",
-    "make_screen_pallas", "resolve_backend",
-    "InnerBackend", "InnerCarry", "InnerOut", "make_inner_jnp",
-    "make_inner_gram", "make_inner_pallas", "resolve_inner_backend",
-    "gram_epochs",
-    "dynamic_screening", "DynConfig", "sequential_path", "SeqConfig",
-    "homotopy_path", "HomotopyConfig", "support_metrics",
-    "group_saif", "GroupSaifConfig", "group_lambda_max",
-    "solve_group_lasso_bcd",
-    "saif_fused", "saif_fused_eliminated", "fused_baseline_cm",
-    "fused_objective", "fused_path", "fused_lambda_max", "FusedDesign",
-    "FusedPathResult", "prepare_fused", "build_tree", "build_schedule",
-    "transform_design", "transform_design_scan", "transform_design_device",
-    "recover_beta", "recover_beta_device", "recover_from_transformed",
-    "solve_lasso_cm", "soft_threshold",
-    "get_loss", "least_squares", "logistic",
-]
+Legacy frontends (deprecated shims over one-shot sessions; each warns
+once per process — migration table in DESIGN.md §9):
+  saif_path, saif_batch, cv_path          — path / fleet / K-fold CV
+  saif_fused, fused_path, group_saif      — fused and group penalties
+
+Attributes resolve lazily (PEP 562): importing :mod:`repro.core` pulls in
+no jax-heavy engine until the name is actually touched, so
+``from repro import Problem, open_session`` stays cheap. ``from
+repro.core import <name>`` keeps working for every pre-session export.
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+import types
+
+# name -> defining module (resolved on first attribute access)
+_EXPORTS = {
+    # unified serving API (DESIGN.md §9)
+    "Problem": "repro.core.api", "Session": "repro.core.api",
+    "open_session": "repro.core.api",
+    "Scalar": "repro.core.api", "Path": "repro.core.api",
+    "Fleet": "repro.core.api", "CV": "repro.core.api",
+    "lasso": "repro.core.api",
+    "LassoPenalty": "repro.core.api", "FusedPenalty": "repro.core.api",
+    "GroupPenalty": "repro.core.api",
+    "GroupPathResult": "repro.core.api",
+    "CompileStats": "repro.core.api",
+    "unified_compile_count": "repro.core.api",
+    # NOTE: the fused(parent)/group(gsize) penalty factories are NOT
+    # re-exported here — they would shadow the repro.core.fused /
+    # repro.core.group submodules. Use repro.fused / repro.group (the
+    # top-level surface) or repro.core.api.fused / .group.
+
+    # serial solver
+    "saif": "repro.core.saif", "solve_scalar": "repro.core.saif",
+    "SaifConfig": "repro.core.saif", "SaifResult": "repro.core.saif",
+    "saif_jit_compile_count": "repro.core.saif",
+    "PathState": "repro.core.saif", "prepare_path": "repro.core.saif",
+
+    # path engine
+    "run_path": "repro.core.path", "saif_path": "repro.core.path",
+    "saif_path_naive": "repro.core.path",
+    "SaifPathResult": "repro.core.path", "lambda_grid": "repro.core.path",
+
+    # fleet engine
+    "fleet_solve": "repro.core.batch", "saif_batch": "repro.core.batch",
+    "saif_batch_compile_count": "repro.core.batch",
+    "prepare_fleet": "repro.core.batch",
+
+    # cross-validation
+    "cv_solve": "repro.core.cv", "cv_path": "repro.core.cv",
+    "CVPathResult": "repro.core.cv", "kfold_weights": "repro.core.cv",
+
+    # oracle / inner machinery
+    "solve_lasso_cm": "repro.core.cm", "soft_threshold": "repro.core.cm",
+    "gram_epochs": "repro.core.cm",
+    "InnerBackend": "repro.core.inner_backend",
+    "InnerCarry": "repro.core.inner_backend",
+    "InnerOut": "repro.core.inner_backend",
+    "make_inner_jnp": "repro.core.inner_backend",
+    "make_inner_gram": "repro.core.inner_backend",
+    "make_inner_pallas": "repro.core.inner_backend",
+    "resolve_inner_backend": "repro.core.inner_backend",
+
+    # screening backends
+    "ScreenFn": "repro.core.screen_backend",
+    "ScreenOut": "repro.core.screen_backend",
+    "make_screen_jnp": "repro.core.screen_backend",
+    "make_screen_pallas": "repro.core.screen_backend",
+    "resolve_backend": "repro.core.screen_backend",
+
+    # baselines
+    "dynamic_screening": "repro.core.dynamic",
+    "DynConfig": "repro.core.dynamic",
+    "sequential_path": "repro.core.sequential",
+    "SeqConfig": "repro.core.sequential",
+    "homotopy_path": "repro.core.homotopy",
+    "HomotopyConfig": "repro.core.homotopy",
+    "support_metrics": "repro.core.homotopy",
+
+    # group subsystem
+    "group_saif": "repro.core.group", "group_solve": "repro.core.group",
+    "GroupSaifConfig": "repro.core.group",
+    "GroupSaifResult": "repro.core.group",
+    "group_lambda_max": "repro.core.group",
+    "group_compile_count": "repro.core.group",
+    "prepare_group": "repro.core.group",
+    "solve_group_lasso_bcd": "repro.core.group",
+
+    # fused subsystem
+    "saif_fused": "repro.core.fused",
+    "saif_fused_eliminated": "repro.core.fused",
+    "fused_baseline_cm": "repro.core.fused",
+    "fused_objective": "repro.core.fused",
+    "fused_path": "repro.core.fused",
+    "fused_lambda_max": "repro.core.fused",
+    "FusedDesign": "repro.core.fused",
+    "FusedPathResult": "repro.core.fused",
+    "prepare_fused": "repro.core.fused",
+    "build_tree": "repro.core.fused", "build_schedule": "repro.core.fused",
+    "transform_design": "repro.core.fused",
+    "transform_design_scan": "repro.core.fused",
+    "transform_design_device": "repro.core.fused",
+    "recover_beta": "repro.core.fused",
+    "recover_beta_device": "repro.core.fused",
+    "recover_from_transformed": "repro.core.fused",
+
+    # losses
+    "get_loss": "repro.core.losses",
+    "least_squares": "repro.core.losses",
+    "logistic": "repro.core.losses",
+}
+
+_SUBMODULES = {
+    "active_set", "api", "batch", "cm", "cv", "duality", "dynamic",
+    "fused", "group", "homotopy", "inner_backend", "losses", "path",
+    "saif", "screen_backend", "sequential",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.core.{name}")
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(__all__) | _SUBMODULES | set(globals()))
+
+
+class _LazyCoreModule(types.ModuleType):
+    """Keeps ``from repro.core import saif`` resolving to the *function*.
+
+    ``saif`` is both a submodule name and a public export; the import
+    machinery sets the submodule as a package attribute at first load,
+    which would then shadow the PEP 562 ``__getattr__`` above. Dropping
+    exactly that setattr keeps every access on the lazy resolver (only
+    docstrings ever reference ``repro.core.saif`` dotted; code uses
+    ``from repro.core.saif import ...``, which goes through sys.modules
+    and is unaffected).
+    """
+
+    def __setattr__(self, name, value):
+        if name == "saif" and isinstance(value, types.ModuleType):
+            return
+        super().__setattr__(name, value)
+
+
+sys.modules[__name__].__class__ = _LazyCoreModule

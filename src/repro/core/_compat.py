@@ -1,0 +1,36 @@
+"""One-shot deprecation plumbing for the legacy frontends (DESIGN.md §9).
+
+Every pre-session frontend (``saif_path``, ``saif_batch``, ``cv_path``,
+``fused_path``, ``group_saif``, the ``*_distributed`` trio, ...) now
+delegates to the unified :mod:`repro.core.api` session and announces the
+migration exactly once per process. The message deliberately contains the
+literal string ``use repro.open_session`` — the CI serving smoke job turns
+exactly that pattern into an error when running the examples, so no
+first-party entry point can silently regress onto a deprecated surface.
+"""
+from __future__ import annotations
+
+import warnings
+
+_WARNED: set = set()
+
+
+def warn_deprecated(old: str, new: str) -> None:
+    """Emit the one-shot ``DeprecationWarning`` for a legacy frontend.
+
+    ``old`` is the legacy callable, ``new`` the session-side call shape
+    (the full table lives in DESIGN.md §9). Idempotent per process so
+    request loops built on a legacy shim do not spam.
+    """
+    if old in _WARNED:
+        return
+    _WARNED.add(old)
+    warnings.warn(
+        f"{old} is deprecated: use repro.open_session(...) and "
+        f"{new} instead (migration table: DESIGN.md §9)",
+        DeprecationWarning, stacklevel=3)
+
+
+def reset_deprecation_warnings() -> None:
+    """Forget which one-shot warnings already fired (test hook)."""
+    _WARNED.clear()

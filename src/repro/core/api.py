@@ -1,0 +1,674 @@
+"""Unified Problem/Session serving API — one declarative spec, one
+persistent compiled session for every SAIF workload (DESIGN.md §9).
+
+The SAFE line of work (El Ghaoui et al. 2013; Liu et al. 2014) frames safe
+screening as a reusable *pre-solve service*, not a one-shot call — and the
+repo's engines already price their economics that way: preparation
+(c0 / column norms / the Theorem-6 transform / fleet prep) is one-time,
+compilations are keyed on static shapes and meant to be reused, and warm
+slot buffers hand device-resident state from one solve to the next. What
+was missing is the object that *owns* that state across calls. This module
+is that object:
+
+  * :class:`Problem` — the declarative spec: design ``X``, response(s)
+    ``y``, ``loss``, penalty ∈ {:func:`lasso` (default), :func:`fused`
+    (tree ``parent``), :func:`group` (``gsize``)}, optional sample
+    ``weights``.
+  * :func:`open_session` — performs preparation exactly once, resolves the
+    screen/inner backends through the existing ``resolve_*`` policies, and
+    returns a long-lived :class:`Session`.
+  * ``session.solve(request)`` — ONE entry point for every workload. A
+    request is :class:`Scalar`, :class:`Path`, :class:`Fleet` or
+    :class:`CV` — any of them with ``sharded=True`` to ride the §5
+    feature-sharded screening collective (the session needs a ``mesh``).
+  * ``session.compile_stats()`` — the per-module compile counters
+    (``saif_jit_compile_count`` / ``saif_batch_compile_count`` /
+    ``group_compile_count``) unified into one report; the serving
+    contract is *one compilation per static key across the whole request
+    stream*, asserted in tests/test_api.py.
+
+Dispatch lands on the existing engines — ``_saif_jit`` via
+:func:`repro.core.saif.solve_scalar`, the compile-first path engine
+:func:`repro.core.path.run_path`, the fleet engine
+:func:`repro.core.batch.fleet_solve`, :func:`repro.core.cv.cv_solve`,
+:func:`repro.core.group.group_solve` and the sharded drivers — so session
+results are BITWISE those of the legacy frontends (which are now thin
+deprecated shims over one-shot sessions; migration table in DESIGN.md §9).
+
+Default requests are *cold* (bitwise-reproducible, parity-testable);
+``Scalar(lam, warm=True)`` / ``Path(lams, warm=True)`` opt into the
+device-resident warm handoff — the previous solve's slot layout and inner
+(Gram) carry seed the next solve exactly like the intra-path warm starts,
+now *across* requests. That plus the persistent jit caches is what makes a
+hot session serve a request stream at solve cost instead of
+compile+prep+solve cost (benchmarks/bench_serve.py).
+
+This module imports nothing jax-heavy at module scope: ``from repro
+import Problem, Scalar, open_session`` stays cheap, and the engines load
+on first use (the lazy surface contract of ``repro/__init__.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Any, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Problem", "Session", "open_session",
+    "Scalar", "Path", "Fleet", "CV",
+    "lasso", "fused", "group",
+    "LassoPenalty", "FusedPenalty", "GroupPenalty",
+    "GroupPathResult", "CompileStats", "unified_compile_count",
+]
+
+
+# ---------------------------------------------------------------------------
+# penalty specs (plain data — no engine imports)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LassoPenalty:
+    """Plain l1 penalty (the paper's Sections 2-3 problem)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedPenalty:
+    """Tree fused-LASSO penalty ``lam * ||D beta||_1`` over the tree
+    encoded by ``parent`` (Sec 4 / DESIGN.md §7). The session performs the
+    Theorem-6 transform exactly once at ``open_session``."""
+    parent: Any                       # (p,) parent ids, -1 at the root
+    transform_backend: str = "auto"   # "auto" | "scan" | "pallas"
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPenalty:
+    """Disjoint equal-size group-LASSO penalty (the paper's proposed
+    extension; DESIGN.md §9)."""
+    gsize: int
+
+
+def lasso() -> LassoPenalty:
+    """Penalty spec: plain LASSO (also the default, spelled ``"lasso"``)."""
+    return LassoPenalty()
+
+
+def fused(parent, transform_backend: str = "auto") -> FusedPenalty:
+    """Penalty spec: tree fused LASSO over ``parent`` (−1 marks the root)."""
+    return FusedPenalty(parent=np.asarray(parent),
+                        transform_backend=transform_backend)
+
+
+def group(gsize: int) -> GroupPenalty:
+    """Penalty spec: group LASSO with consecutive groups of size ``gsize``."""
+    return GroupPenalty(gsize=int(gsize))
+
+
+def _coerce_penalty(pen) -> Any:
+    if pen is None or pen == "lasso":
+        return LassoPenalty()
+    if isinstance(pen, (LassoPenalty, FusedPenalty, GroupPenalty)):
+        return pen
+    raise TypeError(
+        f"unknown penalty spec {pen!r}: use 'lasso', lasso(), "
+        f"fused(parent) or group(gsize)")
+
+
+# ---------------------------------------------------------------------------
+# the declarative problem spec + requests
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Problem:
+    """What to solve — independent of how and how often it will be served.
+
+    ``y`` may be omitted for a fleet-only session (every :class:`Fleet`
+    request carries its own responses). ``weights`` are optional sample
+    weights for the default response; weighted problems ride the fleet
+    engine (DESIGN.md §8), which is the one place the weighted gradient
+    algebra lives.
+    """
+    X: Any
+    y: Any = None
+    loss: str = "least_squares"
+    penalty: Any = "lasso"
+    weights: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Scalar:
+    """One solve at ``lam``. ``warm=True`` seeds from the session's
+    device-resident warm state (slot layout + inner carry of the previous
+    serial solve); the default is a cold, bitwise-reproducible solve."""
+    lam: float
+    warm: bool = False
+    sharded: bool = False
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Path:
+    """A descending lambda grid on the compile-first path engine.
+    ``warm=True`` enters the grid from the session's warm state instead of
+    the cold top-h start."""
+    lams: Any
+    warm: bool = False
+    sharded: bool = False
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Fleet:
+    """B lockstep solves over the shared design: per-request responses
+    ``Y`` ((B, n) — a (n,) vector is a fleet of 1), scalar-or-(B,)
+    ``lams``, optional (B, n) sample ``weights``. ``screen_fn`` is the
+    advanced hook for a custom batched screening backend."""
+    Y: Any
+    lams: Any
+    weights: Any = None
+    sharded: bool = False
+    screen_fn: Any = None
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CV:
+    """K-fold cross-validation over a lambda grid (one fold-fleet
+    compilation; DESIGN.md §8), scored by mean held-out loss, optionally
+    refit at the winner."""
+    n_folds: int
+    lams: Any
+    seed: int = 0
+    keep_fold_betas: bool = False
+    refit: bool = True
+    sharded: bool = False
+
+
+class GroupPathResult(NamedTuple):
+    """Lambda path over a group-LASSO problem (a session-only workload —
+    the legacy surface had no group path)."""
+    lams: np.ndarray
+    betas: List[Any]
+    results: List[Any]                    # GroupSaifResult per lambda
+    n_compilations: Optional[int] = None  # _gsaif_jit compiles added
+
+
+# ---------------------------------------------------------------------------
+# unified compile accounting
+# ---------------------------------------------------------------------------
+
+class CompileStats(NamedTuple):
+    """Unified view of every solver-core jit cache (DESIGN.md §9).
+
+    ``serial``/``fleet``/``group`` are the process-wide cache sizes of
+    ``_saif_jit`` / ``_saif_batch_jit`` / ``_gsaif_jit`` (-1 if the jit
+    internals moved); ``since_open`` is the total's delta since the
+    session opened — the number every serving assertion watches: across
+    any request stream it must equal the number of *distinct static
+    keys*, never the number of requests.
+    """
+    serial: int
+    fleet: int
+    group: int
+    total: int
+    since_open: int
+    requests: int
+
+
+def _cache_size(mod_name: str, fn_name: str) -> int:
+    """Cache size of one engine's jit, 0 if the module was never imported
+    (an un-imported engine has compiled nothing), -1 if unreadable."""
+    mod = sys.modules.get(mod_name)
+    if mod is None:
+        return 0
+    try:
+        return int(getattr(mod, fn_name)._cache_size())
+    except Exception:       # pragma: no cover - jit internals moved
+        return -1
+
+
+def _engine_cache_sizes() -> Tuple[int, int, int]:
+    return (_cache_size("repro.core.saif", "_saif_jit"),
+            _cache_size("repro.core.batch", "_saif_batch_jit"),
+            _cache_size("repro.core.group", "_gsaif_jit"))
+
+
+def unified_compile_count() -> int:
+    """Total solver-core compilations alive in this process: the serial,
+    fleet and group engine caches in one number (supersedes reading the
+    three per-module counters separately)."""
+    sizes = _engine_cache_sizes()
+    if min(sizes) < 0:
+        return -1
+    return sum(sizes)
+
+
+# ---------------------------------------------------------------------------
+# the session
+# ---------------------------------------------------------------------------
+
+class Session:
+    """A long-lived solver for one :class:`Problem`.
+
+    Owns, for its whole lifetime:
+
+      * the one-time preparation (``PathState`` c0/col-norm stats, the
+        Theorem-6 ``FusedDesign``, the ``GroupPrep``, the sharded design
+        placement) — requests never re-prepare;
+      * the resolved screen-backend policy and the per-h screen-function
+        memo (ScreenFn objects are jit-static arguments, so they must be
+        *the same object* across requests to share a compilation);
+      * the device-resident warm state — slot layout, coefficients and
+        inner (Gram) carry of the last serial solve, used by
+        ``warm=True`` requests;
+      * the request/compile accounting behind :meth:`compile_stats`.
+
+    Construct via :func:`open_session`. Results are exactly the legacy
+    frontends' result types (``SaifResult``, ``SaifPathResult``,
+    ``FusedPathResult``, ``CVPathResult``, ``GroupSaifResult``, ...), and
+    for default (cold) requests they are bitwise the legacy results.
+    """
+
+    def __init__(self, problem: Problem, config=None, *, mesh=None,
+                 segment_len: int = 16, make_screen=None):
+        self.problem = problem
+        self.penalty = _coerce_penalty(problem.penalty)
+        self.mesh = mesh
+        self._segment_len = segment_len
+        self._make_screen = make_screen
+        self._screen_memo = {}          # h -> ScreenFn (make_screen hook)
+        self._sharded = None            # ShardedDesign, built lazily
+        self._sharded_screen_memo = {}  # h -> sharded ScreenFn
+        self._sharded_prep = None       # PathState over the padded design
+        self._sharded_fleet = None      # fleet placement (c0 slot unused)
+        self._sharded_fleet_screens = {}  # h -> batched sharded ScreenFn
+        self._warm = None               # serial WarmState handoff
+        self._warm_k = None
+        self._sharded_warm = None
+        self._sharded_warm_k = None
+        self._gwarm = None              # group (gidx, gmask, beta_slots)
+        self._requests = 0
+
+        if problem.X is None:
+            raise ValueError("Problem.X is required")
+
+        if isinstance(self.penalty, GroupPenalty):
+            from repro.core.group import GroupSaifConfig, prepare_group
+            cfg = config if config is not None else GroupSaifConfig()
+            if not isinstance(cfg, GroupSaifConfig):
+                # accept a SaifConfig spec-side: map the shared fields
+                cfg = GroupSaifConfig(
+                    eps=cfg.eps, inner_epochs=cfg.inner_epochs,
+                    polish_factor=cfg.polish_factor, k_max=cfg.k_max,
+                    max_outer=cfg.max_outer, loss=cfg.loss)
+            if cfg.loss != problem.loss:
+                cfg = dataclasses.replace(cfg, loss=problem.loss)
+            self.config = cfg
+            if problem.y is None:
+                raise ValueError("group sessions need Problem.y")
+            if problem.weights is not None:
+                raise NotImplementedError(
+                    "weighted group problems are not supported")
+            self._gprep = prepare_group(problem.X, problem.y,
+                                        self.penalty.gsize, cfg)
+            self.screen_backend = None   # the group engine has no pluggable
+            self._compiles0 = unified_compile_count()  # screen backend
+            return
+
+        from repro.core.saif import SaifConfig, prepare_path
+        from repro.core.screen_backend import (resolve_backend,
+                                               resolve_batch_screen)
+        cfg = config if config is not None else SaifConfig()
+        if cfg.loss != problem.loss:
+            cfg = dataclasses.replace(cfg, loss=problem.loss)
+
+        if isinstance(self.penalty, FusedPenalty):
+            from repro.core.fused import prepare_fused
+            import jax.numpy as jnp
+            if problem.weights is not None:
+                raise NotImplementedError(
+                    "weighted fused problems are not supported")
+            # the one-time Theorem-6 transform (chain Pallas kernel or
+            # level-schedule scan) — THE preparation the fused session
+            # amortizes over every subsequent request
+            self._design = prepare_fused(problem.X, self.penalty.parent,
+                                         self.penalty.transform_backend)
+            cfg = dataclasses.replace(cfg, unpen_idx=self._design.unpen_idx)
+            self.config = cfg
+            if problem.y is not None:
+                self._y = jnp.asarray(problem.y, self._design.Xt.dtype)
+                self._prep = prepare_path(self._design.Xt, self._y, cfg)
+            else:
+                self._y = None
+                self._prep = None
+        else:
+            self._design = None
+            self.config = cfg
+            self._y = problem.y
+            if problem.weights is not None and make_screen is not None:
+                raise NotImplementedError(
+                    "make_screen with a weighted problem: the fleet "
+                    "engine serving weighted problems takes per-request "
+                    "Fleet(..., screen_fn=...) hooks instead")
+            if problem.y is not None and problem.weights is None:
+                self._prep = prepare_path(problem.X, problem.y, cfg)
+            else:
+                self._prep = None
+        try:
+            self.screen_backend = resolve_backend(cfg.screen_backend)
+        except ValueError:
+            # fleet-only screen modes (the opt-in "matmul" shared-X fast
+            # path, §8) resolve through the batch policy; serial requests
+            # on such a session fail at the engine boundary exactly like
+            # the legacy frontends did. An unknown name raises here.
+            self.screen_backend = resolve_batch_screen(cfg.screen_backend)
+        self._compiles0 = unified_compile_count()
+
+    # ------------------------------------------------------------------
+    # the one entry point
+    # ------------------------------------------------------------------
+
+    def solve(self, request):
+        """Serve one request; see :class:`Scalar` / :class:`Path` /
+        :class:`Fleet` / :class:`CV` for the workload shapes and the
+        module docstring for the result types."""
+        self._requests += 1
+        if isinstance(request, Scalar):
+            return self._solve_scalar(request)
+        if isinstance(request, Path):
+            return self._solve_path(request)
+        if isinstance(request, Fleet):
+            return self._solve_fleet(request)
+        if isinstance(request, CV):
+            return self._solve_cv(request)
+        raise TypeError(f"unknown request {request!r}: expected Scalar, "
+                        f"Path, Fleet or CV")
+
+    def compile_stats(self) -> CompileStats:
+        """Unified compile accounting; see :class:`CompileStats`."""
+        serial, fleet, grp = _engine_cache_sizes()
+        total = -1 if min(serial, fleet, grp) < 0 else serial + fleet + grp
+        base = getattr(self, "_compiles0", 0)
+        since = (total - base) if (total >= 0 and base >= 0) else -1
+        return CompileStats(serial=serial, fleet=fleet, group=grp,
+                            total=total, since_open=since,
+                            requests=self._requests)
+
+    # ------------------------------------------------------------------
+    # dispatch arms
+    # ------------------------------------------------------------------
+
+    def _require_y(self):
+        if self.problem.y is None:
+            raise ValueError(
+                "this request needs a response: the session was opened "
+                "without Problem.y (fleet-only)")
+
+    def _memo_make_screen(self, h: int):
+        if h not in self._screen_memo:
+            self._screen_memo[h] = self._make_screen(h)
+        return self._screen_memo[h]
+
+    def _harvest_warm(self, res):
+        from repro.core.path import _warm_state
+        unpen = self.config.unpen_idx
+        self._warm = _warm_state(res.active_idx, res.active_mask, res.beta,
+                                 res.inner,
+                                 unpen_idx=-1 if unpen is None else unpen)
+        self._warm_k = int(res.active_idx.shape[0])
+
+    def _solve_scalar(self, req: Scalar):
+        if isinstance(self.penalty, GroupPenalty):
+            if req.sharded:
+                raise NotImplementedError(
+                    "sharded group screening is not implemented")
+            from repro.core.group import group_solve
+            res = group_solve(self._gprep, float(req.lam), self.config,
+                              warm=self._gwarm if req.warm else None)
+            self._gwarm = (res.gidx, res.gmask, res.beta_slots)
+            return res
+
+        self._require_y()
+        if self.problem.weights is not None:
+            if req.sharded:
+                raise NotImplementedError(
+                    "weighted sharded solves: per-problem column norms "
+                    "live on the replicated path for now (DESIGN.md §8)")
+            if req.warm:
+                raise NotImplementedError(
+                    "warm weighted solves: the fleet engine serving "
+                    "weighted problems has no cross-request warm handoff "
+                    "yet (DESIGN.md §9)")
+            return self._weighted_scalar(float(req.lam))
+        if req.sharded:
+            res = self._scalar_sharded(float(req.lam), warm=req.warm)
+        elif req.warm or self._make_screen is not None:
+            # a single-lambda run of the path engine: bitwise the cold
+            # solve_scalar when entered cold, and the only driver that
+            # threads the warm handoff and the custom make_screen hook
+            from repro.core.path import run_path
+            pr, warm, k = run_path(self._prep, [float(req.lam)],
+                                   self.config,
+                                   make_screen=(None if self._make_screen
+                                                is None
+                                                else self._memo_make_screen),
+                                   segment_len=self._segment_len,
+                                   warm0=self._warm if req.warm else None,
+                                   k_max0=(self._warm_k if req.warm
+                                           else None))
+            self._warm, self._warm_k = warm, k
+            res = pr.results[0]
+        else:
+            from repro.core.saif import solve_scalar
+            res = solve_scalar(self._prep, float(req.lam), self.config)
+            self._harvest_warm(res)
+        if isinstance(self.penalty, FusedPenalty):
+            from repro.core.fused import recover_from_transformed
+            return recover_from_transformed(res.beta, self._design), res
+        return res
+
+    def _weighted_scalar(self, lam: float):
+        import jax
+        import jax.numpy as jnp
+        from repro.core.batch import fleet_solve
+        y = jnp.asarray(self.problem.y)
+        w = jnp.asarray(self.problem.weights)
+        res = fleet_solve(self.problem.X, y[None, :], lam, self.config,
+                          weights=w[None, :])
+        return jax.tree.map(lambda a: a[0], res)   # drop the B=1 axis
+
+    def _solve_path(self, req: Path):
+        lams = tuple(float(l) for l in req.lams)
+        if isinstance(self.penalty, GroupPenalty):
+            if req.sharded:
+                raise NotImplementedError(
+                    "sharded group screening is not implemented")
+            return self._group_path(lams, warm=req.warm)
+
+        self._require_y()
+        if self.problem.weights is not None:
+            raise NotImplementedError(
+                "weighted lambda paths: submit a Fleet (one lambda per "
+                "weighted problem) or a CV request instead")
+        from repro.core.path import run_path
+        if req.sharded:
+            design = self._sharded_design()
+            prep = self._sharded_path_prep(design)
+            pr, warm, k = run_path(
+                prep, lams, self.config,
+                make_screen=lambda h: self._memo_sharded_screen(design, h),
+                segment_len=self._segment_len,
+                warm0=self._sharded_warm if req.warm else None,
+                k_max0=self._sharded_warm_k if req.warm else None)
+            self._sharded_warm, self._sharded_warm_k = warm, k
+            # slice the padding columns back off (design.p is the true
+            # transformed/plain width)
+            from repro.core.path import SaifPathResult
+            betas = [b[:design.p] for b in pr.betas]
+            pr = SaifPathResult(lams=pr.lams, betas=betas,
+                                results=pr.results,
+                                n_compilations=pr.n_compilations)
+        else:
+            pr, warm, k = run_path(
+                self._prep, lams, self.config,
+                make_screen=(None if self._make_screen is None
+                             else self._memo_make_screen),
+                segment_len=self._segment_len,
+                warm0=self._warm if req.warm else None,
+                k_max0=self._warm_k if req.warm else None)
+            self._warm, self._warm_k = warm, k
+        if isinstance(self.penalty, FusedPenalty):
+            from repro.core.fused import (FusedPathResult,
+                                          recover_from_transformed)
+            betas = [recover_from_transformed(b, self._design)
+                     for b in pr.betas]
+            return FusedPathResult(lams=pr.lams, betas=betas, path=pr)
+        return pr
+
+    def _group_path(self, lams, warm: bool) -> GroupPathResult:
+        from repro.core.group import group_compile_count, group_solve
+        lams_np = np.asarray(sorted(lams, reverse=True))
+        n0 = group_compile_count()
+        cur = self._gwarm if warm else None
+        results = []
+        for lam in lams_np:
+            res = group_solve(self._gprep, float(lam), self.config,
+                              warm=cur)
+            cur = (res.gidx, res.gmask, res.beta_slots)
+            results.append(res)
+        self._gwarm = cur
+        n1 = group_compile_count()
+        n_comp = max(n1 - n0, 0) if (n0 >= 0 and n1 >= 0) else None
+        return GroupPathResult(lams=lams_np,
+                               betas=[r.beta for r in results],
+                               results=results, n_compilations=n_comp)
+
+    def _solve_fleet(self, req: Fleet):
+        if isinstance(self.penalty, GroupPenalty):
+            raise NotImplementedError(
+                "group fleets are not implemented (DESIGN.md §9)")
+        if isinstance(self.penalty, FusedPenalty):
+            raise NotImplementedError(
+                "fused fleets are serial-only for now (DESIGN.md §8)")
+        if self.problem.weights is not None:
+            raise NotImplementedError(
+                "Problem-level weights serve Scalar requests; fleets take "
+                "per-request Fleet(..., weights=...) instead")
+        if req.sharded:
+            self._require_mesh()
+            if req.weights is not None:
+                raise NotImplementedError(
+                    "weighted sharded fleets: per-fold column norms live "
+                    "on the replicated path for now (DESIGN.md §8)")
+            from repro.distributed.saif_sharded import fleet_solve_sharded
+            return fleet_solve_sharded(
+                self.problem.X, req.Y, req.lams, self.mesh, self.config,
+                design=self._sharded_fleet_design(req.Y),
+                screen_cache=self._sharded_fleet_screens)
+        from repro.core.batch import fleet_solve
+        return fleet_solve(self.problem.X, req.Y, req.lams, self.config,
+                           weights=req.weights, screen_fn=req.screen_fn)
+
+    def _solve_cv(self, req: CV):
+        if not isinstance(self.penalty, LassoPenalty):
+            raise NotImplementedError(
+                "cross-validation serves plain-LASSO problems "
+                "(DESIGN.md §8)")
+        if req.sharded:
+            raise NotImplementedError(
+                "sharded CV fleets: per-fold column norms live on the "
+                "replicated path for now (DESIGN.md §8)")
+        if self.problem.weights is not None:
+            raise NotImplementedError(
+                "weighted cross-validation is not supported: CV builds "
+                "its own binary fold weights (DESIGN.md §8)")
+        self._require_y()
+        from repro.core.cv import cv_solve
+        return cv_solve(self.problem.X, self.problem.y,
+                        tuple(float(l) for l in req.lams), req.n_folds,
+                        self.config, seed=req.seed,
+                        keep_fold_betas=req.keep_fold_betas,
+                        refit=req.refit)
+
+    # ------------------------------------------------------------------
+    # sharded plumbing (lazy: built at the first sharded request)
+    # ------------------------------------------------------------------
+
+    def _require_mesh(self):
+        if self.mesh is None:
+            raise ValueError(
+                "sharded=True needs a device mesh: open_session(problem, "
+                "config, mesh=mesh)")
+
+    def _sharded_design(self):
+        self._require_mesh()
+        if self._sharded is None:
+            from repro.distributed.saif_sharded import design_for
+            if isinstance(self.penalty, FusedPenalty):
+                X, y = self._design.Xt, self._y
+            else:
+                X, y = self.problem.X, self.problem.y
+            self._sharded = design_for(X, y, self.mesh, self.config)
+        return self._sharded
+
+    def _sharded_path_prep(self, design):
+        if self._sharded_prep is None:
+            from repro.core.saif import prepare_path
+            y = self._y if isinstance(self.penalty, FusedPenalty) \
+                else self.problem.y
+            self._sharded_prep = prepare_path(design.X, y, self.config)
+        return self._sharded_prep
+
+    def _memo_sharded_screen(self, design, h: int):
+        if h not in self._sharded_screen_memo:
+            from repro.distributed.saif_sharded import make_sharded_screen
+            self._sharded_screen_memo[h] = make_sharded_screen(design, h)
+        return self._sharded_screen_memo[h]
+
+    def _sharded_fleet_design(self, Y):
+        """Fleet placement, built at the first sharded fleet request and
+        reused by every later one (see ``fleet_design_for``)."""
+        if self._sharded_fleet is None:
+            from repro.distributed.saif_sharded import fleet_design_for
+            self._sharded_fleet = fleet_design_for(self.problem.X, Y,
+                                                   self.mesh, self.config)
+        return self._sharded_fleet
+
+    def _scalar_sharded(self, lam: float, warm: bool = False):
+        self._require_mesh()
+        design = self._sharded_design()
+        if warm:
+            # the sharded edition of the warm handoff: a single-lambda
+            # run of the path engine over the padded prep, entered from
+            # (and refreshing) the sharded warm state
+            from repro.core.path import run_path
+            pr, wstate, k = run_path(
+                self._sharded_path_prep(design), [lam], self.config,
+                make_screen=lambda h: self._memo_sharded_screen(design, h),
+                segment_len=self._segment_len,
+                warm0=self._sharded_warm, k_max0=self._sharded_warm_k)
+            self._sharded_warm, self._sharded_warm_k = wstate, k
+            res = pr.results[0]
+            return res._replace(beta=res.beta[:design.p])
+        from repro.distributed.saif_sharded import solve_scalar_sharded
+        y = self._y if isinstance(self.penalty, FusedPenalty) \
+            else self.problem.y
+        return solve_scalar_sharded(None, y, lam, self.mesh, self.config,
+                                    design=design,
+                                    screen_cache=self._sharded_screen_memo,
+                                    prep=self._sharded_path_prep(design))
+
+
+def open_session(problem: Problem, config=None, *, mesh=None,
+                 segment_len: int = 16, make_screen=None) -> Session:
+    """Open a persistent solving session for ``problem``.
+
+    Preparation (c0 / column norms / Theorem-6 transform / group norms)
+    runs HERE, exactly once; every subsequent ``session.solve(request)``
+    reuses it along with the process-wide solver compilations and the
+    session's device-resident warm buffers. ``config`` is a
+    :class:`~repro.core.saif.SaifConfig` (or
+    :class:`~repro.core.group.GroupSaifConfig` for group penalties;
+    defaults per penalty); ``mesh`` enables ``sharded=True`` requests;
+    ``make_screen``/``segment_len`` are the path-engine hooks.
+    """
+    return Session(problem, config, mesh=mesh, segment_len=segment_len,
+                   make_screen=make_screen)

@@ -436,9 +436,9 @@ def resolve_batch_inner(config: SaifConfig, n: int, k_max: int,
     return name
 
 
-def saif_batch(X, Y, lam, config: SaifConfig = SaifConfig(),
-               weights=None,
-               screen_fn: Optional[BatchScreenFn] = None) -> SaifResult:
+def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
+                weights=None,
+                screen_fn: Optional[BatchScreenFn] = None) -> SaifResult:
     """Solve a fleet of B LASSO problems over a shared design in lockstep.
 
     Args:
@@ -512,3 +512,23 @@ def saif_batch(X, Y, lam, config: SaifConfig = SaifConfig(),
         if not bool(jnp.any(res.overflowed)) or k_max >= p:
             return res
         k_max = min(2 * k_max, p)
+
+
+def saif_batch(X, Y, lam, config: SaifConfig = SaifConfig(),
+               weights=None,
+               screen_fn: Optional[BatchScreenFn] = None) -> SaifResult:
+    """DEPRECATED legacy frontend — one-shot session over
+    :func:`fleet_solve`.
+
+    Use ``repro.open_session(Problem(X), config).solve(Fleet(Y, lams))``;
+    a held-open session keeps the fleet compilation alive across request
+    streams (DESIGN.md §9).
+    """
+    from repro.core._compat import warn_deprecated
+    warn_deprecated("repro.core.saif_batch",
+                    "session.solve(Fleet(Y, lams))")
+    from repro.core.api import Fleet, Problem, open_session
+
+    sess = open_session(Problem(X=X, loss=config.loss), config)
+    return sess.solve(Fleet(Y=Y, lams=lam, weights=weights,
+                            screen_fn=screen_fn))

@@ -63,10 +63,10 @@ def kfold_weights(n: int, n_folds: int, seed: int = 0,
     return jnp.asarray(W, dtype)
 
 
-def cv_path(X, y, lams: Sequence[float], n_folds: int = 5,
-            config: SaifConfig = SaifConfig(), seed: int = 0,
-            keep_fold_betas: bool = False,
-            refit: bool = True) -> CVPathResult:
+def cv_solve(X, y, lams: Sequence[float], n_folds: int = 5,
+             config: SaifConfig = SaifConfig(), seed: int = 0,
+             keep_fold_betas: bool = False,
+             refit: bool = True) -> CVPathResult:
     """K-fold cross-validation over a lambda grid, one fleet compilation.
 
     Solves the K fold problems in lockstep at every lambda (descending,
@@ -184,3 +184,25 @@ def cv_path(X, y, lams: Sequence[float], n_folds: int = 5,
         beta=beta_best, best_result=best_result,
         fold_betas=[r.beta for r in results] if keep_fold_betas else None,
         n_compilations=n_comp)
+
+
+def cv_path(X, y, lams: Sequence[float], n_folds: int = 5,
+            config: SaifConfig = SaifConfig(), seed: int = 0,
+            keep_fold_betas: bool = False,
+            refit: bool = True) -> CVPathResult:
+    """DEPRECATED legacy frontend — one-shot session over
+    :func:`cv_solve`.
+
+    Use ``repro.open_session(Problem(X, y), config).solve(CV(n_folds,
+    lams))``; a held-open session keeps the fold-fleet compilation alive
+    for the next grid (DESIGN.md §9).
+    """
+    from repro.core._compat import warn_deprecated
+    warn_deprecated("repro.core.cv_path",
+                    "session.solve(CV(n_folds, lams))")
+    from repro.core.api import CV, Problem, open_session
+
+    sess = open_session(Problem(X=X, y=y, loss=config.loss), config)
+    return sess.solve(CV(n_folds=n_folds,
+                         lams=tuple(float(l) for l in lams), seed=seed,
+                         keep_fold_betas=keep_fold_betas, refit=refit))

@@ -36,15 +36,15 @@ slot-preserving warm starts with ``b`` pinned resident.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core._compat import warn_deprecated
 from repro.core.saif import SaifConfig, SaifResult, saif
-from repro.core.path import SaifPathResult, saif_path
+from repro.core.path import SaifPathResult
 from repro.core.cm import solve_lasso_cm
 from repro.core.losses import get_loss
 
@@ -309,36 +309,41 @@ def recover_from_transformed(beta_t: jax.Array,
                                design.tree, design.schedule)
 
 
-def _fused_config(config: SaifConfig, design: FusedDesign) -> SaifConfig:
-    return dataclasses.replace(config, unpen_idx=design.unpen_idx)
-
-
 def saif_fused(X, y, parent, lam: float,
                config: SaifConfig = SaifConfig(),
                transform_backend: str = "auto"
                ) -> Tuple[jax.Array, SaifResult]:
-    """Solve tree fused LASSO with SAIF — any alpha-smooth loss
-    (``config.loss``). Returns (beta in node space, SaifResult)."""
-    design = prepare_fused(X, parent, transform_backend)
-    y = jnp.asarray(y, design.Xt.dtype)
-    res = saif(design.Xt, y, lam, _fused_config(config, design))
-    return recover_from_transformed(res.beta, design), res
+    """DEPRECATED legacy frontend — one-shot session over the fused
+    subsystem. Use ``repro.open_session(Problem(X, y,
+    penalty=fused(parent)), config).solve(Scalar(lam))``; the session
+    performs the Theorem-6 transform exactly once and serves every
+    subsequent request from it (DESIGN.md §9)."""
+    warn_deprecated("repro.core.saif_fused",
+                    "session.solve(Scalar(lam)) with penalty=fused(parent)")
+    from repro.core.api import Problem, Scalar, fused, open_session
+
+    sess = open_session(
+        Problem(X=X, y=y, loss=config.loss,
+                penalty=fused(parent, transform_backend=transform_backend)),
+        config)
+    return sess.solve(Scalar(lam=float(lam)))
 
 
 def fused_path(X, y, parent, lams,
                config: SaifConfig = SaifConfig(),
                transform_backend: str = "auto",
                segment_len: int = 16) -> FusedPathResult:
-    """Fused-LASSO lambda path on the compile-first engine (DESIGN.md §4):
-    transform once, then the whole descending grid shares ONE ``_saif_jit``
-    compilation with slot-preserving warm starts — the b slot stays
-    resident (Gram row hot) across every lambda handoff."""
-    design = prepare_fused(X, parent, transform_backend)
-    y = jnp.asarray(y, design.Xt.dtype)
-    pr = saif_path(design.Xt, y, lams, _fused_config(config, design),
-                   segment_len=segment_len)
-    betas = [recover_from_transformed(b, design) for b in pr.betas]
-    return FusedPathResult(lams=pr.lams, betas=betas, path=pr)
+    """DEPRECATED legacy frontend — one-shot session over
+    :func:`fused_path_from_design` (DESIGN.md §9)."""
+    warn_deprecated("repro.core.fused_path",
+                    "session.solve(Path(lams)) with penalty=fused(parent)")
+    from repro.core.api import Path, Problem, fused, open_session
+
+    sess = open_session(
+        Problem(X=X, y=y, loss=config.loss,
+                penalty=fused(parent, transform_backend=transform_backend)),
+        config, segment_len=segment_len)
+    return sess.solve(Path(lams=tuple(float(l) for l in lams)))
 
 
 def fused_lambda_max(X, y, parent, loss: str = "least_squares") -> float:

@@ -46,6 +46,11 @@ class GroupSaifResult(NamedTuple):
     gap: jax.Array
     n_outer: jax.Array
     n_active_groups: jax.Array
+    # final slot state — the warm handoff a session threads between group
+    # requests (mirrors SaifResult.active_idx/active_mask, DESIGN.md §9)
+    gidx: jax.Array = None          # (k_max,) slot -> group id
+    gmask: jax.Array = None         # (k_max,) slot validity
+    beta_slots: jax.Array = None    # (k_max, gsize) slot coefficients
 
 
 def _group_norms(v: jax.Array, gsize: int) -> jax.Array:
@@ -106,8 +111,14 @@ def solve_group_lasso_bcd(loss: Loss, X, y, lam, gsize: int,
 @partial(jax.jit, static_argnames=("loss_name", "gsize", "h", "k_max",
                                    "inner_epochs", "polish_factor",
                                    "max_outer"))
-def _gsaif_jit(X, y, gfro, lam, eps, init_idx, *, loss_name, gsize, h,
-               k_max, inner_epochs, polish_factor, max_outer):
+def _gsaif_jit(X, y, gfro, lam, eps, init_gidx, init_beta, init_gmask, *,
+               loss_name, gsize, h, k_max, inner_epochs, polish_factor,
+               max_outer):
+    # (init_gidx, init_beta, init_gmask) are traced (k_max,)-shaped slot
+    # buffers — zeros/top-h for a cold start, the previous solve's final
+    # slot state for a warm one — so every lambda served at a given
+    # (gsize, h, k_max) signature shares ONE compilation (the group
+    # engine's edition of the path-engine trick, DESIGN.md §9).
     loss = get_loss(loss_name)
     n, p = X.shape
     ng = p // gsize
@@ -124,11 +135,11 @@ def _gsaif_jit(X, y, gfro, lam, eps, init_idx, *, loss_name, gsize, h,
         stop: jax.Array
         t: jax.Array
 
-    s0 = S(gidx=jnp.zeros((k_max,), jnp.int32).at[:init_idx.shape[0]].set(
-               init_idx.astype(jnp.int32)),
-           gmask=jnp.zeros((k_max,), bool).at[:init_idx.shape[0]].set(True),
-           beta=jnp.zeros((k_max, gsize), X.dtype),
-           in_active=jnp.zeros((ng,), bool).at[init_idx].set(True),
+    s0 = S(gidx=init_gidx.astype(jnp.int32),
+           gmask=init_gmask,
+           beta=init_beta.astype(X.dtype),
+           in_active=jnp.zeros((ng,), bool).at[
+               jnp.where(init_gmask, init_gidx, ng)].set(True, mode="drop"),
            gap=jnp.asarray(jnp.inf, X.dtype),
            is_add=jnp.asarray(True), stop=jnp.asarray(False),
            t=jnp.asarray(0))
@@ -228,13 +239,38 @@ def _gsaif_jit(X, y, gfro, lam, eps, init_idx, *, loss_name, gsize, h,
         jnp.where(f.gmask[:, None], f.beta, 0.0), mode="drop")
     return GroupSaifResult(beta=beta_full.reshape(-1), gap=f.gap,
                            n_outer=f.t,
-                           n_active_groups=jnp.sum(f.gmask))
+                           n_active_groups=jnp.sum(f.gmask),
+                           gidx=f.gidx, gmask=f.gmask, beta_slots=f.beta)
 
 
-def group_saif(X, y, lam: float, gsize: int,
-               config: GroupSaifConfig = GroupSaifConfig()
-               ) -> GroupSaifResult:
-    """Group-LASSO with SAIF-style safe active-group screening."""
+def group_compile_count() -> int:
+    """Distinct ``_gsaif_jit`` compilations alive in this process (the
+    group-engine leg of :func:`repro.core.api.unified_compile_count`;
+    mirrors ``saif_jit_compile_count``). The group static signature
+    (gsize, h, k_max) is lambda-independent, so a session serving many
+    group requests must move this counter exactly once — asserted in
+    tests/test_api.py."""
+    try:
+        return int(_gsaif_jit._cache_size())
+    except Exception:       # pragma: no cover - jit internals moved
+        return -1
+
+
+class GroupPrep(NamedTuple):
+    """One-time group-problem preparation: null-gradient group norms, the
+    per-group Frobenius norms, and the (lambda-independent) static sizes.
+    Computed once per session (``repro.core.api``)."""
+    X: jax.Array
+    y: jax.Array
+    c0: jax.Array      # (ng,) group norms of X^T f'(0)
+    gfro: jax.Array    # (ng,) per-group Frobenius norms
+    gsize: int
+    h: int
+    k_max: int
+
+
+def prepare_group(X, y, gsize: int,
+                  config: GroupSaifConfig = GroupSaifConfig()) -> GroupPrep:
     loss = get_loss(config.loss)
     X = jnp.asarray(X)
     y = jnp.asarray(y)
@@ -244,16 +280,53 @@ def group_saif(X, y, lam: float, gsize: int,
     g0 = loss.grad(jnp.zeros_like(y), y)
     c0 = _group_norms(X.T @ g0, gsize)
     gfro = jnp.sqrt(jnp.sum((X * X).reshape(n, ng, gsize), axis=(0, 2)))
-
     h = config.h or max(1, 1 << (math.ceil(math.log2(max(ng, 2))) // 2))
     k_max = config.k_max or min(ng, max(8 * h, 32))
-    init_idx = jax.lax.top_k(c0, min(h, k_max))[1]
-    return _gsaif_jit(X, y, gfro, jnp.asarray(lam, X.dtype),
-                      jnp.asarray(config.eps, X.dtype), init_idx,
+    return GroupPrep(X=X, y=y, c0=c0, gfro=gfro, gsize=gsize, h=h,
+                     k_max=k_max)
+
+
+def group_solve(prep: GroupPrep, lam: float,
+                config: GroupSaifConfig = GroupSaifConfig(),
+                warm=None) -> GroupSaifResult:
+    """One group solve from an existing preparation. ``warm`` is the
+    previous solve's ``(gidx, gmask, beta_slots)`` (e.g. the fields of a
+    :class:`GroupSaifResult` at the neighbouring lambda); ``None`` is the
+    cold top-h start — bitwise the legacy ``group_saif`` behavior."""
+    X, gsize, h, k_max = prep.X, prep.gsize, prep.h, prep.k_max
+    if warm is None:
+        m = min(h, k_max)
+        top = jax.lax.top_k(prep.c0, m)[1]
+        gidx = jnp.zeros((k_max,), jnp.int32).at[:m].set(
+            top.astype(jnp.int32))
+        gmask = jnp.zeros((k_max,), bool).at[:m].set(True)
+        beta = jnp.zeros((k_max, gsize), X.dtype)
+    else:
+        gidx, gmask, beta = warm
+    return _gsaif_jit(X, prep.y, prep.gfro, jnp.asarray(lam, X.dtype),
+                      jnp.asarray(config.eps, X.dtype), gidx, beta, gmask,
                       loss_name=config.loss, gsize=gsize, h=h, k_max=k_max,
                       inner_epochs=config.inner_epochs,
                       polish_factor=config.polish_factor,
                       max_outer=config.max_outer)
+
+
+def group_saif(X, y, lam: float, gsize: int,
+               config: GroupSaifConfig = GroupSaifConfig()
+               ) -> GroupSaifResult:
+    """DEPRECATED legacy frontend — one-shot session over
+    :func:`group_solve`. Use ``repro.open_session(Problem(X, y,
+    penalty=group(gsize)), config).solve(Scalar(lam))``; the session
+    reuses the preparation, the single group compilation and the warm
+    slot buffers across requests (DESIGN.md §9)."""
+    from repro.core._compat import warn_deprecated
+    warn_deprecated("repro.core.group_saif",
+                    "session.solve(Scalar(lam)) with penalty=group(gsize)")
+    from repro.core.api import Problem, Scalar, group, open_session
+
+    sess = open_session(Problem(X=X, y=y, loss=config.loss,
+                                penalty=group(gsize)), config)
+    return sess.solve(Scalar(lam=float(lam)))
 
 
 def group_lambda_max(loss: Loss, X, y, gsize: int) -> float:

@@ -7,10 +7,13 @@ sync for the overflow flag, a host round-trip to extract the warm-start
 support, and — whenever the static (h, k_max) signature moves — a fresh
 ``_saif_jit`` compilation.
 
-The engine here hoists all of that out of the lambda loop:
+The engine here (:func:`run_path`) hoists all of that out of the lambda
+loop:
 
-  * **prepare once** — ``PathState`` computes c0 / col_norm / lam_max and
-    the c0 statistics feeding the h formula exactly once per path;
+  * **prepare once** — the driver consumes a prebuilt
+    :class:`~repro.core.saif.PathState` (c0 / col_norm / lam_max and the
+    c0 statistics feeding the h formula, computed exactly once — at
+    ``open_session`` when serving through :mod:`repro.core.api`);
   * **one static signature** — the candidate-buffer size h is bucketed to
     the *grid maximum* (already a power of two) so every lambda shares a
     single ``_saif_jit`` compilation, while the per-lambda batch size
@@ -25,41 +28,40 @@ The engine here hoists all of that out of the lambda loop:
     handoff never syncs to the host AND the inner-solver carry (the Gram
     buffers of the covariance-update backend, DESIGN.md §6) rides along
     verbatim — the next solve's init finds zero dirty slots and skips the
-    O(n k^2) Gram rebuild;
+    O(n k^2) Gram rebuild. The same warm tuple is the engine's *boundary*
+    state: ``run_path`` accepts an entry warm state and returns its exit
+    warm state, which is how a session keeps the buffers device-resident
+    across requests (``Scalar(lam, warm=True)`` streams);
   * **segment-batched overflow checks** — solutions are collected per path
     segment and the ``overflowed`` flags are reduced in one host sync per
     segment instead of one per lambda. On overflow the capacity doubles and
     the segment re-runs from its entry state (rare: capacity starts at the
     grid-max 8h).
+
+The legacy frontend :func:`saif_path` is a deprecated shim over a one-shot
+session (DESIGN.md §9).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, List, NamedTuple, Optional, Sequence
+from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core._compat import warn_deprecated
 from repro.core.inner_backend import (InnerCarry, cold_inner_carry,
                                       resolve_inner_backend)
-from repro.core.losses import get_loss
-from repro.core.saif import (SaifConfig, SaifResult, _saif_jit,
-                             add_batch_size_static, default_capacity, saif,
+from repro.core.saif import (PathState, SaifConfig, SaifResult, _saif_jit,
+                             add_batch_size_static, default_capacity,
+                             initial_support, prepare_path, saif,
                              saif_jit_compile_count)
 from repro.core.screen_backend import ScreenFn, resolve_backend
 
-
-class PathState(NamedTuple):
-    """One-time O(np) preprocessing shared by every lambda on the path."""
-    X: jax.Array          # (n, p)
-    y: jax.Array          # (n,)
-    c0: jax.Array         # (p,) |X^T f'(null model)|
-    col_norm: jax.Array   # (p,)
-    lam_max: float
-    c0_max: float         # host copies of the c0 statistics the h formula
-    c0_median: float      # needs — synced exactly once per path
-    b0: float = 0.0       # unpenalized-slot null fit (fused paths; §7)
+# Device-resident inter-solve handoff: (idx (k,), beta (k,), live-mask (k,),
+# InnerCarry). Produced by _warm_state / cold_start, consumed by run_path.
+WarmState = Tuple[jax.Array, jax.Array, jax.Array, InnerCarry]
 
 
 class SaifPathResult(NamedTuple):
@@ -69,25 +71,10 @@ class SaifPathResult(NamedTuple):
     n_compilations: Optional[int] = None   # _saif_jit compiles this path added
 
 
-def prepare_path(X, y, config: SaifConfig) -> PathState:
-    from repro.core.duality import null_gradient
-
-    loss = get_loss(config.loss)
-    X = jnp.asarray(X)
-    y = jnp.asarray(y)
-    _, c0, b0 = null_gradient(loss, X, y, config.unpen_idx)
-    col_norm = jnp.linalg.norm(X, axis=0)
-    c0_max, c0_median, b0 = jax.device_get(
-        (jnp.max(c0), jnp.median(c0), b0))
-    return PathState(X=X, y=y, c0=c0, col_norm=col_norm,
-                     lam_max=float(c0_max), c0_max=float(c0_max),
-                     c0_median=float(c0_median), b0=float(b0))
-
-
 @partial(jax.jit, static_argnames=("unpen_idx",))
 def _warm_state(active_idx: jax.Array, active_mask: jax.Array,
                 beta_full: jax.Array, inner: InnerCarry,
-                unpen_idx: int = -1):
+                unpen_idx: int = -1) -> WarmState:
     """Device-side warm-start extraction, *slot-preserving*.
 
     The next lambda is seeded with the previous solve's final slot layout
@@ -104,25 +91,69 @@ def _warm_state(active_idx: jax.Array, active_mask: jax.Array,
     return active_idx, jnp.where(live, vals, 0.0), live, inner
 
 
+def cold_start(prep: PathState, h0: int, k: int,
+               config: SaifConfig) -> WarmState:
+    """Cold entry state at capacity ``k``: the shared ``initial_support``
+    constructor seeded with the FIRST lambda's own batch size ``h0`` (not
+    the grid-max h) — a cold path entry must match a standalone solve at
+    its first lambda exactly."""
+    n, p = prep.X.shape
+    idx, beta, n_init = initial_support(prep.c0, h0, k, p,
+                                        config.unpen_idx, prep.b0,
+                                        prep.X.dtype)
+    inner = resolve_inner_backend(config.inner_backend, config.loss, n, k)
+    return (idx, beta, jnp.arange(k) < n_init,
+            cold_inner_carry(k, prep.X.dtype, backend=inner))
+
+
+def grow_warm(warm: WarmState, k: int, inner_name: str) -> WarmState:
+    """Pad a warm state to capacity ``k`` (elastic growth / session handoff
+    across requests of different static signatures)."""
+    idx, vals, mask, carry = warm
+    pad = k - idx.shape[0]
+    if pad <= 0:
+        return warm
+    if inner_name == "gram" and carry.G.shape[0] == idx.shape[0]:
+        # pad the Gram buffers in place: padded slots are dead/-1, the
+        # carried warmth survives the capacity doubling
+        carry = InnerCarry(
+            G=jnp.pad(carry.G, ((0, pad), (0, pad))),
+            rho=jnp.pad(carry.rho, (0, pad)),
+            gidx=jnp.pad(carry.gidx, (0, pad), constant_values=-1))
+    else:   # crossover flipped the backend: rebuild a cold carry
+        carry = cold_inner_carry(k, vals.dtype, backend=inner_name)
+    return (jnp.pad(idx, (0, pad)), jnp.pad(vals, (0, pad)),
+            jnp.pad(mask, (0, pad)), carry)
+
+
 def _segments(n_lams: int, segment_len: int) -> List[slice]:
     return [slice(i, min(i + segment_len, n_lams))
             for i in range(0, n_lams, segment_len)]
 
 
-def saif_path(X, y, lams: Sequence[float],
-              config: SaifConfig = SaifConfig(),
-              make_screen: Optional[Callable[[int], ScreenFn]] = None,
-              segment_len: int = 16) -> SaifPathResult:
-    """Solve a descending lambda path; each solve warm-starts from the last.
+def run_path(prep: PathState, lams: Sequence[float],
+             config: SaifConfig = SaifConfig(),
+             make_screen: Optional[Callable[[int], ScreenFn]] = None,
+             segment_len: int = 16,
+             warm0: Optional[WarmState] = None,
+             k_max0: Optional[int] = None
+             ) -> Tuple[SaifPathResult, WarmState, int]:
+    """The path engine: solve a descending lambda grid from ``prep``, each
+    solve warm-starting from the last.
 
     ``make_screen`` threads a custom screening backend through every solve:
     it is called once with the engine's grid-max candidate count h (which
     sizes the ScreenOut arrays and is only known here) and must return the
     ScreenFn, e.g. ``lambda h: make_sharded_screen(design, h)``. Otherwise
     ``config.screen_backend`` picks a built-in backend.
+
+    ``warm0``/``k_max0`` are the session handoff: an entry warm state from
+    a previous request (padded here if this grid needs more capacity) and
+    the capacity it was built at. ``None`` means a cold entry — bitwise
+    the legacy ``saif_path`` behavior. Returns ``(result, exit_warm,
+    k_max)`` so the caller can keep the buffers device-resident.
     """
-    prep = prepare_path(X, y, config)
-    X, y, c0, col_norm = prep.X, prep.y, prep.c0, prep.col_norm
+    X = prep.X
     n, p = X.shape
     unpen = config.unpen_idx
     unpen_static = -1 if unpen is None else unpen
@@ -136,22 +167,27 @@ def saif_path(X, y, lams: Sequence[float],
     # tolerance h~ only feeds comparisons, so it stays a per-lambda traced
     # scalar — the active set remains exactly as lean as per-lambda
     # compilation would keep it, at one compile for the whole grid.
-    hs = [add_batch_size_static(config.c, lam, prep.c0_max, prep.c0_median, p)
+    hs = [add_batch_size_static(config.c, lam, prep.c0_max, prep.c0_median,
+                                p)
           for lam in lams_np]
     h = max(hs) if hs else 1
     k_max = config.k_max or default_capacity(h, p)
+    if k_max0 is not None:
+        k_max = max(k_max, k_max0)
+    if warm0 is not None:
+        k_max = max(k_max, int(warm0[0].shape[0]))
     # the backend's candidate arrays must be sized for the grid-max h
     screen_fn = make_screen(h) if make_screen is not None else None
 
     def inner_name(k: int) -> str:
         return resolve_inner_backend(config.inner_backend, config.loss, n, k)
 
-    def run_lam(lam: float, h_lam: int, warm) -> SaifResult:
+    def run_lam(lam: float, h_lam: int, warm: WarmState) -> SaifResult:
         delta0 = config.delta0 if config.delta0 is not None else \
             min(max(lam / prep.lam_max, 1e-3), 1.0)
         warm_idx, warm_beta, warm_mask, carry = warm
         return _saif_jit(
-            X, y, col_norm, c0, jnp.asarray(lam, X.dtype),
+            X, prep.y, prep.col_norm, prep.c0, jnp.asarray(lam, X.dtype),
             jnp.asarray(config.eps, X.dtype), delta0,
             warm_idx, warm_beta, warm_mask,
             carry.G, carry.rho, carry.gidx,
@@ -165,33 +201,11 @@ def saif_path(X, y, lams: Sequence[float],
             screen_backend=backend, inner_backend=inner_name(k_max),
             unpen_idx=unpen_static, screen_fn=screen_fn)
 
-    def cold_start(k: int):
-        # seed with the FIRST lambda's own batch size (hs[0]), not the
-        # grid-max h: the cold solve must match a standalone solve at
-        # lams[0] exactly (initial_support is the shared constructor)
-        from repro.core.saif import initial_support
-        idx, beta, n_init = initial_support(c0, hs[0] if hs else 1, k, p,
-                                            unpen, prep.b0, X.dtype)
-        return (idx, beta, jnp.arange(k) < n_init,
-                cold_inner_carry(k, X.dtype, backend=inner_name(k)))
-
-    def grow(warm, k: int):
-        idx, vals, mask, carry = warm
-        pad = k - idx.shape[0]
-        if inner_name(k) == "gram" and carry.G.shape[0] == idx.shape[0]:
-            # pad the Gram buffers in place: padded slots are dead/-1, the
-            # carried warmth survives the capacity doubling
-            carry = InnerCarry(
-                G=jnp.pad(carry.G, ((0, pad), (0, pad))),
-                rho=jnp.pad(carry.rho, (0, pad)),
-                gidx=jnp.pad(carry.gidx, (0, pad), constant_values=-1))
-        else:   # crossover flipped the backend: rebuild a cold carry
-            carry = cold_inner_carry(k, X.dtype, backend=inner_name(k))
-        return (jnp.pad(idx, (0, pad)), jnp.pad(vals, (0, pad)),
-                jnp.pad(mask, (0, pad)), carry)
-
     results: List[SaifResult] = [None] * len(lams_np)
-    warm = cold_start(k_max)
+    if warm0 is not None:
+        warm = grow_warm(warm0, k_max, inner_name(k_max))
+    else:
+        warm = cold_start(prep, hs[0] if hs else 1, k_max, config)
     for seg in _segments(len(lams_np), segment_len):
         entry = warm
         while True:
@@ -208,7 +222,7 @@ def saif_path(X, y, lams: Sequence[float],
             if not bool(jnp.any(flags)) or k_max >= p:
                 break
             k_max = min(2 * k_max, p)   # elastic growth, segment re-entry
-            entry = grow(entry, k_max)
+            entry = grow_warm(entry, k_max, inner_name(k_max))
         results[seg] = seg_results
         warm = cur
 
@@ -216,8 +230,29 @@ def saif_path(X, y, lams: Sequence[float],
     n_compile1 = saif_jit_compile_count()
     n_comp = (max(n_compile1 - n_compile0, 0)
               if n_compile0 >= 0 and n_compile1 >= 0 else None)
-    return SaifPathResult(lams=lams_np, betas=betas, results=results,
-                          n_compilations=n_comp)
+    return (SaifPathResult(lams=lams_np, betas=betas, results=results,
+                           n_compilations=n_comp),
+            warm, k_max)
+
+
+def saif_path(X, y, lams: Sequence[float],
+              config: SaifConfig = SaifConfig(),
+              make_screen: Optional[Callable[[int], ScreenFn]] = None,
+              segment_len: int = 16) -> SaifPathResult:
+    """DEPRECATED legacy frontend — one-shot session over :func:`run_path`.
+
+    Use ``repro.open_session(Problem(X, y), config).solve(Path(lams))``;
+    a held-open session keeps the preparation, the compilation and the
+    warm buffers alive for the next request (DESIGN.md §9).
+    """
+    warn_deprecated("repro.core.saif_path",
+                    "session.solve(Path(lams))")
+    from repro.core.api import Path as PathRequest
+    from repro.core.api import Problem, open_session
+
+    sess = open_session(Problem(X=X, y=y, loss=config.loss), config,
+                        make_screen=make_screen, segment_len=segment_len)
+    return sess.solve(PathRequest(lams=tuple(float(l) for l in lams)))
 
 
 def saif_path_naive(X, y, lams: Sequence[float],

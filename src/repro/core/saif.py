@@ -358,38 +358,73 @@ def saif_jit_compile_count() -> int:
     return total
 
 
-def saif(X, y, lam: float, config: SaifConfig = SaifConfig(),
-         scan_fn: Optional[ScanFn] = None,
-         screen_fn: Optional[ScreenFn] = None,
-         warm_idx: Optional[jax.Array] = None,
-         warm_beta: Optional[jax.Array] = None) -> SaifResult:
-    """Solve LASSO at ``lam`` with SAIF. Host-level driver.
+class PathState(NamedTuple):
+    """One-time O(np) problem preparation (c0 / col_norm / lambda_max and
+    the host-side c0 statistics the h formula needs, synced exactly once).
 
-    Handles the static pieces (h, capacity, initial active set, screening
-    backend selection) and the capacity-overflow recompile loop; everything
-    else runs inside one jitted while_loop. ``screen_fn`` plugs a full
-    custom backend (e.g. the sharded one); ``scan_fn`` is the legacy
-    bare-scan hook, adapted on the fly.
+    Shared by every driver layer: the single-lambda solver consumes one,
+    the compile-first path engine (``core/path.py``) threads one through a
+    whole grid, and a :class:`repro.core.api.Session` computes one at
+    ``open_session`` and serves every subsequent request from it.
+    """
+    X: jax.Array          # (n, p)
+    y: jax.Array          # (n,)
+    c0: jax.Array         # (p,) |X^T f'(null model)|
+    col_norm: jax.Array   # (p,)
+    lam_max: float
+    c0_max: float         # host copies of the c0 statistics the h formula
+    c0_median: float      # needs — synced exactly once per preparation
+    b0: float = 0.0       # unpenalized-slot null fit (fused problems; §7)
+
+
+def prepare_path(X, y, config: SaifConfig) -> PathState:
+    """The one-time preparation pass (see :class:`PathState`).
+
+    Penalized-null model: f'(0) for plain LASSO; with an unpenalized
+    coordinate the null model sits at its partial optimum b0 (Thm 7) and
+    c0[unpen] is 0, so lambda_max / h / the initial set stay exact.
     """
     from repro.core.duality import null_gradient
 
     loss = get_loss(config.loss)
     X = jnp.asarray(X)
     y = jnp.asarray(y)
+    _, c0, b0 = null_gradient(loss, X, y, config.unpen_idx)
+    col_norm = jnp.linalg.norm(X, axis=0)
+    c0_max, c0_median, b0 = jax.device_get(
+        (jnp.max(c0), jnp.median(c0), b0))
+    return PathState(X=X, y=y, c0=c0, col_norm=col_norm,
+                     lam_max=float(c0_max), c0_max=float(c0_max),
+                     c0_median=float(c0_median), b0=float(b0))
+
+
+def solve_scalar(prep: PathState, lam: float,
+                 config: SaifConfig = SaifConfig(),
+                 scan_fn: Optional[ScanFn] = None,
+                 screen_fn: Optional[ScreenFn] = None,
+                 warm_idx: Optional[jax.Array] = None,
+                 warm_beta: Optional[jax.Array] = None) -> SaifResult:
+    """Solve LASSO at ``lam`` from an existing preparation. Host driver.
+
+    Handles the static pieces (h, capacity, initial active set, screening
+    backend selection) and the capacity-overflow recompile loop; everything
+    else runs inside one jitted while_loop. ``screen_fn`` plugs a full
+    custom backend (e.g. the sharded one); ``scan_fn`` is the legacy
+    bare-scan hook, adapted on the fly. :func:`saif` is the prepare+solve
+    convenience; a session (``repro.core.api``) prepares once and calls
+    this per request.
+    """
+    X, y, c0, col_norm = prep.X, prep.y, prep.c0, prep.col_norm
     n, p = X.shape
     unpen = config.unpen_idx
-    # Penalized-null model: f'(0) for plain LASSO; with an unpenalized
-    # coordinate the null model sits at its partial optimum b0 (Thm 7) and
-    # c0[unpen] is 0, so lambda_max / h / the initial set stay exact.
-    _, c0, b0 = null_gradient(loss, X, y, unpen)
-    col_norm = jnp.linalg.norm(X, axis=0)
-    lam_max = float(jnp.max(c0))
+    lam_max = prep.lam_max
+    b0 = prep.b0
     # The Thm-2 sequential ball assumes the all-penalized null dual
     # theta0 = -f'(0)/lam_max — invalid once b is unpenalized (DESIGN.md
     # §7), so the gap ball alone drives screening there.
     use_seq = config.use_seq_ball and unpen is None
 
-    h = add_batch_size(config.c, lam, c0, p)
+    h = add_batch_size_static(config.c, lam, prep.c0_max, prep.c0_median, p)
     h_tilde = max(int(math.ceil(config.zeta * h)), 1)
     k_max = config.k_max or default_capacity(h, p)
     delta0 = config.delta0 if config.delta0 is not None else \
@@ -459,3 +494,20 @@ def saif(X, y, lam: float, config: SaifConfig = SaifConfig(),
         if not bool(res.overflowed) or k_max >= p:
             return res
         k_max = min(2 * k_max, p)   # elastic capacity growth + recompile
+
+
+def saif(X, y, lam: float, config: SaifConfig = SaifConfig(),
+         scan_fn: Optional[ScanFn] = None,
+         screen_fn: Optional[ScreenFn] = None,
+         warm_idx: Optional[jax.Array] = None,
+         warm_beta: Optional[jax.Array] = None) -> SaifResult:
+    """Solve LASSO at ``lam`` with SAIF: one-shot prepare + solve.
+
+    Thin over :func:`prepare_path` + :func:`solve_scalar`. Callers with
+    more than one request on the same problem should hold a session
+    instead (``repro.open_session``) so the preparation, the compile
+    caches and the warm buffers persist across requests (DESIGN.md §9).
+    """
+    return solve_scalar(prepare_path(X, y, config), lam, config,
+                        scan_fn=scan_fn, screen_fn=screen_fn,
+                        warm_idx=warm_idx, warm_beta=warm_beta)

@@ -215,23 +215,31 @@ def make_sharded_screen_batch(design: ShardedDesign, h: int):
     return screen
 
 
-def saif_batch_distributed(X, Y, lam, mesh, config=None,
-                           inner_backend: str = None):
+def fleet_solve_sharded(X, Y, lam, mesh, config=None,
+                        inner_backend: str = None,
+                        design: ShardedDesign = None,
+                        screen_cache: dict = None):
     """Fleet SAIF with the feature-sharded screening collective: B lockstep
     solves whose O(p) scans ride one shard_map round per outer step.
 
-    Same results as ``repro.core.batch.saif_batch`` (which equals B serial
+    Same results as ``repro.core.batch.fleet_solve`` (which equals B serial
     solves); the active blocks, CM bursts and the per-problem Gram buffers
     replicate across the mesh exactly like the serial distributed driver —
     only the scan is sharded, now amortized over the fleet (DESIGN.md §8).
     Plain-LASSO fleets over one shared design (no sample weights: a CV
     fleet's per-fold column norms live on the replicated path for now).
+
+    ``design``/``screen_cache`` mirror :func:`solve_scalar_sharded`: the
+    session passes its cached placement and per-h batched-ScreenFn memo
+    so a stream of sharded fleet requests shares one ``_saif_batch_jit``
+    compilation per static key instead of recompiling on every fresh
+    screen closure (the ScreenFn is a jit-static argument). The design's
+    ``c0`` is ignored here — the fleet driver recomputes per-problem c0
+    from ``Y`` — so one cached placement serves every response batch.
     """
     import dataclasses
 
-    from repro.core.batch import (fleet_batch_sizes, prepare_fleet,
-                                  saif_batch)
-    from repro.core.losses import get_loss
+    from repro.core.batch import fleet_batch_sizes, fleet_solve, prepare_fleet
     from repro.core.saif import SaifConfig
 
     config = config or SaifConfig()
@@ -239,17 +247,13 @@ def saif_batch_distributed(X, Y, lam, mesh, config=None,
         config = dataclasses.replace(config, inner_backend=inner_backend)
     if config.unpen_idx is not None:
         raise NotImplementedError("fused fleets are serial-only for now")
-    loss = get_loss(config.loss)
     X = jnp.asarray(X)
     Y = jnp.asarray(Y)
     if Y.ndim == 1:
         Y = Y[None, :]
     b = Y.shape[0]
-    # the sharded design is built once from a representative null gradient
-    # (only X and the norms matter; c0 is recomputed per problem inside
-    # the fleet driver against the padded design)
-    g0 = loss.grad(jnp.zeros_like(Y[0]), Y[0])
-    design = shard_design(X, g0, mesh)
+    if design is None:
+        design = fleet_design_for(X, Y, mesh, config)
     lam_arr = jnp.broadcast_to(jnp.asarray(lam, X.dtype).reshape(-1), (b,))
     # the screen's candidate width must equal the engine's static h, so
     # derive it through the EXACT code path the fleet driver uses on the
@@ -259,9 +263,35 @@ def saif_batch_distributed(X, Y, lam, mesh, config=None,
     prep = prepare_fleet(design.X, Y, config)
     _, h = fleet_batch_sizes(prep, [float(l) for l in
                                     jax.device_get(lam_arr)], config)
-    screen_fn = make_sharded_screen_batch(design, h)
-    res = saif_batch(design.X, Y, lam_arr, config, screen_fn=screen_fn)
+    if screen_cache is not None and h in screen_cache:
+        screen_fn = screen_cache[h]
+    else:
+        screen_fn = make_sharded_screen_batch(design, h)
+        if screen_cache is not None:
+            screen_cache[h] = screen_fn
+    res = fleet_solve(design.X, Y, lam_arr, config, screen_fn=screen_fn)
     return res._replace(beta=res.beta[:, :design.p])
+
+
+def saif_batch_distributed(X, Y, lam, mesh, config=None,
+                           inner_backend: str = None):
+    """DEPRECATED legacy frontend — one-shot session over
+    :func:`fleet_solve_sharded`. Use ``repro.open_session(Problem(X),
+    config, mesh=mesh).solve(Fleet(Y, lams, sharded=True))``
+    (DESIGN.md §9)."""
+    from repro.core._compat import warn_deprecated
+    warn_deprecated("repro.distributed.saif_batch_distributed",
+                    "session.solve(Fleet(Y, lams, sharded=True))")
+    import dataclasses
+
+    from repro.core.api import Fleet, Problem, open_session
+    from repro.core.saif import SaifConfig
+
+    config = config or SaifConfig()
+    if inner_backend is not None:
+        config = dataclasses.replace(config, inner_backend=inner_backend)
+    sess = open_session(Problem(X=X, loss=config.loss), config, mesh=mesh)
+    return sess.solve(Fleet(Y=Y, lams=lam, sharded=True))
 
 
 class ScreenResult(NamedTuple):
@@ -308,8 +338,47 @@ def make_fused_screen(design: ShardedDesign, h: int):
     return fused
 
 
-def saif_distributed(X, y, lam: float, mesh, config=None,
-                     inner_backend: str = None):
+def fleet_design_for(X, Y, mesh, config) -> ShardedDesign:
+    """Fleet placement: shard the design from a *representative* null
+    gradient (the first response's). Only X and the column norms matter
+    for fleet screening — per-problem c0 is recomputed from ``Y`` inside
+    the fleet driver against the padded design — so one placement serves
+    every response batch (the session caches it)."""
+    from repro.core.losses import get_loss
+    from repro.core.saif import SaifConfig
+
+    config = config or SaifConfig()
+    loss = get_loss(config.loss)
+    Y = jnp.asarray(Y)
+    y0 = Y if Y.ndim == 1 else Y[0]
+    g0 = loss.grad(jnp.zeros_like(y0), y0)
+    return shard_design(jnp.asarray(X), g0, mesh)
+
+
+def design_for(X, y, mesh, config) -> ShardedDesign:
+    """Build the feature-sharded design from the penalized-null gradient:
+    f'(0) for plain LASSO; at the unpenalized slot's partial optimum for
+    fused problems (Thm 7, DESIGN.md §7) — the same construction the
+    serial driver uses internally, so every h derived from the sharded
+    c0 matches the solver's static h exactly. The one-time placement a
+    session performs at its first sharded request and then reuses."""
+    from repro.core.duality import null_gradient
+    from repro.core.losses import get_loss
+    from repro.core.saif import SaifConfig
+
+    config = config or SaifConfig()
+    loss = get_loss(config.loss)
+    y = jnp.asarray(y)
+    X = jnp.asarray(X)
+    g0, _, _ = null_gradient(loss, X, y, config.unpen_idx)
+    return shard_design(X, g0, mesh)
+
+
+def solve_scalar_sharded(X, y, lam: float, mesh, config=None,
+                         inner_backend: str = None,
+                         design: ShardedDesign = None,
+                         screen_cache: dict = None,
+                         prep=None):
     """SAIF with the sharded screening backend. Same result as core.saif.
 
     The inner solver is NOT sharded (the active block is replicated — see
@@ -321,25 +390,27 @@ def saif_distributed(X, y, lam: float, mesh, config=None,
     not O(n p). ``inner_backend`` overrides ``config.inner_backend``
     (resolution happens in the core driver against the *padded* problem
     shape, so "auto" is deterministic across mesh sizes).
+
+    ``design``/``screen_cache``/``prep`` are the session hooks: a
+    prebuilt :class:`ShardedDesign` skips the one-time placement, a
+    prebuilt :class:`~repro.core.saif.PathState` over the *padded*
+    design skips the per-request O(np) preparation, and the per-h screen
+    memo keeps the ScreenFn *object* stable across requests — the
+    function is a jit-static argument of ``_saif_jit``, so a fresh
+    closure per request would defeat the one-compilation-per-static-key
+    contract.
     """
     import dataclasses
 
-    from repro.core.duality import null_gradient
-    from repro.core.losses import get_loss
-    from repro.core.saif import SaifConfig, add_batch_size, saif
+    from repro.core.saif import (SaifConfig, add_batch_size, prepare_path,
+                                 solve_scalar)
 
     config = config or SaifConfig()
     if inner_backend is not None:
         config = dataclasses.replace(config, inner_backend=inner_backend)
-    loss = get_loss(config.loss)
     y = jnp.asarray(y)
-    X = jnp.asarray(X)
-    # Penalized-null gradient: f'(0) for plain LASSO; at the unpenalized
-    # slot's partial optimum for fused problems (Thm 7, DESIGN.md §7) —
-    # the same construction saif() uses internally, so the h derived here
-    # matches the solver's static h exactly.
-    g0, _, _ = null_gradient(loss, X, y, config.unpen_idx)
-    design = shard_design(X, g0, mesh)
+    if design is None:
+        design = design_for(X, y, mesh, config)
     # X itself is also consumed (gathers of active columns, duality gap);
     # padded to p_pad, so run SAIF on the padded problem — padding columns
     # are screened out by the backend; beta padding is sliced off.
@@ -350,14 +421,44 @@ def saif_distributed(X, y, lam: float, mesh, config=None,
     if config.unpen_idx is not None:
         c0 = c0.at[config.unpen_idx].set(0.0)
     h = add_batch_size(config.c, lam, c0, design.X.shape[1])
-    screen_fn = make_sharded_screen(design, h)
-    res = saif(design.X, y, lam, config, screen_fn=screen_fn)
+    if screen_cache is not None and h in screen_cache:
+        screen_fn = screen_cache[h]
+    else:
+        screen_fn = make_sharded_screen(design, h)
+        if screen_cache is not None:
+            screen_cache[h] = screen_fn
+    if prep is None:
+        prep = prepare_path(design.X, y, config)
+    res = solve_scalar(prep, lam, config, screen_fn=screen_fn)
     return res._replace(beta=res.beta[:design.p])
+
+
+def saif_distributed(X, y, lam: float, mesh, config=None,
+                     inner_backend: str = None):
+    """DEPRECATED legacy frontend — one-shot session over
+    :func:`solve_scalar_sharded`. Use ``repro.open_session(Problem(X, y),
+    config, mesh=mesh).solve(Scalar(lam, sharded=True))`` (DESIGN.md §9).
+    """
+    from repro.core._compat import warn_deprecated
+    warn_deprecated("repro.distributed.saif_distributed",
+                    "session.solve(Scalar(lam, sharded=True))")
+    import dataclasses
+
+    from repro.core.api import Problem, Scalar, open_session
+    from repro.core.saif import SaifConfig
+
+    config = config or SaifConfig()
+    if inner_backend is not None:
+        config = dataclasses.replace(config, inner_backend=inner_backend)
+    sess = open_session(Problem(X=X, y=y, loss=config.loss), config,
+                        mesh=mesh)
+    return sess.solve(Scalar(lam=float(lam), sharded=True))
 
 
 def saif_fused_distributed(X, y, parent, lam: float, mesh, config=None,
                            transform_backend: str = "auto"):
-    """Tree fused LASSO with feature-sharded screening (DESIGN.md §5/§7).
+    """DEPRECATED legacy frontend — tree fused LASSO with feature-sharded
+    screening (DESIGN.md §5/§7) as a one-shot session.
 
     The Theorem-6 transform runs once (device-native, chain Pallas kernel
     or level-schedule scan); the *transformed* design — edge columns plus
@@ -365,15 +466,19 @@ def saif_fused_distributed(X, y, parent, lam: float, mesh, config=None,
     exactly like a plain design, so the O(p) fused screening scan is the
     sharded collective while the active block, the b slot and the CM
     sweeps stay replicated. Returns (beta in node space, SaifResult).
+    Use ``repro.open_session(Problem(X, y, penalty=fused(parent)), config,
+    mesh=mesh).solve(Scalar(lam, sharded=True))`` (DESIGN.md §9).
     """
-    import dataclasses
-
-    from repro.core.fused import prepare_fused, recover_from_transformed
+    from repro.core._compat import warn_deprecated
+    warn_deprecated("repro.distributed.saif_fused_distributed",
+                    "session.solve(Scalar(lam, sharded=True)) with "
+                    "penalty=fused(parent)")
+    from repro.core.api import Problem, Scalar, fused, open_session
     from repro.core.saif import SaifConfig
 
     config = config or SaifConfig()
-    fdesign = prepare_fused(X, parent, backend=transform_backend)
-    cfg = dataclasses.replace(config, unpen_idx=fdesign.unpen_idx)
-    y = jnp.asarray(y, fdesign.Xt.dtype)
-    res = saif_distributed(fdesign.Xt, y, lam, mesh, cfg)
-    return recover_from_transformed(res.beta, fdesign), res
+    sess = open_session(
+        Problem(X=X, y=y, loss=config.loss,
+                penalty=fused(parent, transform_backend=transform_backend)),
+        config, mesh=mesh)
+    return sess.solve(Scalar(lam=float(lam), sharded=True))

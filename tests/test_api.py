@@ -1,0 +1,422 @@
+"""Session contract tests for the unified Problem/Session API (ISSUE 5).
+
+The serving contract of ``repro.core.api`` (DESIGN.md §9):
+
+  * (a) N heterogeneous requests on ONE session compile once per static
+    key — re-serving the same request mix adds ZERO compilations,
+    observed through ``session.compile_stats()``;
+  * (b) session results are BITWISE those of the legacy frontends
+    (``saif`` / ``saif_path`` / ``saif_batch`` / ``fused_path`` / ...)
+    across a screen x inner backend sample;
+  * the legacy frontends are deprecated shims: they delegate to a
+    one-shot session and emit a one-shot ``DeprecationWarning``;
+  * the public surface is lazy: ``from repro import Problem,
+    open_session`` imports no jax-heavy engine module;
+  * the group engine serves many lambdas from ONE ``_gsaif_jit``
+    compilation (the satellite ``group_compile_count`` fix).
+"""
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_regression
+from repro.core import (CV, Fleet, GroupSaifConfig, Path, Problem,
+                        SaifConfig, Scalar, get_loss, open_session, saif,
+                        unified_compile_count)
+from repro.core.api import fused, group
+from repro.core.duality import lambda_max
+
+
+def _problem(rng, n=40, p=160, seed_frac=0.25):
+    X, y, _ = make_regression(rng, n=n, p=p)
+    lmax = float(lambda_max(get_loss("least_squares"),
+                            jnp.asarray(X), jnp.asarray(y)))
+    return X, y, lmax
+
+
+def _bitwise(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# (b) bitwise parity vs the legacy frontends, screen x inner sample
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("screen,inner", [
+    ("jnp", "jnp"), ("jnp", "gram"), ("pallas", "jnp")])
+def test_scalar_parity_backend_grid(rng, screen, inner):
+    X, y, lmax = _problem(rng)
+    cfg = SaifConfig(eps=1e-7, screen_backend=screen, inner_backend=inner)
+    sess = open_session(Problem(X=X, y=y), cfg)
+    res = sess.solve(Scalar(0.2 * lmax))
+    ref = saif(X, y, 0.2 * lmax, cfg)
+    _bitwise(res.beta, ref.beta)
+    _bitwise(res.trace_gap, ref.trace_gap)
+    _bitwise(res.active_idx, ref.active_idx)
+    assert float(res.gap) == float(ref.gap)
+    assert int(res.n_outer) == int(ref.n_outer)
+
+
+def test_path_parity_and_compiles(rng):
+    X, y, lmax = _problem(rng)
+    cfg = SaifConfig(eps=1e-7)
+    lams = np.geomspace(0.8 * lmax, 0.1 * lmax, 6)
+    sess = open_session(Problem(X=X, y=y), cfg)
+    pr = sess.solve(Path(tuple(lams)))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core import saif_path
+        pr0 = saif_path(X, y, lams, cfg)
+    assert (pr.lams == pr0.lams).all()
+    for b1, b0 in zip(pr.betas, pr0.betas):
+        _bitwise(b1, b0)
+    for r1, r0 in zip(pr.results, pr0.results):
+        _bitwise(r1.trace_n_active, r0.trace_n_active)
+
+
+@pytest.mark.parametrize("inner", ["jnp", "gram"])
+def test_fleet_parity(rng, inner):
+    X, y, lmax = _problem(rng)
+    rng2 = np.random.default_rng(7)
+    Y = np.stack([y, X @ rng2.normal(0, 0.1, X.shape[1])
+                  + rng2.normal(0, 1, X.shape[0])])
+    lams = np.array([0.3 * lmax, 0.2 * lmax])
+    cfg = SaifConfig(eps=1e-6, inner_backend=inner)
+    sess = open_session(Problem(X=X), cfg)      # fleet-only session: no y
+    res = sess.solve(Fleet(Y=Y, lams=lams))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core import saif_batch
+        ref = saif_batch(X, Y, lams, cfg)
+    _bitwise(res.beta, ref.beta)
+    _bitwise(res.gap, ref.gap)
+
+
+def test_cv_parity(rng):
+    X, y, lmax = _problem(rng)
+    cfg = SaifConfig(eps=1e-6)
+    lams = np.geomspace(0.7 * lmax, 0.1 * lmax, 4)
+    sess = open_session(Problem(X=X, y=y), cfg)
+    res = sess.solve(CV(n_folds=3, lams=tuple(lams)))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core import cv_path
+        ref = cv_path(X, y, lams, n_folds=3, config=cfg)
+    np.testing.assert_array_equal(res.cv_mean, ref.cv_mean)
+    np.testing.assert_array_equal(res.cv_se, ref.cv_se)
+    assert res.best_lam == ref.best_lam
+    _bitwise(res.beta, ref.beta)
+
+
+def test_fused_parity(rng):
+    n, p = 40, 60
+    X = rng.normal(size=(n, p))
+    beta = np.zeros(p)
+    beta[:20] = 2.0
+    beta[20:35] = -1.0
+    y = X @ beta + 0.1 * rng.normal(size=n)
+    parent = np.arange(p) - 1
+    cfg = SaifConfig(eps=1e-8)
+    sess = open_session(Problem(X=X, y=y, penalty=fused(parent)), cfg)
+    b1, r1 = sess.solve(Scalar(4.0))
+    pr1 = sess.solve(Path((5.0, 3.0, 1.5)))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core import fused_path, saif_fused
+        b0, r0 = saif_fused(X, y, parent, 4.0, cfg)
+        pr0 = fused_path(X, y, parent, (5.0, 3.0, 1.5), cfg)
+    _bitwise(b1, b0)
+    assert float(r1.gap) == float(r0.gap)
+    for a, b in zip(pr1.betas, pr0.betas):
+        _bitwise(a, b)
+
+
+def test_weighted_problem_rides_fleet_engine(rng):
+    X, y, lmax = _problem(rng)
+    w = (np.random.default_rng(3).random(X.shape[0]) > 0.3).astype(float)
+    cfg = SaifConfig(eps=1e-6)
+    sess = open_session(Problem(X=X, y=y, weights=w), cfg)
+    res = sess.solve(Scalar(0.3 * lmax))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core import saif_batch
+        ref = saif_batch(X, y[None], 0.3 * lmax, cfg, weights=w[None])
+    assert res.beta.ndim == 1          # the B=1 axis is squeezed away
+    _bitwise(res.beta, ref.beta[0])
+
+
+# ---------------------------------------------------------------------------
+# (a) one compilation per static key across a heterogeneous request stream
+# ---------------------------------------------------------------------------
+
+def test_one_compilation_per_static_key(rng):
+    X, y, lmax = _problem(rng)
+    cfg = SaifConfig(eps=1e-6)
+    sess = open_session(Problem(X=X, y=y), cfg)
+    Y = np.stack([y, y[::-1].copy()])
+    grid = np.geomspace(0.6 * lmax, 0.15 * lmax, 4)
+    mix = [
+        Scalar(0.3 * lmax),
+        Scalar(0.27 * lmax),               # same pow2 h bucket, same key
+        Path(tuple(grid)),
+        Fleet(Y=Y, lams=np.array([0.3 * lmax, 0.2 * lmax])),
+        Scalar(0.3 * lmax, warm=True),     # device-resident warm handoff
+        CV(n_folds=3, lams=tuple(grid), refit=False),
+    ]
+    for req in mix:
+        sess.solve(req)
+    first = sess.compile_stats()
+    assert first.requests == len(mix)
+    assert first.total >= 0, "jit cache introspection unavailable"
+
+    # second pass over the SAME heterogeneous mix: every static key is
+    # compiled — the hot session must add exactly ZERO compilations
+    for req in mix:
+        sess.solve(req)
+    second = sess.compile_stats()
+    assert second.requests == 2 * len(mix)
+    assert second.since_open == first.since_open, (
+        f"hot session recompiled: {first.since_open} -> "
+        f"{second.since_open} ({second})")
+    # ... and the stream above is >= 10 mixed requests total
+    assert second.requests >= 10
+
+
+def test_scalar_same_bucket_shares_compilation(rng):
+    from repro.core.saif import add_batch_size_static, prepare_path
+    X, y, lmax = _problem(rng)
+    cfg = SaifConfig(eps=1e-6)
+    sess = open_session(Problem(X=X, y=y), cfg)
+    # find two lambdas that land in the same pow2 h bucket (the h formula
+    # buckets exactly so a lambda path shares compilations — DESIGN.md §4)
+    prep = prepare_path(X, y, cfg)
+    p = X.shape[1]
+
+    def h_of(lam):
+        return add_batch_size_static(cfg.c, lam, prep.c0_max,
+                                     prep.c0_median, p)
+
+    lam1 = 0.30 * lmax
+    lam2 = next(f * lmax for f in (0.29, 0.28, 0.31, 0.32, 0.27)
+                if h_of(f * lmax) == h_of(lam1))
+    sess.solve(Scalar(lam1))
+    s0 = sess.compile_stats()
+    sess.solve(Scalar(lam2))     # same static key: zero new compilations
+    s1 = sess.compile_stats()
+    assert s1.since_open == s0.since_open
+
+
+def test_warm_stream_matches_cold_support(rng):
+    X, y, lmax = _problem(rng)
+    cfg = SaifConfig(eps=1e-7)
+    sess = open_session(Problem(X=X, y=y), cfg)
+    lam = 0.25 * lmax
+    cold = sess.solve(Scalar(lam))
+    warm = sess.solve(Scalar(lam, warm=True))
+    assert float(warm.gap) <= cfg.eps
+    sup_c = np.flatnonzero(np.abs(np.asarray(cold.beta)) > 1e-9)
+    sup_w = np.flatnonzero(np.abs(np.asarray(warm.beta)) > 1e-9)
+    np.testing.assert_array_equal(sup_c, sup_w)
+    np.testing.assert_allclose(np.asarray(warm.beta),
+                               np.asarray(cold.beta), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# group penalty through the session (+ the group_compile_count satellite)
+# ---------------------------------------------------------------------------
+
+def test_group_session_parity_and_single_compilation(rng):
+    from repro.core import group_compile_count, group_lambda_max
+    X, y, _ = make_regression(rng, n=40, p=120)
+    loss = get_loss("least_squares")
+    glmax = group_lambda_max(loss, X, y, 4)
+    cfg = GroupSaifConfig(eps=1e-8)
+    sess = open_session(Problem(X=X, y=y, penalty=group(4)), cfg)
+    c0 = group_compile_count()
+    r1 = sess.solve(Scalar(0.3 * glmax))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core import group_saif
+        r0 = group_saif(X, y, 0.3 * glmax, 4, cfg)
+    _bitwise(r1.beta, r0.beta)
+    # serve more lambdas (cold + warm + a path): the group static
+    # signature is lambda-independent => ONE compilation for all of it
+    sess.solve(Scalar(0.2 * glmax))
+    sess.solve(Scalar(0.15 * glmax, warm=True))
+    gp = sess.solve(Path((0.4 * glmax, 0.25 * glmax, 0.1 * glmax)))
+    c1 = group_compile_count()
+    if c0 >= 0 and c1 >= 0:
+        assert c1 - c0 == 1, f"group engine compiled {c1 - c0} times"
+        assert gp.n_compilations == 0   # the path rode the existing key
+    assert len(gp.betas) == 3
+    for res in gp.results:
+        assert float(res.gap) <= 1e-8
+
+
+def test_group_warm_path_matches_cold_solves(rng):
+    from repro.core import group_lambda_max, group_solve, prepare_group
+    X, y, _ = make_regression(rng, n=40, p=120)
+    glmax = group_lambda_max(get_loss("least_squares"), X, y, 4)
+    cfg = GroupSaifConfig(eps=1e-9)
+    sess = open_session(Problem(X=X, y=y, penalty=group(4)), cfg)
+    gp = sess.solve(Path((0.35 * glmax, 0.2 * glmax)))
+    prep = prepare_group(X, y, 4, cfg)
+    for lam, beta in zip(gp.lams, gp.betas):
+        ref = group_solve(prep, float(lam), cfg)    # cold reference
+        sup = np.linalg.norm(np.asarray(beta).reshape(-1, 4), axis=1)
+        sup_ref = np.linalg.norm(np.asarray(ref.beta).reshape(-1, 4),
+                                 axis=1)
+        np.testing.assert_array_equal(sup > 1e-7, sup_ref > 1e-7)
+        np.testing.assert_allclose(np.asarray(beta), np.asarray(ref.beta),
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sharded requests (1-device mesh: the collective path, minus the wire)
+# ---------------------------------------------------------------------------
+
+def test_sharded_scalar_and_path(rng):
+    from jax.sharding import Mesh
+    X, y, lmax = _problem(rng)
+    cfg = SaifConfig(eps=1e-7)
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("feature",))
+    sess = open_session(Problem(X=X, y=y), cfg, mesh=mesh)
+    res = sess.solve(Scalar(0.25 * lmax, sharded=True))
+    ref = saif(X, y, 0.25 * lmax, cfg)
+    assert res.beta.shape == ref.beta.shape
+    np.testing.assert_allclose(np.asarray(res.beta), np.asarray(ref.beta),
+                               atol=1e-8)
+    s0 = sess.compile_stats()
+    sess.solve(Scalar(0.25 * lmax, sharded=True))   # memoized ScreenFn ->
+    s1 = sess.compile_stats()                       # same static key
+    assert s1.since_open == s0.since_open
+    pr = sess.solve(Path((0.3 * lmax, 0.2 * lmax), sharded=True))
+    assert pr.betas[0].shape == (X.shape[1],)
+    for r in pr.results:
+        assert float(r.gap) <= cfg.eps
+
+
+def test_sharded_fleet_replay_adds_no_compilations(rng):
+    from jax.sharding import Mesh
+    X, y, lmax = _problem(rng, n=30, p=120)
+    Y = np.stack([y, y[::-1].copy()])
+    lams = np.array([0.25 * lmax, 0.2 * lmax])
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("feature",))
+    sess = open_session(Problem(X=X), SaifConfig(eps=1e-6), mesh=mesh)
+    r1 = sess.solve(Fleet(Y=Y, lams=lams, sharded=True))
+    s0 = sess.compile_stats()
+    r2 = sess.solve(Fleet(Y=Y, lams=lams, sharded=True))
+    s1 = sess.compile_stats()
+    _bitwise(r1.beta, r2.beta)
+    # cached placement + memoized batched ScreenFn => same static key
+    assert s1.since_open == s0.since_open
+
+
+def test_warm_sharded_scalar(rng):
+    from jax.sharding import Mesh
+    X, y, lmax = _problem(rng, n=30, p=120)
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("feature",))
+    sess = open_session(Problem(X=X, y=y), SaifConfig(eps=1e-7), mesh=mesh)
+    lam = 0.25 * lmax
+    cold = sess.solve(Scalar(lam, sharded=True))
+    warm = sess.solve(Scalar(lam, sharded=True, warm=True))
+    assert warm.beta.shape == (X.shape[1],)
+    assert float(warm.gap) <= 1e-7
+    np.testing.assert_allclose(np.asarray(warm.beta),
+                               np.asarray(cold.beta), atol=1e-6)
+
+
+def test_make_screen_hook_serves_cold_scalars(rng):
+    from repro.core.screen_backend import make_screen_jnp
+    X, y, lmax = _problem(rng)
+    cfg = SaifConfig(eps=1e-6)
+    calls = []
+    Xd = jnp.asarray(X)
+    col_norm = jnp.linalg.norm(Xd, axis=0)
+
+    def hook(h):
+        calls.append(h)
+        return make_screen_jnp(Xd, col_norm, h)
+
+    sess = open_session(Problem(X=X, y=y), cfg, make_screen=hook)
+    res = sess.solve(Scalar(0.3 * lmax))
+    assert calls, "make_screen hook ignored for a cold Scalar request"
+    # the hook builds the same jnp screen the default path builds, so the
+    # result stays bitwise the plain solve
+    _bitwise(res.beta, saif(X, y, 0.3 * lmax, cfg).beta)
+
+
+def test_sharded_requires_mesh(rng):
+    X, y, lmax = _problem(rng)
+    sess = open_session(Problem(X=X, y=y), SaifConfig())
+    with pytest.raises(ValueError, match="mesh"):
+        sess.solve(Scalar(0.3 * lmax, sharded=True))
+
+
+# ---------------------------------------------------------------------------
+# deprecation + lazy-surface satellites
+# ---------------------------------------------------------------------------
+
+def test_legacy_frontends_warn_once():
+    from repro.core._compat import reset_deprecation_warnings
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(20, 40))
+    y = X[:, 0] + 0.1 * rng.normal(size=20)
+    from repro.core import saif_path
+    reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning,
+                      match=r"use repro\.open_session"):
+        saif_path(X, y, [1.0])
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        saif_path(X, y, [1.0])          # second call: one-shot, silent
+    assert not [w for w in rec
+                if issubclass(w.category, DeprecationWarning)
+                and "open_session" in str(w.message)]
+    reset_deprecation_warnings()
+
+
+def test_lazy_public_surface_subprocess():
+    code = (
+        "import sys\n"
+        "from repro import Problem, Scalar, Path, Fleet, CV, open_session\n"
+        "heavy = [m for m in sys.modules if m.startswith('repro.core.') "
+        "and m != 'repro.core.api']\n"
+        "assert not heavy, f'heavy imports: {heavy}'\n"
+        "assert 'jax' not in sys.modules, 'jax imported eagerly'\n"
+        "p = Problem(X=None)\n"
+        "print('ok')\n"
+    )
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, env=env)
+    assert out.returncode == 0, out.stderr
+    assert "ok" in out.stdout
+
+
+def test_core_reexports_keep_working():
+    # the pre-session surface must stay importable, lazily
+    from repro.core import (CVPathResult, FusedPathResult,  # noqa: F401
+                            SaifConfig, SaifPathResult, fused_path,
+                            kfold_weights, lambda_grid, saif, saif_batch,
+                            saif_path, solve_lasso_cm)
+    assert callable(saif) and callable(saif_path)
+    import repro.core as core
+    assert callable(core.saif)          # not shadowed by the submodule
+    from repro.core.saif import saif as saif_fn
+    assert saif_fn is saif
+
+
+def test_unknown_request_and_penalty():
+    with pytest.raises(TypeError, match="penalty"):
+        open_session(Problem(X=np.eye(4), y=np.ones(4), penalty="ridge"))
+    sess = open_session(Problem(X=np.eye(4), y=np.ones(4)))
+    with pytest.raises(TypeError, match="request"):
+        sess.solve(("not", "a", "request"))
