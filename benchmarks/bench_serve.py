@@ -37,6 +37,12 @@ from benchmarks.common import simulation_data
 
 MIN_SPEEDUP = 3.0   # ISSUE 5 acceptance gate
 N_REQUESTS = 6      # cold requests are expensive (a compile each)
+# ISSUE 6 acceptance gate: the fault-tolerant runtime's verdict plumbing
+# (admission + KKT certification + ladder bookkeeping) may cost the
+# happy-path hot request at most 10% (+ an absolute slack for the
+# certificate jit dispatch and CI timer noise)
+MAX_VERDICT_OVERHEAD = 0.10
+VERDICT_SLACK_S = 1.5e-3
 
 
 def _problem(n, p, seed=0):
@@ -107,25 +113,72 @@ def run(full: bool = False):
         f"hot session recompiled {hot_compiles} times during the "
         f"measured pass (contract: one compilation per static key)")
 
+    # --- served: the same hot stream through the fault-tolerant runtime --
+    # (ISSUE 6): admission + retry wrapper + KKT certificate + verdict.
+    # Warmup compiles the certificate jit (outside the engine caches);
+    # the measured pass must stay within MAX_VERDICT_OVERHEAD of the
+    # bare hot session AND keep the zero-new-engine-compiles contract.
+    from repro.core.serving import open_serving
+    srv = open_serving(Problem(X=X, y=y), cfg)
+    for _ in range(2):
+        for lam in lams:
+            _block(srv.solve(Scalar(lam, warm=True)).value)
+    sstats0, engine0 = srv.stats(), srv.compile_stats().total
+    t_served = 0.0
+    for lam in lams:
+        t0 = time.perf_counter()
+        out = srv.solve(Scalar(lam, warm=True))
+        _block(out.value)
+        t_served += time.perf_counter() - t0
+        assert out.verdict.ok and not out.verdict.degraded
+    served_per_req = t_served / len(lams)
+    sstats1 = srv.stats()
+    assert srv.compile_stats().total == engine0, (
+        "verdict plumbing compiled new engine keys on the happy path")
+    degraded_rate = (sstats1.degraded - sstats0.degraded) / len(lams)
+    retry_count = sstats1.retries - sstats0.retries
+    kkt_check_ms = (sstats1.kkt_check_ms - sstats0.kkt_check_ms) / len(lams)
+
     speedup = cold_per_req / max(hot_per_req, 1e-12)
+    served_speedup = cold_per_req / max(served_per_req, 1e-12)
     row = {
         "n": n, "p": p, "requests": len(lams),
         "cold_s_per_req": round(cold_per_req, 4),
         "hot_s_per_req": round(hot_per_req, 6),
+        "served_s_per_req": round(served_per_req, 6),
         "open_session_s": round(t_open, 4),
         "speedup": round(speedup, 1),
+        "served_speedup": round(served_speedup, 1),
+        "degraded_rate": degraded_rate,
+        "retry_count": retry_count,
+        "kkt_check_ms": round(kkt_check_ms, 3),
         "hot_pass_compilations": hot_compiles,
         "warm_compilations": stats0.since_open,
         "min_speedup": MIN_SPEEDUP,
+        "max_verdict_overhead": MAX_VERDICT_OVERHEAD,
     }
     print(f"[serve] n={n} p={p} R={len(lams)} "
           f"cold={cold_per_req * 1e3:.0f}ms/req "
           f"hot={hot_per_req * 1e3:.1f}ms/req "
+          f"served={served_per_req * 1e3:.1f}ms/req "
+          f"(kkt {kkt_check_ms:.2f}ms, degraded {degraded_rate:.0%}, "
+          f"retries {retry_count}) "
           f"speedup={speedup:.0f}x (gate {MIN_SPEEDUP}x, "
           f"hot-pass compiles={hot_compiles})")
     assert speedup >= MIN_SPEEDUP, (
         f"hot session reached only {speedup:.2f}x over cold per-request "
         f"solves (acceptance {MIN_SPEEDUP}x)")
+    assert degraded_rate == 0.0 and retry_count == 0, (
+        "the happy-path stream triggered the degradation ladder")
+    budget = hot_per_req * (1.0 + MAX_VERDICT_OVERHEAD) + VERDICT_SLACK_S
+    assert served_per_req <= budget, (
+        f"verdict plumbing costs {served_per_req * 1e3:.2f}ms/req vs a "
+        f"budget of {budget * 1e3:.2f}ms/req "
+        f"({MAX_VERDICT_OVERHEAD:.0%} of the bare hot request + "
+        f"{VERDICT_SLACK_S * 1e3:.1f}ms slack)")
+    assert served_speedup >= MIN_SPEEDUP, (
+        f"served hot stream reached only {served_speedup:.2f}x over cold "
+        f"(acceptance {MIN_SPEEDUP}x)")
     return [row]
 
 

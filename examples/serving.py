@@ -91,6 +91,55 @@ def main():
           f"{stats1.since_open - stats0.since_open})")
     assert stats1.since_open == stats0.since_open, "hot session recompiled!"
 
+    fault_drill(X, y, lmax)
+
+
+def fault_drill(X, y, lmax):
+    """The fault-tolerant runtime under injected fire (DESIGN.md §10):
+    a transient backend fault is retried away behind a typed verdict,
+    and a simulated preemption checkpoint/restores the warm state."""
+    import tempfile
+
+    from repro import FaultInjector, Problem, SaifConfig, Scalar
+    from repro.core.serving import ServingConfig, open_serving
+    from repro.runtime.fault import PreemptionGuard
+
+    print("\nfault drill (injected transient backend fault):")
+    srv = open_serving(Problem(X=X, y=y), SaifConfig(eps=1e-6),
+                       serving=ServingConfig(backoff_base_s=0.0))
+    srv.solve(Scalar(0.25 * lmax))            # warm the caches
+    with FaultInjector(fail_at={1}):          # first engine call faults
+        out = srv.solve(Scalar(0.25 * lmax))
+    v = out.verdict
+    print(f"  verdict: ok={v.ok} retries={v.retries} "
+          f"gap={v.gap:.1e} kkt={v.kkt_residual:.1e} "
+          f"(tol {v.kkt_tol:.1e}) events={list(v.events)}")
+    assert v.ok and v.retries == 1
+
+    print("\npreemption drill (SIGTERM -> checkpoint -> warm restore):")
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        a = open_serving(Problem(X=X, y=y), SaifConfig(eps=1e-6),
+                         serving=ServingConfig(ckpt_dir=ckpt_dir),
+                         guard=PreemptionGuard(install=False))
+        a.solve(Scalar(0.25 * lmax, warm=True))
+        a.guard.trigger()                     # the preemption signal
+        out_a = a.solve(Scalar(0.22 * lmax, warm=True))
+        print(f"  preempted server: {list(out_a.verdict.events)}")
+
+        # 'restart': a fresh serving session on the same checkpoint dir
+        b = open_serving(Problem(X=X, y=y), SaifConfig(eps=1e-6),
+                         serving=ServingConfig(ckpt_dir=ckpt_dir))
+        n0 = b.compile_stats().total
+        out_b = b.solve(Scalar(0.22 * lmax, warm=True))
+        extra = b.compile_stats().total - n0
+        print(f"  restarted server: restored={b.restored} "
+              f"ok={out_b.verdict.ok} extra_compilations={extra}")
+        assert b.restored and extra == 0
+        assert np.array_equal(np.asarray(out_a.value.beta),
+                              np.asarray(out_b.value.beta)), \
+            "restore is not bitwise"
+        print("  restored warm solve is bitwise the pre-preemption one")
+
 
 if __name__ == "__main__":
     main()

@@ -35,6 +35,19 @@ _EXPORTS = {
     "SaifConfig": "repro.core.saif", "SaifResult": "repro.core.saif",
     "saif": "repro.core.saif",
     "GroupSaifConfig": "repro.core.group",
+    # fault-tolerant serving runtime (DESIGN.md §10; import-light too)
+    "open_serving": "repro.core.serving",
+    "ServingSession": "repro.core.serving",
+    "ServingConfig": "repro.core.serving",
+    "ServingResult": "repro.core.serving",
+    "ServingStats": "repro.core.serving",
+    "Verdict": "repro.core.serving", "Rung": "repro.core.serving",
+    "ServingError": "repro.core.serving",
+    "RequestError": "repro.core.serving",
+    "NumericalError": "repro.core.serving",
+    "BackendFault": "repro.core.serving",
+    "DeadlineExceeded": "repro.core.serving",
+    "FaultInjector": "repro.runtime.inject",
 }
 
 __all__ = sorted(_EXPORTS) + ["__version__"]

@@ -57,11 +57,28 @@ def save(ckpt_dir: str, step: int, tree: Any,
     meta = {"step": step, "names": names, "extra": extra or {}}
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
+    _fsync_dir(ckpt_dir)
     _gc(ckpt_dir, keep=3)
     return final
+
+
+def _fsync_dir(path: str):
+    """Flush the directory entry so the atomic rename survives power loss
+    (the rename itself is atomic; its durability needs the parent dir
+    synced)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:         # pragma: no cover - exotic filesystems
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 _pending: list[threading.Thread] = []
@@ -90,6 +107,16 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
              if d.startswith("step_") and not d.endswith(".tmp")]
     return max(steps) if steps else None
+
+
+def load_meta(ckpt_dir: str, step: int) -> Dict[str, Any]:
+    """Read a checkpoint's meta.json (names, step, extra) without
+    touching the arrays — callers that must *reconstruct* the ``like``
+    tree before :func:`restore` (e.g. the serving runtime's warm-state
+    restore, which records leaf shapes/dtypes in ``extra``) peek here."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        return json.load(f)
 
 
 def restore(ckpt_dir: str, step: int, like: Any,

@@ -39,6 +39,21 @@ _EXPORTS = {
     # repro.core.group submodules. Use repro.fused / repro.group (the
     # top-level surface) or repro.core.api.fused / .group.
 
+    # fault-tolerant serving runtime (DESIGN.md §10)
+    "open_serving": "repro.core.serving",
+    "ServingSession": "repro.core.serving",
+    "ServingConfig": "repro.core.serving",
+    "ServingResult": "repro.core.serving",
+    "ServingStats": "repro.core.serving",
+    "Verdict": "repro.core.serving", "Rung": "repro.core.serving",
+    "ServingError": "repro.core.serving",
+    "RequestError": "repro.core.serving",
+    "NumericalError": "repro.core.serving",
+    "BackendFault": "repro.core.serving",
+    "DeadlineExceeded": "repro.core.serving",
+    "validate_problem": "repro.core.serving",
+    "validate_request": "repro.core.serving",
+
     # serial solver
     "saif": "repro.core.saif", "solve_scalar": "repro.core.saif",
     "SaifConfig": "repro.core.saif", "SaifResult": "repro.core.saif",
@@ -122,7 +137,7 @@ _EXPORTS = {
 _SUBMODULES = {
     "active_set", "api", "batch", "cm", "cv", "duality", "dynamic",
     "fused", "group", "homotopy", "inner_backend", "losses", "path",
-    "saif", "screen_backend", "sequential",
+    "saif", "screen_backend", "sequential", "serving",
 }
 
 __all__ = sorted(_EXPORTS)

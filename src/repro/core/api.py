@@ -135,6 +135,13 @@ class Problem:
     penalty: Any = "lasso"
     weights: Any = None
 
+    def __post_init__(self):
+        # admission control (DESIGN.md §10): non-finite data, degenerate
+        # zero-norm columns, shape mismatches fail HERE with a typed
+        # error — they never reach the compiled path
+        from repro.core.serving import validate_problem
+        validate_problem(self)
+
 
 @dataclasses.dataclass(frozen=True)
 class Scalar:
@@ -145,6 +152,10 @@ class Scalar:
     warm: bool = False
     sharded: bool = False
 
+    def __post_init__(self):
+        from repro.core.serving import validate_request
+        validate_request(self)
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Path:
@@ -154,6 +165,10 @@ class Path:
     lams: Any
     warm: bool = False
     sharded: bool = False
+
+    def __post_init__(self):
+        from repro.core.serving import validate_request
+        validate_request(self)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -168,6 +183,10 @@ class Fleet:
     sharded: bool = False
     screen_fn: Any = None
 
+    def __post_init__(self):
+        from repro.core.serving import validate_request
+        validate_request(self)
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class CV:
@@ -180,6 +199,10 @@ class CV:
     keep_fold_betas: bool = False
     refit: bool = True
     sharded: bool = False
+
+    def __post_init__(self):
+        from repro.core.serving import validate_request
+        validate_request(self)
 
 
 class GroupPathResult(NamedTuple):
@@ -381,6 +404,31 @@ class Session:
             return self._solve_cv(request)
         raise TypeError(f"unknown request {request!r}: expected Scalar, "
                         f"Path, Fleet or CV")
+
+    # ------------------------------------------------------------------
+    # warm boundary state (the serving runtime's checkpoint surface)
+    # ------------------------------------------------------------------
+
+    @property
+    def warm_state(self):
+        """The device-resident serial warm boundary state — the
+        ``(idx, beta, mask, InnerCarry)`` tuple ``run_path`` hands across
+        requests — or None before the first serial solve. This plus
+        :attr:`warm_capacity` is exactly what a warm checkpoint must
+        persist (``repro.core.serving``, DESIGN.md §10)."""
+        return self._warm
+
+    @property
+    def warm_capacity(self):
+        """Capacity (k_max) the warm state was built at, or None."""
+        return self._warm_k
+
+    def set_warm_state(self, warm, k_max) -> None:
+        """Install a warm boundary state (e.g. restored from a
+        checkpoint); the next ``Scalar/Path(warm=True)`` request enters
+        from it exactly as if the previous solve had produced it."""
+        self._warm = warm
+        self._warm_k = None if k_max is None else int(k_max)
 
     def compile_stats(self) -> CompileStats:
         """Unified compile accounting; see :class:`CompileStats`."""

@@ -66,6 +66,7 @@ from repro.core.saif import (SaifConfig, SaifResult, add_batch_size_static,
 from repro.core.screen_backend import (BatchScreenFn, ScreenOut,
                                        make_batch_screen,
                                        resolve_batch_screen)
+from repro.runtime.inject import seam as _fault_seam
 
 
 class _BatchState(NamedTuple):
@@ -494,7 +495,9 @@ def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
             init_mask = jnp.pad(init_mask, ((0, 0), (0, pad)))
         inner = resolve_batch_inner(config, n, k_max, b)
         carry = cold_inner_carry_batch(b, k_max, X.dtype, backend=inner)
-        res = _saif_batch_jit(
+        # the fleet dispatch routes through the fault-injection seam
+        # (repro.runtime.inject) — a single None-check when disarmed
+        res = _fault_seam("fleet", lambda: _saif_batch_jit(
             X, Y, W_arg, prep.col_norm, prep.c0, lam_arr,
             jnp.full((b,), config.eps, X.dtype), delta0,
             init_idx, init_beta, init_mask,
@@ -504,7 +507,7 @@ def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
             polish_factor=config.polish_factor,
             max_outer=config.max_outer, use_seq_ball=use_seq,
             screen_backend=backend, inner_backend=inner,
-            has_weights=W is not None, screen_fn=screen_fn)
+            has_weights=W is not None, screen_fn=screen_fn))
         # ONE host sync for the whole fleet's overflow flags; elastic
         # growth re-enters cold at doubled capacity (per-problem results
         # are capacity-invariant, so non-overflowing problems reproduce

@@ -199,6 +199,41 @@ def intersect_balls(b1: Ball, b2: Ball) -> Ball:
     return Ball(center=center, radius=radius)
 
 
+def kkt_residual(loss: Loss, X: jax.Array, y: jax.Array, beta: jax.Array,
+                 lam: jax.Array, pen: jax.Array | None = None,
+                 sample_w: jax.Array | None = None,
+                 active_tol: float = 0.0) -> jax.Array:
+    """Post-hoc KKT residual of a candidate LASSO solution (0 at the
+    exact optimum) — the serving runtime's machine-checkable certificate
+    (DESIGN.md §10).
+
+    With ``g = X^T f'(X beta)``, the stationarity conditions of Eq. 1 are
+
+      * ``|g_i| <= lam``                for ``beta_i = 0``,
+      * ``g_i = -lam * sign(beta_i)``   for ``beta_i != 0``,
+      * ``g_i = 0``                     for an unpenalized coordinate
+        (``pen_i = 0``, the fused slot).
+
+    Returns the max violation over all p coordinates — El Ghaoui's SAFE
+    framework's observation that the post-solve check is one O(np)
+    matvec, independent of how the support was produced (screened solve,
+    degraded rung, oracle), is exactly why the degradation ladder can be
+    *certificate-driven* rather than trust-based. ``pen`` weights the l1
+    term per column (0 = unpenalized); ``sample_w`` carries per-sample
+    weights (the weighted-fleet gradient); ``active_tol`` is the
+    magnitude below which a coefficient is treated as zero.
+    """
+    g = loss.grad(X @ beta, y)
+    if sample_w is not None:
+        g = g * sample_w
+    c = X.T @ g
+    lam_i = lam * (pen if pen is not None else 1.0)
+    active = jnp.abs(beta) > active_tol
+    inactive_viol = jnp.maximum(jnp.abs(c) - lam_i, 0.0)
+    active_viol = jnp.abs(c + lam_i * jnp.sign(beta))
+    return jnp.max(jnp.where(active, active_viol, inactive_viol))
+
+
 def lambda_max(loss: Loss, X: jax.Array, y: jax.Array) -> jax.Array:
     """Smallest lam with beta* = 0:  max_i |x_i^T f'(0)|   (paper Sec 2.2)."""
     g0 = loss.grad(jnp.zeros_like(y), y)

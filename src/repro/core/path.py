@@ -58,6 +58,7 @@ from repro.core.saif import (PathState, SaifConfig, SaifResult, _saif_jit,
                              initial_support, prepare_path, saif,
                              saif_jit_compile_count)
 from repro.core.screen_backend import ScreenFn, resolve_backend
+from repro.runtime.inject import seam as _fault_seam
 
 # Device-resident inter-solve handoff: (idx (k,), beta (k,), live-mask (k,),
 # InnerCarry). Produced by _warm_state / cold_start, consumed by run_path.
@@ -186,7 +187,9 @@ def run_path(prep: PathState, lams: Sequence[float],
         delta0 = config.delta0 if config.delta0 is not None else \
             min(max(lam / prep.lam_max, 1e-3), 1.0)
         warm_idx, warm_beta, warm_mask, carry = warm
-        return _saif_jit(
+        # per-lambda engine dispatch through the fault-injection seam
+        # (repro.runtime.inject) — identity when disarmed
+        return _fault_seam("path", lambda: _saif_jit(
             X, prep.y, prep.col_norm, prep.c0, jnp.asarray(lam, X.dtype),
             jnp.asarray(config.eps, X.dtype), delta0,
             warm_idx, warm_beta, warm_mask,
@@ -199,7 +202,7 @@ def run_path(prep: PathState, lams: Sequence[float],
             polish_factor=config.polish_factor,
             max_outer=config.max_outer, use_seq_ball=use_seq,
             screen_backend=backend, inner_backend=inner_name(k_max),
-            unpen_idx=unpen_static, screen_fn=screen_fn)
+            unpen_idx=unpen_static, screen_fn=screen_fn))
 
     results: List[SaifResult] = [None] * len(lams_np)
     if warm0 is not None:

@@ -39,6 +39,7 @@ from repro.core.screen_backend import (ScreenFn, ScreenOut,
                                        make_screen_from_scan,
                                        make_screen_jnp, make_screen_pallas,
                                        resolve_backend)
+from repro.runtime.inject import seam as _fault_seam
 
 
 @dataclasses.dataclass(frozen=True)
@@ -476,21 +477,24 @@ def solve_scalar(prep: PathState, lam: float,
         inner = resolve_inner_backend(config.inner_backend, config.loss,
                                       n, k_max)
         carry = cold_inner_carry(k_max, X.dtype, backend=inner)
-        res = _saif_jit(X, y, col_norm, c0, jnp.asarray(lam, X.dtype),
-                        jnp.asarray(config.eps, X.dtype),
-                        delta0, init_idx, init_beta,
-                        jnp.arange(k_max) < n_init,
-                        carry.G, carry.rho, carry.gidx,
-                        jnp.asarray(h_tilde, jnp.int32),
-                        jnp.asarray(h, jnp.int32),
-                        loss_name=config.loss, h=h,
-                        k_max=k_max, inner_epochs=config.inner_epochs,
-                        polish_factor=config.polish_factor,
-                        max_outer=config.max_outer,
-                        use_seq_ball=use_seq,
-                        screen_backend=backend, inner_backend=inner,
-                        unpen_idx=-1 if unpen is None else unpen,
-                        screen_fn=screen_fn, scan_fn=scan_fn)
+        # the engine dispatch routes through the fault-injection seam
+        # (repro.runtime.inject) — a single None-check when disarmed
+        res = _fault_seam("serial", lambda: _saif_jit(
+            X, y, col_norm, c0, jnp.asarray(lam, X.dtype),
+            jnp.asarray(config.eps, X.dtype),
+            delta0, init_idx, init_beta,
+            jnp.arange(k_max) < n_init,
+            carry.G, carry.rho, carry.gidx,
+            jnp.asarray(h_tilde, jnp.int32),
+            jnp.asarray(h, jnp.int32),
+            loss_name=config.loss, h=h,
+            k_max=k_max, inner_epochs=config.inner_epochs,
+            polish_factor=config.polish_factor,
+            max_outer=config.max_outer,
+            use_seq_ball=use_seq,
+            screen_backend=backend, inner_backend=inner,
+            unpen_idx=-1 if unpen is None else unpen,
+            screen_fn=screen_fn, scan_fn=scan_fn))
         if not bool(res.overflowed) or k_max >= p:
             return res
         k_max = min(2 * k_max, p)   # elastic capacity growth + recompile

@@ -1,0 +1,144 @@
+"""Deterministic fault injection for the serving runtime (DESIGN.md §10).
+
+Chaos testing a *compiled* solver needs a seam the injector can reach
+without perturbing the compiled artifact itself: the host-side boundary
+where a driver dispatches one compiled engine step. Every engine call
+site (``core/saif.py::solve_scalar``, ``core/path.py``'s per-lambda
+dispatch, ``core/batch.py::fleet_solve``) routes through :func:`seam`,
+which is a single module-global ``is None`` check when disarmed — zero
+overhead, zero new compilations, and byte-identical behavior on the
+happy path.
+
+Armed (``with FaultInjector(...):``), the injector keys on a global call
+counter and deterministically
+
+  * raises a transient ``RuntimeError`` *before* dispatch on chosen call
+    indices — exactly how an XLA backend fault surfaces to the host
+    (``fail_at``);
+  * sleeps an artificial per-call delay — a straggling device step
+    (``delay_at`` / ``delay_s``);
+  * pokes NaN into the returned result's ``beta``/``gap`` — how a NaN
+    born in the gradient pipeline of a faulty kernel surfaces at the
+    host boundary (``nan_at``). The poke happens outside the compiled
+    program, so the compiled artifact and its cache keys are untouched.
+
+All schedules are either explicit index sets or derived from a seed via
+:meth:`FaultInjector.from_seed` — runs are reproducible by construction.
+This module imports no jax at module scope (the NaN poke imports it
+lazily) so arming the seam costs nothing at import time.
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterable, List, Optional, Tuple
+
+import numpy as np
+
+_ACTIVE: Optional["FaultInjector"] = None
+
+
+def armed() -> Optional["FaultInjector"]:
+    """The currently armed injector, or None (the steady state)."""
+    return _ACTIVE
+
+
+def seam(tag: str, fn):
+    """Run one engine dispatch through the active injector.
+
+    ``tag`` names the engine boundary (``"serial"`` / ``"path"`` /
+    ``"fleet"``). Identity — one global None-check — when disarmed.
+    """
+    inj = _ACTIVE
+    if inj is None:
+        return fn()
+    return inj.run(tag, fn)
+
+
+def _poke_nan(out):
+    """Corrupt a solver result the way an in-kernel NaN surfaces: NaN in
+    the coefficients and the gap. Works on any result NamedTuple with
+    ``beta``/``gap`` fields (serial SaifResult and fleet results alike);
+    anything else is returned untouched."""
+    if not (hasattr(out, "_replace") and hasattr(out, "beta")
+            and hasattr(out, "gap")):
+        return out
+    import jax.numpy as jnp
+    beta = jnp.asarray(out.beta)
+    nan = jnp.asarray(jnp.nan, beta.dtype)
+    return out._replace(beta=beta.at[..., 0].set(nan),
+                        gap=jnp.full_like(jnp.asarray(out.gap), jnp.nan))
+
+
+class FaultInjector:
+    """Seeded, deterministic fault schedule over the engine-call counter.
+
+    ``fail_at`` / ``nan_at`` / ``delay_at`` are 1-based engine-call
+    indices (the counter spans every seam, in dispatch order). ``tags``
+    optionally restricts injection to specific seams (calls at other
+    seams still advance the counter, keeping schedules stable when a
+    request mixes engines). Use as a context manager::
+
+        with FaultInjector(fail_at={1}):
+            serving.solve(Scalar(lam))   # first engine call faults,
+                                         # the retry path recovers
+    """
+
+    def __init__(self, *, fail_at: Iterable[int] = (),
+                 nan_at: Iterable[int] = (),
+                 delay_at: Iterable[int] = (), delay_s: float = 0.0,
+                 tags: Optional[Iterable[str]] = None,
+                 exc: type = RuntimeError,
+                 message: str = "injected transient backend fault"):
+        self.fail_at = {int(i) for i in fail_at}
+        self.nan_at = {int(i) for i in nan_at}
+        self.delay_at = {int(i) for i in delay_at}
+        self.delay_s = float(delay_s)
+        self.tags = None if tags is None else set(tags)
+        self.exc = exc
+        self.message = message
+        self.calls = 0
+        self.log: List[Tuple[int, str, str]] = []   # (call#, tag, action)
+
+    @classmethod
+    def from_seed(cls, seed: int, n_calls: int, *, p_fail: float = 0.0,
+                  p_nan: float = 0.0, p_delay: float = 0.0,
+                  delay_s: float = 0.0, **kw) -> "FaultInjector":
+        """Derive a schedule over ``n_calls`` engine calls from a seed —
+        the chaos suite's reproducible random sweep."""
+        rng = np.random.default_rng(seed)
+        draws = rng.random((3, n_calls))
+        idx = np.arange(1, n_calls + 1)
+        return cls(fail_at=idx[draws[0] < p_fail],
+                   nan_at=idx[draws[1] < p_nan],
+                   delay_at=idx[draws[2] < p_delay], delay_s=delay_s, **kw)
+
+    def run(self, tag: str, fn):
+        if self.tags is not None and tag not in self.tags:
+            self.calls += 1
+            return fn()
+        self.calls += 1
+        k = self.calls
+        if k in self.delay_at and self.delay_s > 0.0:
+            self.log.append((k, tag, "delay"))
+            time.sleep(self.delay_s)
+        if k in self.fail_at:
+            self.log.append((k, tag, "fail"))
+            raise self.exc(f"{self.message} (engine call {k}, {tag})")
+        out = fn()
+        if k in self.nan_at:
+            self.log.append((k, tag, "nan"))
+            out = _poke_nan(out)
+        return out
+
+    # -- arming ---------------------------------------------------------
+    def __enter__(self) -> "FaultInjector":
+        global _ACTIVE
+        if _ACTIVE is not None:
+            raise RuntimeError("a FaultInjector is already armed")
+        _ACTIVE = self
+        return self
+
+    def __exit__(self, *exc_info):
+        global _ACTIVE
+        _ACTIVE = None
+        return False

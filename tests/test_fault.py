@@ -1,0 +1,277 @@
+"""Fault-tolerance runtime units (DESIGN.md §10).
+
+Covers the PR's hardened ``repro.runtime.fault`` (jittered exponential
+backoff with a deadline cap; straggler medians that exclude flagged
+outliers), the deterministic ``repro.runtime.inject`` seams, the
+PreemptionGuard drill, and checkpoint atomicity when a writer dies
+mid-flush. Everything here is host-side and CPU-deterministic.
+"""
+import os
+import random
+import shutil
+import time
+
+import numpy as np
+import pytest
+
+from repro.runtime.fault import (PreemptionGuard, RetryDeadlineExceeded,
+                                 StepFailed, StragglerMonitor, backoff_delay,
+                                 retry_step)
+from repro.runtime.inject import FaultInjector, armed, seam
+
+
+# ---------------------------------------------------------------------------
+# retry_step: backoff schedule + deadline cap
+# ---------------------------------------------------------------------------
+
+def test_backoff_is_exponential_and_jittered():
+    rng = random.Random(0)
+    d1 = backoff_delay(1, 0.1, 2.0, 0.0)
+    d2 = backoff_delay(2, 0.1, 2.0, 0.0)
+    d3 = backoff_delay(3, 0.1, 2.0, 0.0)
+    assert (d1, d2, d3) == (0.1, 0.2, 0.4)
+    js = [backoff_delay(1, 0.1, 2.0, 0.5, rng) for _ in range(64)]
+    assert all(0.05 <= d <= 0.15 for d in js)
+    assert len({round(d, 12) for d in js}) > 1      # actually jittered
+    # deterministic under the same seed
+    rng2 = random.Random(0)
+    assert js == [backoff_delay(1, 0.1, 2.0, 0.5, rng2) for _ in range(64)]
+    assert backoff_delay(1, 0.0, 2.0, 0.5) == 0.0   # base 0 = no sleep
+
+
+def test_retry_sleeps_follow_the_schedule():
+    calls = {"n": 0}
+    sleeps = []
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 4:
+            raise RuntimeError("transient")
+        return "ok"
+
+    out = retry_step(flaky, max_retries=3, backoff_base_s=0.1,
+                     backoff_mult=2.0, jitter=0.0, sleep=sleeps.append)
+    assert out == "ok"
+    assert sleeps == [0.1, 0.2, 0.4]
+
+
+def test_retry_deadline_caps_sleep_and_raises_typed():
+    clock = {"t": 0.0}
+
+    def fake_clock():
+        return clock["t"]
+
+    def fake_sleep(s):
+        clock["t"] += s
+
+    def always_fail():
+        clock["t"] += 0.05
+        raise RuntimeError("down")
+
+    # generous retry budget, tight deadline: the deadline, not the retry
+    # count, must terminate the loop — with the typed subclass
+    with pytest.raises(RetryDeadlineExceeded):
+        retry_step(always_fail, max_retries=100, backoff_base_s=0.1,
+                   jitter=0.0, deadline_s=0.3, sleep=fake_sleep,
+                   clock=fake_clock)
+    assert clock["t"] <= 0.6        # sleeps were capped to the budget
+    with pytest.raises(StepFailed):
+        retry_step(always_fail, max_retries=1, sleep=fake_sleep,
+                   clock=fake_clock)
+
+
+def test_retry_does_not_catch_unlisted_exceptions():
+    def boom():
+        raise ValueError("not transient")
+
+    with pytest.raises(ValueError):
+        retry_step(boom, max_retries=5)
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor: flagged outliers leave the median
+# ---------------------------------------------------------------------------
+
+def test_straggler_excluded_from_trailing_median():
+    mon = StragglerMonitor(factor=3.0, min_samples=3)
+    for _ in range(5):
+        assert not mon.record(1.0)
+    assert mon.record(10.0)         # 10x outlier flags
+    # the outlier must NOT inflate the baseline: successors at ~4x the
+    # true median still flag (the pre-fix behavior let them slip once
+    # the 10.0 entered the window)
+    assert mon.record(4.0)
+    assert mon.record(4.0)
+    assert not mon.record(1.1)
+    assert mon.flagged == [6, 7, 8]
+
+
+def test_straggler_callback_and_timed():
+    seen = []
+    mon = StragglerMonitor(factor=2.0, min_samples=2,
+                           on_straggler=lambda step, s, med:
+                           seen.append((step, round(med, 3))))
+    for t in (0.1, 0.1, 0.1):
+        mon.record(t)
+    mon.record(0.5)
+    assert seen == [(4, 0.1)]
+    assert mon.timed(lambda: 42) == 42
+    assert len(mon.times) == 5
+
+
+# ---------------------------------------------------------------------------
+# deterministic injection seams
+# ---------------------------------------------------------------------------
+
+def test_seam_is_identity_when_disarmed():
+    assert armed() is None
+    assert seam("serial", lambda: 123) == 123
+
+
+def test_injector_schedules_are_deterministic_and_logged():
+    a = FaultInjector.from_seed(7, 20, p_fail=0.3, p_nan=0.2)
+    b = FaultInjector.from_seed(7, 20, p_fail=0.3, p_nan=0.2)
+    assert a.fail_at == b.fail_at and a.nan_at == b.nan_at
+    with FaultInjector(fail_at={2}, delay_at={3}, delay_s=0.01) as inj:
+        assert seam("serial", lambda: "a") == "a"
+        with pytest.raises(RuntimeError, match="injected"):
+            seam("serial", lambda: "b")
+        t0 = time.monotonic()
+        assert seam("path", lambda: "c") == "c"
+        assert time.monotonic() - t0 >= 0.01
+    assert [(k, act) for k, _, act in inj.log] == [(2, "fail"), (3, "delay")]
+    assert armed() is None          # disarmed on exit
+
+
+def test_injector_tag_filter_still_advances_counter():
+    with FaultInjector(fail_at={2}, tags={"fleet"}) as inj:
+        assert seam("serial", lambda: 1) == 1   # call 1 (other tag)
+        assert seam("serial", lambda: 2) == 2   # call 2: filtered out
+        assert inj.calls == 2
+    with pytest.raises(RuntimeError):
+        with FaultInjector(fail_at={1}, tags={"fleet"}):
+            seam("fleet", lambda: 3)
+
+
+def test_injector_nan_poke_reaches_solver_results():
+    import jax.numpy as jnp
+    from repro.core.saif import SaifConfig, prepare_path, solve_scalar
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(20, 50))
+    y = X[:, 0] + 0.1 * rng.normal(size=20)
+    prep = prepare_path(X, y, SaifConfig())
+    with FaultInjector(nan_at={1}):
+        res = solve_scalar(prep, 5.0, SaifConfig())
+    assert not bool(jnp.all(jnp.isfinite(res.beta)))
+    assert not bool(jnp.isfinite(res.gap))
+    # and the very next (uninjected) solve is clean — the poke happened
+    # outside the compiled program, not inside its cache
+    res2 = solve_scalar(prep, 5.0, SaifConfig())
+    assert bool(jnp.all(jnp.isfinite(res2.beta)))
+
+
+def test_double_arming_is_an_error():
+    with FaultInjector():
+        with pytest.raises(RuntimeError, match="already armed"):
+            FaultInjector().__enter__()
+
+
+# ---------------------------------------------------------------------------
+# PreemptionGuard drill
+# ---------------------------------------------------------------------------
+
+def test_preemption_guard_trigger_and_uninstall():
+    g = PreemptionGuard(install=False)
+    assert not g.preempted
+    g.trigger()
+    assert g.preempted
+    g.uninstall()                   # no-op without install; must not raise
+
+
+# ---------------------------------------------------------------------------
+# checkpoint atomicity under a killed mid-flush writer
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_survives_killed_mid_flush_write(tmp_path):
+    """A writer that dies mid-flush (torn .tmp dir, missing meta) must
+    neither corrupt the previous checkpoint nor be offered for restore."""
+    import jax.numpy as jnp
+    from repro.ckpt import checkpoint as ckpt
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.arange(4.0), "b": jnp.ones((2, 2))}
+    ckpt.save(d, 1, tree, extra={"tag": "good"})
+
+    # simulate a crash mid-flush of step 2: the temp dir exists with a
+    # partial array and NO meta.json (meta is written last)
+    torn = os.path.join(d, "step_00000002.tmp")
+    os.makedirs(torn)
+    np.save(os.path.join(torn, "arr_00000.npy"), np.zeros(4))
+
+    assert ckpt.latest_step(d) == 1          # torn write invisible
+    restored, extra = ckpt.restore(d, 1, tree)
+    assert extra == {"tag": "good"}
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(4.0))
+    # a later writer reclaims the torn temp dir and completes atomically
+    ckpt.save(d, 2, tree, extra={"tag": "retry"})
+    assert ckpt.latest_step(d) == 2
+    assert not os.path.exists(torn)
+    meta = ckpt.load_meta(d, 2)
+    assert meta["extra"]["tag"] == "retry"
+    shutil.rmtree(d)
+
+
+def test_serving_checkpoint_restore_resumes_warm(tmp_path):
+    """SIGTERM drill: solve warm, checkpoint via the PreemptionGuard
+    path, 'restart' (a fresh ServingSession on the same dir) and resume
+    — the continued stream is bitwise the uninterrupted one, with zero
+    extra solver compilations after restore."""
+    from repro.core.api import Problem, Scalar
+    from repro.core.serving import ServingConfig, open_serving
+
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(30, 80))
+    y = X[:, 0] - X[:, 3] + 0.1 * rng.normal(size=30)
+    prob = Problem(X=X, y=y)
+    lams = [6.0, 4.0, 2.5]
+
+    ref = open_serving(prob)
+    want = [np.asarray(ref.solve(Scalar(l, warm=True)).value.beta)
+            for l in lams]
+
+    d = str(tmp_path / "warm")
+    a = open_serving(prob, serving=ServingConfig(ckpt_dir=d),
+                     guard=PreemptionGuard(install=False))
+    a.solve(Scalar(lams[0], warm=True))
+    a.guard.trigger()                       # the SIGTERM moment
+    r = a.solve(Scalar(lams[1], warm=True))  # drain: checkpoints first
+    assert "preempted_checkpointed" in r.verdict.events
+
+    b = open_serving(prob, serving=ServingConfig(ckpt_dir=d))
+    assert b.restored
+    n0 = b.compile_stats().total
+    got = [np.asarray(b.solve(Scalar(l, warm=True)).value.beta)
+           for l in lams[1:]]
+    assert b.compile_stats().total == n0    # warm restore: no recompiles
+    np.testing.assert_array_equal(want[1], got[0])
+    np.testing.assert_array_equal(want[2], got[1])
+
+
+def test_checkpoint_digest_gates_restore(tmp_path):
+    """A checkpoint of a different problem must be ignored (cold start),
+    not restored into the wrong session."""
+    from repro.core.api import Problem, Scalar
+    from repro.core.serving import ServingConfig, open_serving
+    rng = np.random.default_rng(4)
+    X = rng.normal(size=(25, 60))
+    y1 = X[:, 0] + 0.1 * rng.normal(size=25)
+    y2 = X[:, 1] + 0.1 * rng.normal(size=25)
+    d = str(tmp_path / "gate")
+    a = open_serving(Problem(X=X, y=y1),
+                     serving=ServingConfig(ckpt_dir=d))
+    a.solve(Scalar(3.0, warm=True))
+    assert a.checkpoint() is not None
+    b = open_serving(Problem(X=X, y=y2),
+                     serving=ServingConfig(ckpt_dir=d))
+    assert not b.restored
+    assert b.session.warm_state is None
