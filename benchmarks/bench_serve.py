@@ -179,7 +179,65 @@ def run(full: bool = False):
     assert served_speedup >= MIN_SPEEDUP, (
         f"served hot stream reached only {served_speedup:.2f}x over cold "
         f"(acceptance {MIN_SPEEDUP}x)")
-    return [row]
+
+    # --- served fast-parity fleet (ISSUE 7): the relaxed-parity lockstep
+    # engine with certified bf16 screening, behind the same fault-tolerant
+    # runtime. Asserted: the request is served un-degraded, the verdict's
+    # working-precision KKT certificate passes, and the verdict records
+    # the execution-mode provenance (parity + screening precision).
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro import Fleet
+    from repro.core import get_loss
+    from repro.core.duality import lambda_max
+
+    B = 8
+    rng = np.random.default_rng(11)
+    Ys, flams = [], []
+    loss = get_loss("least_squares")
+    for _ in range(B):
+        w = np.zeros(p)
+        w[rng.choice(p, 15, replace=False)] = rng.uniform(-1, 1, 15)
+        yb = X @ w + rng.normal(0, 1, n)
+        Ys.append(yb)
+        flams.append(0.5 * float(lambda_max(loss, jnp.asarray(X),
+                                            jnp.asarray(yb))))
+    Yf = np.stack(Ys)
+    cfg_fast = dataclasses.replace(cfg, parity="fast",
+                                   screen_dtype="bfloat16")
+    srv_f = open_serving(Problem(X=X), cfg_fast)
+    req = Fleet(Y=Yf, lams=np.asarray(flams))
+    _block(srv_f.solve(req).value)                 # warm: one compilation
+    fstats0 = srv_f.stats()
+    t0 = time.perf_counter()
+    fout = srv_f.solve(req)
+    _block(fout.value)
+    t_fleet = time.perf_counter() - t0
+    fstats1 = srv_f.stats()
+    v = fout.verdict
+    assert v.ok and not v.degraded, (
+        f"served fast fleet degraded (ok={v.ok}, degraded={v.degraded}, "
+        f"rungs={v.rungs})")
+    assert fstats1.degraded - fstats0.degraded == 0
+    assert v.parity == "fast" and v.screen_dtype == "bfloat16", (
+        f"verdict must record execution-mode provenance, got "
+        f"parity={v.parity!r} screen_dtype={v.screen_dtype!r}")
+    fleet_row = {
+        "fleet_b": B, "n": n, "p": p,
+        "parity": v.parity, "screen_dtype": v.screen_dtype,
+        "served_fleet_s": round(t_fleet, 4),
+        "served_fleet_ms_per_problem": round(t_fleet / B * 1e3, 3),
+        "gap": float(v.gap), "kkt_residual": float(v.kkt_residual),
+        "kkt_tol": float(v.kkt_tol),
+        "degraded_rate": 0.0, "verdict_ok": True,
+    }
+    print(f"[serve] fleet B={B} n={n} p={p} parity={v.parity} "
+          f"dtype={v.screen_dtype} served={t_fleet * 1e3:.1f}ms "
+          f"({t_fleet / B * 1e3:.1f}ms/problem, kkt={v.kkt_residual:.2e} "
+          f"<= tol {v.kkt_tol:.2e}, degraded 0%)")
+    return [row, fleet_row]
 
 
 if __name__ == "__main__":

@@ -56,15 +56,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import active_set as aset_lib
+from repro.core.cm import soft_threshold
 from repro.core.duality import (gap_ball, gap_precision_floor,
-                                intersect_balls, sequential_ball)
-from repro.core.inner_backend import (InnerCarry, cold_inner_carry_batch,
+                                intersect_balls, mixed_precision_gamma,
+                                sequential_ball, widened_radius)
+from repro.core.inner_backend import (InnerCarry, _dual_and_gap,
+                                      cold_inner_carry_batch,
                                       make_batch_inner)
 from repro.core.losses import get_loss
 from repro.core.saif import (SaifConfig, SaifResult, add_batch_size_static,
                              default_capacity)
 from repro.core.screen_backend import (BatchScreenFn, ScreenOut,
                                        make_batch_screen,
+                                       make_batch_screen_fast,
                                        resolve_batch_screen)
 from repro.runtime.inject import seam as _fault_seam
 
@@ -321,10 +325,371 @@ def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
                       inner=final.inner)
 
 
+# ---------------------------------------------------------------------------
+# fast-parity fleet engine (parity="fast", DESIGN.md §11)
+# ---------------------------------------------------------------------------
+# The bitwise engine above buys byte-for-byte serial equality by running
+# every per-problem float path as a lax.map of the literal serial code —
+# which is a scan, so the fleet's per-problem work is SEQUENTIAL and the
+# speedup ceiling is the amortized fixed costs (~2.6x measured). The fast
+# engine is the opt-in other half of the trade: batch-axis einsums for
+# bursts/certificates, a lockstep CM sweep over a STATIC slot order
+# (dynamic_slice on batch-leading arrays — no per-problem gathers in the
+# inner loop, the measured ~30x XLA:CPU gather trap that killed the PR 4
+# lockstep attempt), and the one-gemm-per-step screen, optionally in
+# reduced precision with a certified rounding-error widening of the safe
+# radius (screen_backend.make_batch_screen_fast). What it may re-associate
+# and what it may never skip is the §11 parity contract; acceptance is
+# supports + gap <= eps + a passing working-precision KKT residual, not
+# bitwise trajectories. Least-squares fleets only — other losses fall
+# back to the bitwise engine (fleet_solve dispatch).
+
+
+def _delete_features_fast(aset, drop):
+    """Batched DEL without ``order`` maintenance.
+
+    The fast engine's sweep visits a static slot range (``hi`` in
+    :func:`_gram_sweep_fast`) instead of the serial engine's compacted
+    ``order[:count]``, so the order permutation is dead weight here —
+    skipping its cumsum/scatter upkeep trims the while_loop body, which
+    on XLA:CPU is billed per op. Slot placement is unaffected:
+    :func:`repro.core.active_set.add_features` ranks free slots by slot
+    id, never through ``order``."""
+    p = aset.in_active.shape[1]
+    drop = drop & aset.mask
+    new_mask = aset.mask & ~drop
+    new_beta = jnp.where(drop, 0.0, aset.beta)
+    write_idx = jnp.where(drop, aset.idx, p)
+    bar = jnp.arange(aset.idx.shape[0])[:, None]
+    new_in_active = aset.in_active.at[bar, write_idx].set(
+        False, mode="drop")
+    return aset._replace(mask=new_mask, beta=new_beta,
+                         in_active=new_in_active,
+                         count=aset.count -
+                         jnp.sum(drop, axis=1).astype(jnp.int32))
+
+
+def _add_features_fast(aset, cand_idx, cand_keep):
+    """Batched ADD without ``order`` maintenance (see
+    :func:`_delete_features_fast`). Same slot arithmetic as the serial
+    :func:`repro.core.active_set.add_features` — kept candidates fill
+    the lowest free slots — minus the compact_order call."""
+    b, k_max = aset.mask.shape
+    p = aset.in_active.shape[1]
+    free = ~aset.mask
+    free_i = free.astype(jnp.int32)
+    free_rank = jnp.cumsum(free_i, axis=1) - free_i
+    n_free = jnp.sum(free_i, axis=1)
+    keep_i = cand_keep.astype(jnp.int32)
+    cand_rank = jnp.cumsum(keep_i, axis=1) - keep_i
+    n_want = jnp.sum(keep_i, axis=1)
+    placed = cand_keep & (cand_rank < n_free[:, None])
+    big = jnp.asarray(k_max + 1, jnp.int32)
+    order_key = jnp.where(free, free_rank, big)
+    slot_of_rank = jnp.argsort(order_key, axis=1)
+    target_slot = jnp.take_along_axis(
+        slot_of_rank, jnp.clip(cand_rank, 0, k_max - 1), axis=1)
+    target_slot = jnp.where(placed, target_slot, k_max)
+    bar = jnp.arange(b)[:, None]
+    new_idx = aset.idx.at[bar, target_slot].set(cand_idx, mode="drop")
+    new_mask = aset.mask.at[bar, target_slot].set(True, mode="drop")
+    new_beta = aset.beta.at[bar, target_slot].set(0.0, mode="drop")
+    new_in_active = aset.in_active.at[
+        bar, jnp.where(placed, cand_idx, p)].set(True, mode="drop")
+    return aset._replace(idx=new_idx, mask=new_mask, beta=new_beta,
+                         in_active=new_in_active,
+                         overflowed=aset.overflowed | (n_want > n_free),
+                         count=aset.count +
+                         jnp.sum(placed, axis=1).astype(jnp.int32))
+
+
+def _gram_rebuild_fast(X, Y, weights, aset):
+    """Full batched Gram build at fleet start: G = Xa^T diag(w) Xa,
+    rho = Xa^T diag(w) y, per problem via batch-axis einsums."""
+    Xa = aset_lib.gather_columns_batch(X, aset)          # (B, n, k)
+    Xw = Xa if weights is None else Xa * weights[:, :, None]
+    G = jnp.einsum("bnk,bnl->bkl", Xw, Xa)
+    rho = jnp.einsum("bnk,bn->bk", Xw, Y)
+    gidx = jnp.where(aset.mask, aset.idx, -1)
+    return InnerCarry(G=G, rho=rho, gidx=gidx), Xa
+
+
+def _gram_refresh_fast(X, Y, weights, carry, aset, Xa, h):
+    """Per-step batched Gram reconcile: at most ``h`` slots per problem
+    changed feature since the last step (the ADD batch); their rows /
+    columns / rho entries are recomputed from ``h`` gathered columns.
+    Branchless (a problem with nothing dirty scatters into the dropped
+    fill slot); dead slots keep stale entries — their beta is masked to
+    zero so the sweep never reads them through a live term."""
+    kc = aset.idx.shape[1]
+    hs = min(h, kc)
+
+    # Xa is already gathered this step — each problem's block rides along
+    def one_with_xa(G, rho, gidx, idx_b, mask_b, y_b, Xa_b, w_b):
+        gidx = jnp.where(mask_b, gidx, -1)
+        dirty = mask_b & (gidx != idx_b)
+        slots = jnp.nonzero(dirty, size=hs, fill_value=kc)[0]
+        ids = jnp.take(idx_b, jnp.minimum(slots, kc - 1))
+        cols = jnp.take(X, ids, axis=1)                  # (n, hs)
+        cols_w = cols if w_b is None else cols * w_b[:, None]
+        Gblk = Xa_b.T @ cols_w                           # (k, hs)
+        G = G.at[:, slots].set(Gblk, mode="drop")
+        G = G.at[slots, :].set(Gblk.T, mode="drop")
+        rho = rho.at[slots].set(cols_w.T @ y_b, mode="drop")
+        return G, rho, jnp.where(mask_b, idx_b, -1)
+
+    if weights is None:
+        G, rho, gidx = jax.vmap(
+            lambda G, rho, gidx, idx_b, mask_b, y_b, Xa_b:
+            one_with_xa(G, rho, gidx, idx_b, mask_b, y_b, Xa_b, None))(
+            carry.G, carry.rho, carry.gidx, aset.idx, aset.mask, Y, Xa)
+    else:
+        G, rho, gidx = jax.vmap(one_with_xa)(
+            carry.G, carry.rho, carry.gidx, aset.idx, aset.mask, Y, Xa,
+            weights)
+    return InnerCarry(G=G, rho=rho, gidx=gidx)
+
+
+def _gram_sweep_fast(G, rho, beta, mask, lam, n_ep, smoothness=1.0):
+    """Lockstep batched CM sweep (least squares, Gram form).
+
+    Every problem steps the SAME static slot j each inner iteration, so
+    the per-iteration work is dynamic_slice / dynamic_update_slice on
+    batch-leading (B, k) arrays — no batched-index gathers. Dead slots
+    are masked to a zero coefficient; problems whose per-problem epoch
+    budget ``n_ep[b]`` is exhausted (or that are frozen, budget 0) are
+    gated to a no-op so their (beta, qr) carry is exactly preserved.
+    Sweeping all k slots instead of the serial engine's compacted
+    ``order[:count]`` visits dead slots too — a fast-parity re-ordering
+    the §11 contract explicitly allows (a dead slot's step is the
+    identity; extra passes only tighten the sub-problem solve).
+    """
+    k = beta.shape[1]
+    diag = jnp.diagonal(G, axis1=1, axis2=2)
+    inv_l = 1.0 / jnp.maximum(smoothness * diag, 1e-30)
+    thr = lam[:, None] * inv_l
+    qr = jnp.einsum("bkl,bl->bk", G, beta) - rho
+    max_ep = jnp.max(n_ep)
+    # the sweep visits slots [0, hi): everything above the fleet's highest
+    # live slot is dead everywhere (adds fill the lowest free slots), so
+    # the loop trip count tracks the actual active-set size, not k_max
+    hi = jnp.max(jnp.where(mask, jnp.arange(k)[None, :] + 1, 0))
+
+    def slot_step(j, carry, gate):
+        beta, qr = carry
+        col = lambda a: jax.lax.dynamic_slice_in_dim(a, j, 1, axis=1)[:, 0]
+        bj, qrj, ilj, tj, mj = col(beta), col(qr), col(inv_l), col(thr), \
+            col(mask)
+        val = jnp.where(mj, soft_threshold(bj - qrj * ilj, tj), 0.0)
+        b_new = jnp.where(gate, val, bj)
+        Gj = jax.lax.dynamic_slice_in_dim(G, j, 1, axis=2)[:, :, 0]
+        qr = qr + (b_new - bj)[:, None] * Gj
+        beta = jax.lax.dynamic_update_slice_in_dim(
+            beta, b_new[:, None], j, axis=1)
+        return beta, qr
+
+    # one flat loop (i -> epoch i//hi, slot i%hi) instead of nested
+    # fori_loops: the scalar divmod is cheaper than per-epoch loop setup
+    def flat_step(i, carry):
+        return slot_step(i % hi, carry, (i // hi) < n_ep)
+
+    beta, _ = jax.lax.fori_loop(0, max_ep * hi, flat_step, (beta, qr))
+    return beta
+
+
+@partial(jax.jit, static_argnames=("loss_name", "h", "k_max",
+                                   "inner_epochs", "polish_factor",
+                                   "max_outer", "use_seq_ball",
+                                   "screen_dtype", "has_weights"))
+def _saif_batch_fast_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
+                         init_beta, init_mask, h_tilde, h_cap, *,
+                         loss_name: str, h: int, k_max: int,
+                         inner_epochs: int, polish_factor: int,
+                         max_outer: int, use_seq_ball: bool,
+                         screen_dtype: str = "working",
+                         has_weights: bool = False) -> SaifResult:
+    """The fast-parity fleet while_loop (see the section comment above).
+
+    Same decision structure as ``_saif_batch_jit`` — the same per-problem
+    liveness masks, DEL / ADD-stop / delta-ramp / stuck-recruit rules,
+    traces and overflow flags — but every stage is genuinely batched, and
+    both screening radii (the one-gemm ADD screen and the vmapped DEL
+    certificate) are widened by the certified rounding bound of their
+    respective compute precisions before any decision is taken.
+    """
+    loss = get_loss(loss_name)
+    n, p = X.shape
+    b = Y.shape[0]
+    barange = jnp.arange(b)
+    lam = jnp.asarray(lam, X.dtype)
+    weights = W if has_weights else None
+    screen = make_batch_screen_fast(X, col_norm, h,
+                                    screen_dtype=screen_dtype)
+    # working-precision batched contractions re-associate: the DEL rule's
+    # correlations carry the working-dtype gamma widening (tiny — ~3e-6
+    # relative at n=50/f32 — but what makes the re-association *certified*
+    # rather than hoped-harmless)
+    gamma_work = mixed_precision_gamma(n, X.dtype, X.dtype)
+
+    aset0 = aset_lib.init_active_set_batch(p, k_max, init_idx, X.dtype,
+                                           init_beta, live_mask=init_mask)
+    carry0, _ = _gram_rebuild_fast(X, Y, weights, aset0)
+    trace0 = jnp.full((b, max_outer), -1.0, X.dtype)
+    state0 = _BatchState(
+        aset=aset0, z=jnp.zeros_like(Y),
+        gap=jnp.full((b,), jnp.inf, X.dtype),
+        delta=jnp.asarray(delta0, X.dtype),
+        is_add=jnp.ones((b,), bool), stop=jnp.zeros((b,), bool),
+        t=jnp.zeros((b,), jnp.int32), inner=carry0,
+        trace_n_active=trace0, trace_gap=trace0, trace_dual=trace0)
+
+    def cond(s: _BatchState):
+        return jnp.any(~s.stop & (s.t < max_outer))
+
+    def _certify_one(y_b, w_b, theta_b, gap_b, lam_b, eps_b, delta_b,
+                     is_add_b, Xa_b, idx_b, mask_b, cn_b, c0_b):
+        """Serial certificate arithmetic, vmapped (re-associated) — with
+        the DEL radius widened by the working-precision dot bound."""
+        ball = gap_ball(loss, theta_b, gap_b, lam_b,
+                        floor=gap_precision_floor(theta_b, lam_b))
+        if use_seq_ball:
+            c0_active = jnp.where(mask_b, jnp.take(c0_b, idx_b), -jnp.inf)
+            lam0t = jnp.maximum(jnp.max(c0_active), lam_b * (1 + 1e-12))
+            g0_b = loss.grad(jnp.zeros_like(y_b), y_b)
+            theta0t = -g0_b / lam0t
+            b_seq = sequential_ball(loss, y_b, theta0t, lam0t, lam_b)
+            ball = intersect_balls(b_seq, ball)
+        stop_now_b = (~is_add_b) & (gap_b <= eps_b)
+        corr_act = jnp.abs(Xa_b.T @ ball.center)
+        norm_act = jnp.where(mask_b, jnp.take(cn_b, idx_b), 0.0)
+        r_del = widened_radius(ball.radius, ball.center, gamma_work)
+        del_row = mask_b & (corr_act + norm_act * r_del < 1.0)
+        conj = loss.conj(-lam_b * theta_b, y_b)
+        if w_b is not None:
+            conj = w_b * conj
+        dual_val = -jnp.sum(conj)
+        return (ball.center, delta_b * ball.radius, stop_now_b, del_row,
+                dual_val)
+
+    if has_weights:
+        certify = jax.vmap(_certify_one)
+        dual_gap = jax.vmap(
+            lambda Xa_b, y_b, beta_b, z_b, mask_b, lam_b, w_b:
+            _dual_and_gap(loss, Xa_b, y_b, beta_b, z_b, mask_b, lam_b,
+                          sample_w=w_b))
+    else:
+        certify = jax.vmap(
+            lambda *a: _certify_one(a[0], None, *a[1:]))
+        dual_gap = jax.vmap(
+            lambda Xa_b, y_b, beta_b, z_b, mask_b, lam_b:
+            _dual_and_gap(loss, Xa_b, y_b, beta_b, z_b, mask_b, lam_b))
+
+    def body(s: _BatchState) -> _BatchState:
+        live = ~s.stop & (s.t < max_outer)
+        aset = s.aset
+        n_ep = jnp.where(s.is_add, inner_epochs,
+                         inner_epochs * polish_factor)
+        n_ep = jnp.where(live, n_ep, 0).astype(jnp.int32)
+
+        # --- lockstep inner burst (Gram form; LS-only by dispatch) -------
+        Xa = aset_lib.gather_columns_batch(X, aset)      # (B, n, k)
+        # polish bodies (post-ADD) mutate nothing but masks, so the
+        # h-column Gram reconcile is skipped fleet-wide when no slot is
+        # dirty; dead slots still drop their feature id (gidx=-1) so a
+        # later re-add of the same feature forces a refresh — its Gram
+        # row was zeroed by neighbours' refreshes while the slot was dead
+        gidx2 = jnp.where(aset.mask, s.inner.gidx, -1)
+        any_dirty = jnp.any(aset.mask & (gidx2 != aset.idx))
+        carry2 = jax.lax.cond(
+            any_dirty,
+            lambda c: _gram_refresh_fast(X, Y, weights, c, aset, Xa, h),
+            lambda c: c._replace(gidx=gidx2),
+            s.inner)
+        beta = _gram_sweep_fast(carry2.G, carry2.rho, aset.beta, aset.mask,
+                                lam, n_ep, smoothness=loss.smoothness)
+        z = jnp.einsum("bnk,bk->bn", Xa, beta)
+        if has_weights:
+            theta, gap = dual_gap(Xa, Y, beta, z, aset.mask, lam, weights)
+        else:
+            theta, gap = dual_gap(Xa, Y, beta, z, aset.mask, lam)
+        gap = jnp.asarray(gap, X.dtype)
+
+        if has_weights:
+            (theta_c, r_eff, stop_now, del_row, dual_val) = certify(
+                Y, weights, theta, gap, lam, eps, s.delta, s.is_add, Xa,
+                aset.idx, aset.mask, col_norm, c0)
+        else:
+            (theta_c, r_eff, stop_now, del_row, dual_val) = certify(
+                Y, theta, gap, lam, eps, s.delta, s.is_add, Xa,
+                aset.idx, aset.mask, col_norm, c0)
+
+        aset = aset._replace(beta=beta)
+
+        # --- DEL (per-problem widened gap-safe rule) ----------------------
+        deleting = live & ~stop_now
+        del_mask = del_row & deleting[:, None]
+        aset = _delete_features_fast(aset, del_mask)
+
+        # --- ADD phase (skipped fleet-wide once every problem is done) ----
+        do_add = live & s.is_add & ~stop_now
+
+        def do_add_phase(args):
+            aset, delta, is_add = args
+            out: ScreenOut = screen(theta_c, r_eff, aset.in_active, do_add)
+            add_done = out.max_ub < 1.0                  # (B,)
+            ranks = jnp.arange(h)
+            v_count = jnp.maximum(out.cand_ge - 1 - ranks[None, :], 0)
+            keep = ((v_count < h_tilde[:, None]) &
+                    (ranks[None, :] < h_cap[:, None]) &
+                    jnp.isfinite(out.cand_score))
+            keep = jnp.cumprod(keep.astype(jnp.int32), axis=1).astype(bool)
+            stuck = gap <= 100.0 * eps
+            keep = keep.at[:, 0].set(
+                keep[:, 0] | (stuck & jnp.isfinite(out.cand_score[:, 0])))
+            adding = do_add & ~add_done
+            aset = _add_features_fast(aset, out.cand_idx,
+                                      keep & adding[:, None])
+            done = do_add & add_done
+            grown = jnp.minimum(10.0 * delta, 1.0)
+            new_delta = jnp.where(done & (delta < 1.0), grown, delta)
+            new_is_add = jnp.where(done & (delta >= 1.0), False, is_add)
+            return aset, new_delta, new_is_add
+
+        aset, delta, is_add = jax.lax.cond(
+            jnp.any(do_add), do_add_phase, lambda a: a,
+            (aset, s.delta, s.is_add))
+
+        n_act = aset.count.astype(X.dtype)
+        new = _BatchState(
+            aset=aset, z=z, gap=gap, delta=delta, is_add=is_add,
+            stop=stop_now, t=s.t + 1, inner=carry2,
+            trace_n_active=s.trace_n_active.at[barange, s.t].set(
+                n_act, mode="drop"),
+            trace_gap=s.trace_gap.at[barange, s.t].set(gap, mode="drop"),
+            trace_dual=s.trace_dual.at[barange, s.t].set(
+                dual_val, mode="drop"))
+        return _freeze_select(live, s, new)
+
+    final = jax.lax.while_loop(cond, body, state0)
+    beta_full = aset_lib.scatter_beta_batch(final.aset, p)
+    return SaifResult(beta=beta_full, gap=final.gap, n_outer=final.t,
+                      n_active=final.aset.count,
+                      overflowed=final.aset.overflowed,
+                      trace_n_active=final.trace_n_active,
+                      trace_gap=final.trace_gap,
+                      trace_dual=final.trace_dual,
+                      active_idx=final.aset.idx,
+                      active_mask=final.aset.mask,
+                      inner=final.inner)
+
+
 def saif_batch_compile_count() -> int:
-    """Distinct ``_saif_batch_jit`` compilations alive in this process."""
+    """Distinct fleet-engine compilations alive in this process (the
+    bitwise ``_saif_batch_jit`` cache plus the fast-parity
+    ``_saif_batch_fast_jit`` cache)."""
     try:
-        return int(_saif_batch_jit._cache_size())
+        return (int(_saif_batch_jit._cache_size()) +
+                int(_saif_batch_fast_jit._cache_size()))
     except Exception:       # pragma: no cover - jit internals moved
         return -1
 
@@ -342,6 +707,29 @@ class FleetPrep(NamedTuple):
     c0_median: list
 
 
+@partial(jax.jit, static_argnames=("loss_name", "has_w"))
+def _prepare_fleet_fast_jit(X, Y, W, *, loss_name: str, has_w: bool):
+    """Device side of fast-parity fleet prep, fused under ONE dispatch:
+    c0 as one gemm (the §11 re-association contract), col norms and the
+    c0 statistics the host h formula syncs."""
+    loss = get_loss(loss_name)
+    G0 = loss.grad(jnp.zeros_like(Y), Y)
+    if has_w:
+        G0 = W * G0
+    c0 = jnp.abs(G0 @ X)
+    if has_w:
+        col_norm = jnp.sqrt(W @ (X * X))
+    else:
+        col_norm = jnp.broadcast_to(jnp.linalg.norm(X, axis=0), c0.shape)
+    # the median only buckets the pow2 h formula (heuristic-grade): its
+    # f64 sort is the most expensive op in prep under x64, so fast parity
+    # computes it on f32-cast scores. c0 itself, its max (lambda_max /
+    # delta0 / seq-ball inputs) and col_norm stay working precision —
+    # those feed certificates.
+    med = jnp.median(c0.astype(jnp.float32), axis=1).astype(X.dtype)
+    return c0, col_norm, jnp.max(c0, axis=1), med
+
+
 def prepare_fleet(X, Y, config: SaifConfig, weights=None) -> FleetPrep:
     """Per-problem null gradients, c0, column norms + ONE host sync of the
     c0 statistics the (host-side) h formula needs."""
@@ -351,16 +739,30 @@ def prepare_fleet(X, Y, config: SaifConfig, weights=None) -> FleetPrep:
     if Y.ndim == 1:
         Y = Y[None, :]
     W = None if weights is None else jnp.asarray(weights, X.dtype)
+    if config.parity == "fast":
+        # fast parity re-associates by contract (DESIGN.md §11): the whole
+        # fleet's c0 scans are ONE gemm inside one jitted dispatch. c0
+        # feeds the pow2-bucketed h formula, the cold-start top-h and the
+        # seq-ball lam0t — all ulp-insensitive consumers (a re-associated
+        # c0 only matters on an exact score tie or a bucket boundary).
+        W_arg = W if W is not None else jnp.zeros((1, 1), X.dtype)
+        c0, col_norm, c0_max, c0_med = _prepare_fleet_fast_jit(
+            X, Y, W_arg, loss_name=config.loss, has_w=W is not None)
+        c0_max, c0_med = jax.device_get((c0_max, c0_med))
+        return FleetPrep(X=X, Y=Y, W=W, c0=c0, col_norm=col_norm,
+                         c0_max=[float(v) for v in c0_max],
+                         c0_median=[float(v) for v in c0_med])
     G0 = loss.grad(jnp.zeros_like(Y), Y)
     if W is not None:
         G0 = W * G0
-    # per-problem c0 scans as B EAGER serial matvecs — the literal op the
-    # serial driver's null_gradient dispatches, so lambda_max, delta0, the
-    # cold-start top-h and the seq-ball lam0t are bitwise per problem (a
-    # (B, n) x (n, p) matmul — or even a lax.map'd matvec, which compiles
-    # under scan instead of dispatching the eager dot executable —
-    # re-associates the reduction at the ulp level; same rule as the §8
-    # screen paths). One-time prep cost, off the hot path.
+    # per-problem c0 scans as B EAGER serial matvecs — the literal op
+    # the serial driver's null_gradient dispatches, so lambda_max,
+    # delta0, the cold-start top-h and the seq-ball lam0t are bitwise
+    # per problem (a (B, n) x (n, p) matmul — or even a lax.map'd
+    # matvec, which compiles under scan instead of dispatching the
+    # eager dot executable — re-associates the reduction at the ulp
+    # level; same rule as the §8 screen paths). One-time prep cost,
+    # off the hot path.
     c0 = jnp.stack([jnp.abs(X.T @ G0[i]) for i in range(Y.shape[0])])
     if W is None:
         col_norm = jnp.broadcast_to(jnp.linalg.norm(X, axis=0),
@@ -401,6 +803,26 @@ def initial_support_batch(c0: jax.Array, hs, k_max: int, p: int,
     mask = ranks[None, :] < n_init[:, None]
     init_idx = jnp.where(mask, init_idx, 0)
     return init_idx, jnp.zeros((b, k_max), dtype), mask
+
+
+@partial(jax.jit, static_argnames=("hs", "k_max", "p", "dtype",
+                                   "sel_dtype"))
+def _initial_support_batch_jit(c0, *, hs, k_max: int, p: int, dtype,
+                               sel_dtype=None):
+    """Jitted :func:`initial_support_batch` (fast-parity dispatch): the
+    eager top_k + scatters are ~2.6 ms of host dispatch at the CI fleet
+    shape — a third of the whole fast solve. ``hs`` rides as a static
+    tuple; results are identical (top_k and the mask arithmetic are
+    deterministic, jit or eager).
+
+    ``sel_dtype`` (mixed-precision screens only) runs the cold-start
+    top-h *selection* on down-cast scores: under x64 the f64 top_k sort
+    is ~60x the f32 one on XLA:CPU, and which features seed the active
+    set is heuristic-grade (any seed set is safe; the certificates that
+    consume c0 itself — seq-ball lam0t, delta0 — keep the working-
+    precision array)."""
+    c0_sel = c0 if sel_dtype is None else c0.astype(sel_dtype)
+    return initial_support_batch(c0_sel, list(hs), k_max, p, dtype)
 
 
 def _delta0s(prep: FleetPrep, lams, config: SaifConfig):
@@ -470,7 +892,15 @@ def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
         jnp.asarray(lam, X.dtype).reshape(-1), (b,))
     lams = [float(v) for v in jax.device_get(lam_arr)]
     use_seq = config.use_seq_ball and W is None
-    backend = resolve_batch_screen(config.screen_backend)
+    backend = resolve_batch_screen(config.screen_backend, b=b, p=p)
+    # parity="fast" dispatch (DESIGN.md §11): the lockstep engine is
+    # least-squares only (its inner burst is the batched Gram sweep) and
+    # a custom screen_fn owns its own scores — both fall back to the
+    # bitwise engine, which is always a valid (slower) implementation of
+    # the same contract.
+    use_fast = (config.parity == "fast"
+                and config.loss == "least_squares"
+                and screen_fn is None)
 
     hs, h = fleet_batch_sizes(prep, lams, config)
     h_tilde = jnp.asarray(
@@ -485,29 +915,49 @@ def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
     # driver, elastic growth pads the buffers but keeps the original
     # (possibly capacity-truncated) initial support, so a re-entered fleet
     # reproduces the serial overflow-recovery trajectories bitwise
-    init_idx, init_beta, init_mask = initial_support_batch(
-        prep.c0, hs, k_max, p, X.dtype)
+    if use_fast:
+        sel_dt = (None if config.screen_dtype == "working"
+                  else jnp.dtype(jnp.float32))
+        init_idx, init_beta, init_mask = _initial_support_batch_jit(
+            prep.c0, hs=tuple(hs), k_max=k_max, p=p, dtype=X.dtype,
+            sel_dtype=sel_dt)
+    else:
+        init_idx, init_beta, init_mask = initial_support_batch(
+            prep.c0, hs, k_max, p, X.dtype)
     while True:
         pad = k_max - init_idx.shape[1]
         if pad > 0:
             init_idx = jnp.pad(init_idx, ((0, 0), (0, pad)))
             init_beta = jnp.pad(init_beta, ((0, 0), (0, pad)))
             init_mask = jnp.pad(init_mask, ((0, 0), (0, pad)))
-        inner = resolve_batch_inner(config, n, k_max, b)
-        carry = cold_inner_carry_batch(b, k_max, X.dtype, backend=inner)
         # the fleet dispatch routes through the fault-injection seam
         # (repro.runtime.inject) — a single None-check when disarmed
-        res = _fault_seam("fleet", lambda: _saif_batch_jit(
-            X, Y, W_arg, prep.col_norm, prep.c0, lam_arr,
-            jnp.full((b,), config.eps, X.dtype), delta0,
-            init_idx, init_beta, init_mask,
-            carry.G, carry.rho, carry.gidx, h_tilde, h_cap,
-            loss_name=config.loss, h=h, k_max=k_max,
-            inner_epochs=config.inner_epochs,
-            polish_factor=config.polish_factor,
-            max_outer=config.max_outer, use_seq_ball=use_seq,
-            screen_backend=backend, inner_backend=inner,
-            has_weights=W is not None, screen_fn=screen_fn))
+        if use_fast:
+            km = k_max
+            res = _fault_seam("fleet", lambda: _saif_batch_fast_jit(
+                X, Y, W_arg, prep.col_norm, prep.c0, lam_arr,
+                jnp.full((b,), config.eps, X.dtype), delta0,
+                init_idx, init_beta, init_mask, h_tilde, h_cap,
+                loss_name=config.loss, h=h, k_max=km,
+                inner_epochs=config.inner_epochs,
+                polish_factor=config.polish_factor,
+                max_outer=config.max_outer, use_seq_ball=use_seq,
+                screen_dtype=config.screen_dtype,
+                has_weights=W is not None))
+        else:
+            inner = resolve_batch_inner(config, n, k_max, b)
+            carry = cold_inner_carry_batch(b, k_max, X.dtype, backend=inner)
+            res = _fault_seam("fleet", lambda: _saif_batch_jit(
+                X, Y, W_arg, prep.col_norm, prep.c0, lam_arr,
+                jnp.full((b,), config.eps, X.dtype), delta0,
+                init_idx, init_beta, init_mask,
+                carry.G, carry.rho, carry.gidx, h_tilde, h_cap,
+                loss_name=config.loss, h=h, k_max=k_max,
+                inner_epochs=config.inner_epochs,
+                polish_factor=config.polish_factor,
+                max_outer=config.max_outer, use_seq_ball=use_seq,
+                screen_backend=backend, inner_backend=inner,
+                has_weights=W is not None, screen_fn=screen_fn))
         # ONE host sync for the whole fleet's overflow flags; elastic
         # growth re-enters cold at doubled capacity (per-problem results
         # are capacity-invariant, so non-overflowing problems reproduce

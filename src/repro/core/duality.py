@@ -234,6 +234,80 @@ def kkt_residual(loss: Loss, X: jax.Array, y: jax.Array, beta: jax.Array,
     return jnp.max(jnp.where(active, active_viol, inactive_viol))
 
 
+# ---------------------------------------------------------------------------
+# certified mixed-precision screening: rigorous rounding-error bounds
+# (ISSUE 7 / DESIGN.md §11). A gap-safe ball whose radius is widened by a
+# bound on the float error of the screening correlations is still safe —
+# low precision can then only screen *conservatively*, never unsafely.
+# ---------------------------------------------------------------------------
+
+def unit_roundoff(dtype) -> float:
+    """u = eps/2 for the dtype: |fl(x op y) - (x op y)| <= u |x op y|."""
+    return float(jnp.finfo(jnp.dtype(dtype)).eps) / 2.0
+
+
+def dot_error_gamma(n: int, u: float) -> float:
+    """Classical gamma_n = n*u / (1 - n*u)  (Higham, ASNA Lemma 3.1).
+
+    A length-``n`` inner product evaluated in precision with unit
+    roundoff ``u`` — in ANY summation order, including pairwise/blocked
+    re-association — satisfies |fl(x.y) - x.y| <= gamma_n * |x|.|y|
+    <= gamma_n * ||x||_2 ||y||_2. (Sequential summation needs only
+    gamma_n; tree orders need gamma_{ceil(log2 n)+1} <= gamma_n, so the
+    bound is order-oblivious — exactly what a re-associating batched
+    contraction requires.) Returns +inf when n*u >= 1 (bound vacuous).
+    """
+    nu = float(n) * u
+    if nu >= 1.0:
+        return float("inf")
+    return nu / (1.0 - nu)
+
+
+def mixed_precision_gamma(n: int, in_dtype, acc_dtype) -> float:
+    """Forward-error factor of a dot with inputs *cast* to ``in_dtype``
+    and accumulated in ``acc_dtype``.
+
+    Casting x_i -> fl_in(x_i) = x_i(1+d_i), |d_i| <= u_in, on both
+    operands multiplies each product by at most (1+u_in)^2; the
+    accumulation then contributes (1 + gamma_n(u_acc)). Composed:
+
+        |fl(x.y) - x.y| <= gamma_total * ||x||_2 ||y||_2,
+        gamma_total = (1+u_in)^2 (1 + gamma_n(u_acc)) - 1.
+
+    This is the bound for an MXU/gemm-style bf16-input f32-accumulator
+    screen pass (and, with in_dtype == acc_dtype, for a plain
+    re-associated working-precision contraction). Monotone increasing
+    in ``n`` and in both unit roundoffs.
+    """
+    u_in = unit_roundoff(in_dtype)
+    u_acc = unit_roundoff(acc_dtype)
+    return (1.0 + u_in) ** 2 * (1.0 + dot_error_gamma(n, u_acc)) - 1.0
+
+
+def widened_radius(r: jax.Array, theta: jax.Array,
+                   gamma: float) -> jax.Array:
+    """Safe-ball radius widened to absorb screening-dot rounding error.
+
+    With unit columns (||x_i|| <= 1) the error of each low-precision
+    correlation fl(x_i . theta) is <= gamma * ||theta||_2 by
+    Cauchy-Schwarz, so the exact screening rule evaluated on the
+    low-precision score is implied by the same rule with radius
+
+        r' = r + gamma * ||theta||_2.
+
+    Column norms > 1 are covered because every screening rule already
+    multiplies the radius by the column norm (ub = score + cn_i * r).
+    The *computed* ||theta||_2 is itself inexact; it is inflated by
+    1 + 2*gamma_{n+2}(u_work) so r' upper-bounds the true widening.
+    ``theta`` is the ball center, shape (..., n); r broadcasts.
+    """
+    n = theta.shape[-1]
+    u_w = unit_roundoff(theta.dtype)
+    slack = 1.0 + 2.0 * dot_error_gamma(n + 2, u_w)
+    norm = jnp.sqrt(jnp.sum(theta * theta, axis=-1))
+    return r + gamma * slack * norm
+
+
 def lambda_max(loss: Loss, X: jax.Array, y: jax.Array) -> jax.Array:
     """Smallest lam with beta* = 0:  max_i |x_i^T f'(0)|   (paper Sec 2.2)."""
     g0 = loss.grad(jnp.zeros_like(y), y)

@@ -64,6 +64,31 @@ class SaifConfig:
     #   None = plain LASSO. The slot is pinned in the active set, never
     #   DELed, its coordinate step is unthresholded, and the dual point is
     #   projected onto its equality constraint.
+    parity: str = "bitwise"      # "bitwise" | "fast" (DESIGN.md §11).
+    #   "bitwise" (default): fleet solves replay the serial float path
+    #   bit-for-bit (DESIGN.md §8 discipline) — unchanged from PR 6.
+    #   "fast" (opt-in): fleet solves may re-associate batch reductions,
+    #   run lockstep CM sweeps and the one-gemm-per-step screen; every
+    #   screening decision is widened by a rigorous rounding-error bound
+    #   and every solve still ends with a working-precision certificate.
+    screen_dtype: str = "working"  # "working" | "float32" | "bfloat16":
+    #   compute dtype of the fast-parity screening gemm (inputs cast down,
+    #   f32 accumulation, radius widened by the certified error bound).
+    #   Anything but "working" requires parity="fast".
+
+    def __post_init__(self):
+        if self.parity not in ("bitwise", "fast"):
+            raise ValueError(
+                f"parity must be 'bitwise' or 'fast', got {self.parity!r}")
+        if self.screen_dtype not in ("working", "float32", "bfloat16"):
+            raise ValueError(
+                "screen_dtype must be 'working', 'float32' or 'bfloat16', "
+                f"got {self.screen_dtype!r}")
+        if self.screen_dtype != "working" and self.parity != "fast":
+            raise ValueError(
+                "screen_dtype != 'working' is a fast-parity feature: "
+                "low-precision screening deviates from the bitwise serial "
+                "float path; set parity='fast' to opt in")
 
 
 class SaifResult(NamedTuple):
@@ -354,6 +379,7 @@ def saif_jit_compile_count() -> int:
         batch_mod = sys.modules.get("repro.core.batch")
         if batch_mod is not None:
             total += int(batch_mod._saif_batch_jit._cache_size())
+            total += int(batch_mod._saif_batch_fast_jit._cache_size())
     except Exception:       # pragma: no cover
         pass
     return total

@@ -165,15 +165,38 @@ BatchScreenFn = Callable[[jax.Array, jax.Array, jax.Array, jax.Array],
                          ScreenOut]
 
 
-def _candidate_out_batch(masked, ub, col_norm, r, h) -> ScreenOut:
+def _candidate_out_batch(masked, ub, col_norm, r, h,
+                         sel_dtype=None) -> ScreenOut:
     """Batched :func:`_candidate_out`: per-problem top-h + bounds + counts.
-    ``col_norm`` is the fleet (B, p) matrix."""
-    cand_score, cand_idx = jax.lax.top_k(masked, h)          # (B, h)
+    ``col_norm`` is the fleet (B, p) matrix.
+
+    For small h the violation counts are ONE (B, p, h) comparison-reduce
+    instead of a vmapped sort+searchsorted — integer-identical (a count
+    of exact float comparisons has no accumulation order), and materially
+    fewer ops inside the fleet while_loop. Large h keeps the sort form
+    (the dense compare would be B*p*h).
+
+    ``sel_dtype`` runs the top-h *selection* sort on down-cast scores
+    (the f64 top_k is ~60x the f32 one on XLA:CPU) while the returned
+    scores/bounds are gathered from the full-precision ``masked`` — used
+    by the mixed-precision escalation tier, where selection order is
+    heuristic-grade but the bounds must stay working precision.
+    """
+    if sel_dtype is None:
+        cand_score, cand_idx = jax.lax.top_k(masked, h)      # (B, h)
+    else:
+        _, cand_idx = jax.lax.top_k(masked.astype(sel_dtype), h)
+        cand_score = jnp.take_along_axis(masked, cand_idx, axis=1)
     cand_idx = cand_idx.astype(jnp.int32)
     cand_lb = jnp.abs(cand_score -
                       jnp.take_along_axis(col_norm, cand_idx, axis=1)
                       * r[:, None])
-    cand_ge = jax.vmap(violation_ge_counts)(ub, cand_lb)
+    if h <= 32:
+        cand_ge = jnp.sum(
+            (ub[:, :, None] >= cand_lb[:, None, :]).astype(jnp.int32),
+            axis=1)
+    else:
+        cand_ge = jax.vmap(violation_ge_counts)(ub, cand_lb)
     return ScreenOut(max_ub=jnp.max(ub, axis=1), cand_score=cand_score,
                      cand_idx=cand_idx, cand_lb=cand_lb, cand_ge=cand_ge)
 
@@ -272,6 +295,106 @@ def make_batch_screen_pallas(X: jax.Array, col_norm: jax.Array, h: int,
     return screen
 
 
+def make_batch_screen_fast(X: jax.Array, col_norm: jax.Array, h: int,
+                           screen_dtype: str = "working") -> BatchScreenFn:
+    """Certified mixed-precision fleet screen (parity="fast", DESIGN.md §11).
+
+    One (B, n) x (n, p) gemm scans the fleet with inputs cast to
+    ``screen_dtype`` ("working" | "float32" | "bfloat16") and an
+    accumulator no narrower than f32. Safety: the safe-ball radius is
+    widened by the rigorous per-dot rounding bound
+    gamma_total * ||theta||_2 (:func:`repro.core.duality.widened_radius`)
+    BEFORE any bound is formed, so the low-precision ub upper-bounds the
+    exact ub and the ADD-stop / not-a-candidate decisions are strictly
+    conservative — a feature this screen rules out is also ruled out by
+    the exact working-precision screen at the same state. The top-h
+    *selection* (scores/lb/violation counts) runs on the low-precision
+    scores unwidened-equivalent: selection order is heuristic-grade (any
+    selected feature is safe to add; Thm 1a), only the bounds are
+    certificate-grade.
+    """
+    from repro.core.duality import (mixed_precision_gamma, unit_roundoff,
+                                    widened_radius)
+
+    n = X.shape[0]
+    X = jnp.asarray(X)
+    work_dt = X.dtype
+    in_dt = work_dt if screen_dtype == "working" else jnp.dtype(screen_dtype)
+    acc_dt = work_dt if screen_dtype == "working" else jnp.promote_types(
+        jnp.float32, in_dt)
+    low_precision = in_dt != work_dt
+    gamma = mixed_precision_gamma(n, in_dt, acc_dt)
+    gamma_work = mixed_precision_gamma(n, work_dt, work_dt)
+    # post-dot scalar guard (DESIGN.md §11): the bound pipeline itself
+    # (|.|, the cn * r product, the final add — and the acc_dt casts of
+    # cn and r) runs in acc_dt, ~5 roundings of nonnegative terms; an
+    # explicit (1 +- 8u_acc) factor on the finished bounds absorbs them,
+    # so EVERY float op between the exact score and the decision is
+    # accounted, not just the dot
+    u_acc = unit_roundoff(acc_dt)
+    one_plus = 1.0 + 8.0 * u_acc
+    one_minus = 1.0 - 8.0 * u_acc
+    Xc = X.astype(in_dt)
+
+    def screen(Theta, r, in_active, do):
+        b = Theta.shape[0]
+        cn_w = fleet_col_norms(col_norm, b)
+        r_wide = widened_radius(r, Theta, gamma)
+        # the whole decision pipeline stays in acc_dt: under x64 working
+        # precision the f64 top_k/sort alone is ~60x an f32 one on
+        # XLA:CPU, and selection order is heuristic-grade anyway — only
+        # the *bounds* carry certificates, and those are widened in
+        # acc_dt with the scalar guard above
+        score = jnp.abs(jnp.einsum(
+            "bn,np->bp", Theta.astype(in_dt), Xc,
+            preferred_element_type=acc_dt))
+        cn = cn_w.astype(acc_dt)
+        masked = jnp.where(in_active, jnp.asarray(-jnp.inf, acc_dt), score)
+        ub = ((masked + cn * r_wide.astype(acc_dt)[:, None]) *
+              jnp.asarray(one_plus, acc_dt))
+        if not low_precision:
+            return _candidate_out_batch(masked, ub, cn, r_wide, h)
+
+        # Two-tier escalation (DESIGN.md §11): a genuinely low-precision
+        # pass can leave the ADD-stop decision *undecidable* — the widened
+        # ub refuses to certify max_ub < 1 while the anti-conservative
+        # bound says the exact screen would have stopped. Refusing forever
+        # stalls the delta ramp (the stop certificate can sit permanently
+        # inside the bf16 noise band), so undecidable problems re-screen
+        # in working precision this step — certified degradation instead
+        # of non-termination; decidable problems keep the cheap pass.
+        widen = (r_wide - r).astype(acc_dt)               # (B,)
+        r_lo = r_wide.astype(acc_dt) - 2.0 * widen
+        ub_lo = ((masked + cn * r_lo[:, None]) *
+                 jnp.asarray(one_minus, acc_dt))
+        undecidable = (do & (jnp.max(ub, axis=1) >= 1.0)
+                       & (jnp.max(ub_lo, axis=1) < 1.0))
+
+        def cheap(_):
+            out = _candidate_out_batch(masked, ub, cn, r_wide, h)
+            return ScreenOut(max_ub=out.max_ub.astype(work_dt),
+                             cand_score=out.cand_score.astype(work_dt),
+                             cand_idx=out.cand_idx,
+                             cand_lb=out.cand_lb.astype(work_dt),
+                             cand_ge=out.cand_ge)
+
+        def escalate(_):
+            score_w = jnp.where(undecidable[:, None],
+                                jnp.abs(Theta @ X),
+                                score.astype(work_dt))
+            r_eff = jnp.where(undecidable,
+                              widened_radius(r, Theta, gamma_work), r_wide)
+            masked_w = jnp.where(in_active, -jnp.inf, score_w)
+            ub_w = jnp.where(undecidable[:, None],
+                             masked_w + cn_w * r_eff[:, None],
+                             ub.astype(work_dt))
+            return _candidate_out_batch(masked_w, ub_w, cn_w, r_eff, h,
+                                        sel_dtype=jnp.float32)
+
+        return jax.lax.cond(jnp.any(undecidable), escalate, cheap, None)
+    return screen
+
+
 def make_batch_screen(name: str, X: jax.Array, col_norm: jax.Array,
                       h: int) -> BatchScreenFn:
     """Factory used inside ``_saif_batch_jit`` (name is jit-static)."""
@@ -282,11 +405,41 @@ def make_batch_screen(name: str, X: jax.Array, col_norm: jax.Array,
     return make_batch_screen_jnp(X, col_norm, h)
 
 
-def resolve_batch_screen(name: str) -> str:
-    """Fleet screen policy: the serial policy plus the opt-in ``matmul``
-    shared-X fast path (DESIGN.md §8)."""
+# Measured on the CI CPU (2 cores, x64, warm jits; numbers in DESIGN.md
+# §8). The deciding mechanism is NOT gemm tiling: the raw one-gemm screen
+# beats the lax.map of serial scans at EVERY fleet size when all problems
+# screen (1.3-1.7x at B*p = 2k..128k). What the gemm lacks is the jnp
+# path's per-problem ``do`` skip — once ADD phases desynchronize, skipped
+# problems cost the jnp screen ~nothing (0.04ms vs the gemm's full 1.7ms
+# at B=16 with do=0) while the matmul always pays the whole fleet. End to
+# end the skip dominates small fleets (B*p=8k: matmul 2.17x vs jnp 2.61x,
+# BENCH_batch.json PR 4) and the gemm amortization dominates larger ones
+# (B*p=32k: matmul 1.18x faster; 64k: parity within noise across shapes).
+# Crossover measured between B*p = 8k and 32k; below it an informed
+# resolve call downgrades matmul to jnp on CPU.
+MATMUL_MIN_BP = 32_768
+
+
+def resolve_batch_screen(name: str, *, b: Optional[int] = None,
+                         p: Optional[int] = None) -> str:
+    """Fleet screen policy (DESIGN.md §8).
+
+    ``matmul`` (the shared-X one-gemm screen, ulp-grade vs serial scans)
+    is honored on accelerators unconditionally (lax.map serializes
+    there), but on CPU only when the fleet's B*p crosses
+    :data:`MATMUL_MIN_BP` — below that the jnp path's per-problem ``do``
+    skip beats the gemm end to end (2.17x vs 2.61x fleet speedup at the
+    B*p=8k CI shape; mechanism measured in the section comment above),
+    so an informed call (``b``/``p`` known) downgrades it to ``jnp``.
+    Name-only calls (legacy/tests that construct a screen directly) keep
+    honoring the explicit opt-in.
+    """
     if name == "matmul":
-        return name
+        if jax.default_backend() != "cpu":
+            return name
+        if b is None or p is None:          # uninformed call: honor opt-in
+            return name
+        return name if b * p >= MATMUL_MIN_BP else "jnp"
     return resolve_backend(name)
 
 

@@ -272,6 +272,11 @@ class Verdict(NamedTuple):
     degraded: bool = False
     retries: int = 0
     kkt_check_ms: float = 0.0
+    # execution-mode provenance (DESIGN.md §11): which parity contract and
+    # screening precision produced the certified value. The KKT check that
+    # backs ``ok`` always runs in working precision, whatever these say.
+    parity: str = "bitwise"
+    screen_dtype: str = "working"
 
 
 class ServingResult(NamedTuple):
@@ -460,11 +465,14 @@ class ServingSession:
         if degraded:
             self._degraded += 1
 
+        cfg = self.session.config
         verdict = Verdict(
             ok=ok, converged=converged, gap=gap, kkt_residual=kkt,
             kkt_tol=tol, events=tuple(dict.fromkeys(events)),
             rungs=tuple(rungs), degraded=degraded, retries=retries,
-            kkt_check_ms=self._kkt_ms - kkt_ms0)
+            kkt_check_ms=self._kkt_ms - kkt_ms0,
+            parity=getattr(cfg, "parity", "bitwise"),
+            screen_dtype=getattr(cfg, "screen_dtype", "working"))
         if ok and ser.ckpt_every and self._requests % ser.ckpt_every == 0:
             self.checkpoint()
         if ser.strict and not ok:

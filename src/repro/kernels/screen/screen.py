@@ -243,15 +243,42 @@ def _screen_fused_kernel(theta_ref, x_ref, norm_ref, act_ref, r_ref,
         topi_ref[0, :] = ti + i * bp                  # global feature ids
 
 
+def _screen_dtypes(X, in_dtype, acc_dtype):
+    """Resolve the (input, accumulator) dtype pair for a screening kernel.
+
+    ``in_dtype`` (e.g. "bfloat16") is the dtype the X / theta tiles are
+    cast to before the MXU dot; ``acc_dtype`` is the accumulator and
+    output dtype (defaults to f32 when the input is low precision — the
+    MXU accumulates bf16 x bf16 into f32 natively via
+    preferred_element_type). The certified rounding bound for the pair is
+    ``duality.mixed_precision_gamma(n, in_dtype, acc_dtype)``; widening
+    the radius by it happens in the CALLER (screen_backend), the kernel
+    just computes in the requested precisions.
+    """
+    dt_in = X.dtype if in_dtype is None else jnp.dtype(in_dtype)
+    if acc_dtype is not None:
+        dt_acc = jnp.dtype(acc_dtype)
+    elif dt_in == X.dtype:
+        dt_acc = X.dtype
+    else:
+        dt_acc = jnp.promote_types(jnp.float32, dt_in)
+    return dt_in, dt_acc
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("h", "bn", "bp", "interpret"))
+                   static_argnames=("h", "bn", "bp", "interpret",
+                                    "in_dtype", "acc_dtype"))
 def screen_fused_pallas(X, theta, col_norm, active, r, *, h: int,
                         bn: int | None = None, bp: int | None = None,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None,
+                        in_dtype: str | None = None,
+                        acc_dtype: str | None = None):
     """Fused ADD-phase scan.
 
     Args:
-      X:        (n, p) design (any float dtype; compute stays in X.dtype).
+      X:        (n, p) design (any float dtype; compute stays in X.dtype
+                unless ``in_dtype``/``acc_dtype`` request a mixed-
+                precision pass — see :func:`_screen_dtypes`).
       theta:    (n,) dual ball center.
       col_norm: (p,) column norms.
       active:   (p,) bool/0-1 mask of features to EXCLUDE (current actives).
@@ -265,19 +292,22 @@ def screen_fused_pallas(X, theta, col_norm, active, r, *, h: int,
       tile_max_ub (p_blocks,)                 — tile-local max ub.
     """
     n, p = X.shape
+    dt_in, dt_acc = _screen_dtypes(X, in_dtype, acc_dtype)
     if bn is None or bp is None:
         abn, abp = autotune_screen_blocks(n, p,
-                                          dtype_bytes=X.dtype.itemsize)
+                                          dtype_bytes=dt_in.itemsize)
         bn = bn or abn
         bp = bp or abp
+    if dt_in.itemsize == 2:
+        bn = _round_up(bn, 16)       # bf16 sublane tile is 16, not 8
     if interpret is None:
         interpret = default_interpret()
     h_tile = max(1, min(h, bp))
-    dt = X.dtype
+    dt = dt_acc
     n_pad = -n % bn
     p_pad = -p % bp
-    Xp = jnp.pad(X, ((0, n_pad), (0, p_pad)))
-    theta_p = jnp.pad(theta.astype(dt), (0, n_pad))
+    Xp = jnp.pad(X.astype(dt_in), ((0, n_pad), (0, p_pad)))
+    theta_p = jnp.pad(theta.astype(dt_in), (0, n_pad))
     norm_p = jnp.pad(col_norm.astype(dt), (0, p_pad))
     # padding columns are flagged "active" => excluded from recruitment
     act_p = jnp.pad(jnp.asarray(active).astype(dt), (0, p_pad),
@@ -359,10 +389,13 @@ def _screen_fused_batch_kernel(theta_ref, x_ref, norm_ref, act_ref, r_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("h", "bn", "bp", "interpret"))
+                   static_argnames=("h", "bn", "bp", "interpret",
+                                    "in_dtype", "acc_dtype"))
 def screen_fused_batch_pallas(X, Theta, col_norm, active, r, *, h: int,
                               bn: int | None = None, bp: int | None = None,
-                              interpret: bool | None = None):
+                              interpret: bool | None = None,
+                              in_dtype: str | None = None,
+                              acc_dtype: str | None = None):
     """Fleet ADD-phase scan: one launch screens all B problems.
 
     Same per-problem math as :func:`screen_fused_pallas`, with a grid axis
@@ -385,23 +418,34 @@ def screen_fused_batch_pallas(X, Theta, col_norm, active, r, *, h: int,
 
     Returns (score, ub, lb) as (B, p) plus tile winners
     (B, p_blocks, h_tile) x2 and tile max-ub (B, p_blocks).
+
+    ``in_dtype``/``acc_dtype`` select a mixed-precision pass (e.g. bf16
+    tiles, f32 accumulation — :func:`_screen_dtypes`): X/Theta tiles are
+    cast to ``in_dtype``, the dot accumulates and every emitted quantity
+    is in ``acc_dtype``. Halving the tile bytes doubles the design rows
+    per VMEM fetch — the fleet's shared-X read amortization improves by
+    the same factor. Callers certify the precision with the widened
+    radius (DESIGN.md §11); this kernel only changes dtypes, not rules.
     """
     n, p = X.shape
     b = Theta.shape[0]
+    dt_in, dt_acc = _screen_dtypes(X, in_dtype, acc_dtype)
     if bn is None or bp is None:
         abn, abp = autotune_screen_blocks(n, p,
-                                          dtype_bytes=X.dtype.itemsize,
+                                          dtype_bytes=dt_in.itemsize,
                                           batch=b)
         bn = bn or abn
         bp = bp or abp
+    if dt_in.itemsize == 2:
+        bn = _round_up(bn, 16)       # bf16 sublane tile is 16, not 8
     if interpret is None:
         interpret = default_interpret()
     h_tile = max(1, min(h, bp))
-    dt = X.dtype
+    dt = dt_acc
     n_pad = -n % bn
     p_pad = -p % bp
-    Xp = jnp.pad(X, ((0, n_pad), (0, p_pad)))
-    theta_p = jnp.pad(Theta.astype(dt), ((0, 0), (0, n_pad)))
+    Xp = jnp.pad(X.astype(dt_in), ((0, n_pad), (0, p_pad)))
+    theta_p = jnp.pad(Theta.astype(dt_in), ((0, 0), (0, n_pad)))
     norm_p = jnp.pad(col_norm.astype(dt), ((0, 0), (0, p_pad)))
     act_p = jnp.pad(jnp.asarray(active).astype(dt), ((0, 0), (0, p_pad)),
                     constant_values=1.0)

@@ -1,0 +1,237 @@
+"""Certified mixed-precision screening properties (ISSUE 7 / DESIGN.md §11).
+
+Three property families, each swept over >= 30 seeds / parameter pairs:
+
+  (a) subset safety — the widened low-precision (bf16/f32) fleet screen
+      never rules out a feature the exact f64 screen keeps: the widened
+      low-precision ub dominates the exact ub elementwise, so both the
+      ADD-stop decision (max_ub < 1) and the per-feature not-a-candidate
+      decision are strictly conservative;
+  (b) end-to-end parity — parity="fast" + bf16 screening reaches the
+      bitwise engine's supports with gap <= eps and a passing
+      working-precision KKT certificate;
+  (c) bound monotonicity — gamma_n(u), the mixed-precision composition
+      and the widened radius are monotone in n and in the unit roundoff
+      u (a coarser precision / longer dot can only widen, never shrink,
+      the certificate).
+
+The module is quarantined into its own pytest process (the same
+pre-existing XLA:CPU ``backend_compile`` segfault that quarantines
+``test_screen_parity.py::test_path_engine_segmented_overflow_recovers``:
+late in a long suite, compiling the screen's escalation ``lax.cond``
+crashes the interpreter; fresh-process runs are deterministic-green).
+``test_precision_cert_runs_quarantined`` re-invokes this file in a child
+pytest with ``REPRO_PRECISION_CERT_INPROC=1`` so the assertions still
+gate CI while the crash domain is the child.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+_INPROC = os.environ.get("REPRO_PRECISION_CERT_INPROC") == "1"
+quarantined = pytest.mark.skipif(
+    not _INPROC, reason="runs in the quarantined child process (see "
+    "test_precision_cert_runs_quarantined)")
+
+
+def test_precision_cert_runs_quarantined():
+    """Parent-side driver: run this module's property tests in a child
+    pytest process and gate on its exit status."""
+    if _INPROC:
+        pytest.skip("already inside the quarantined child")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q",
+         "tests/test_precision_cert.py"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=dict(os.environ, REPRO_PRECISION_CERT_INPROC="1"),
+    )
+    assert proc.returncode == 0, (
+        f"quarantined precision-cert suite failed (rc={proc.returncode})")
+
+from conftest import make_regression
+from repro.core import SaifConfig, get_loss
+from repro.core.batch import fleet_solve
+from repro.core.duality import (dot_error_gamma, kkt_residual, lambda_max,
+                                mixed_precision_gamma, unit_roundoff,
+                                widened_radius)
+from repro.core.screen_backend import make_batch_screen_fast
+
+N_SEEDS = 32
+
+
+def _screen_state(rng, n, p, b):
+    """Random fleet screen inputs: unit-ish columns, dual points, radii."""
+    X = rng.uniform(-1, 1, (n, p))
+    X /= np.linalg.norm(X, axis=0, keepdims=True)
+    cn = np.linalg.norm(X, axis=0)
+    Theta = rng.normal(0, 1.0 / np.sqrt(n), (b, n))
+    # radii spanning decisive (tiny), borderline and sloppy (large) balls
+    scales = np.array([1e-3, 0.3, 1.0])
+    r = rng.uniform(0.0, 1.0, (b,)) * scales[rng.integers(0, 3, b)]
+    in_active = rng.random((b, p)) < 0.05
+    return X, cn, Theta, r, in_active
+
+
+def _exact_ub(X, cn, Theta, r, in_active):
+    """f64 numpy reference: unwidened masked scores and screening ub."""
+    score = np.abs(Theta @ X)
+    masked = np.where(in_active, -np.inf, score)
+    return masked + cn[None, :] * r[:, None]
+
+
+@pytest.mark.parametrize("screen_dtype", ["bfloat16", "float32"])
+@quarantined
+def test_widened_screen_is_subset_safe(screen_dtype):
+    """(a) Elementwise: widened low-precision ub >= exact f64 ub, so the
+    low-precision ruled-out set is a subset of the exact ruled-out set —
+    zero unsafe evictions across the seed sweep (acceptance criterion)."""
+    n, p, b, h = 48, 160, 3, 8
+    u_acc = unit_roundoff(jnp.promote_types(jnp.float32,
+                                            jnp.dtype(screen_dtype)))
+    for seed in range(N_SEEDS):
+        rng = np.random.default_rng(1000 + seed)
+        X, cn, Theta, r, in_active = _screen_state(rng, n, p, b)
+        screen = make_batch_screen_fast(jnp.asarray(X), jnp.asarray(cn),
+                                        p, screen_dtype=screen_dtype)
+        # do=False keeps the cheap (never-escalated) branch: that is the
+        # branch whose bounds the certificate must carry on its own
+        out = screen(jnp.asarray(Theta), jnp.asarray(r),
+                     jnp.asarray(in_active), jnp.zeros((b,), bool))
+        ub_exact = _exact_ub(X, cn, Theta, r, in_active)
+        # reconstruct the per-feature low-precision ub from the h=p
+        # candidate list + the library's own certified widening
+        gamma = mixed_precision_gamma(n, jnp.dtype(screen_dtype),
+                                      jnp.promote_types(jnp.float32,
+                                                        jnp.dtype(screen_dtype)))
+        r_wide = np.asarray(widened_radius(jnp.asarray(r), jnp.asarray(Theta),
+                                           gamma))
+        score_lo = np.full((b, p), -np.inf)
+        np.put_along_axis(score_lo, np.asarray(out.cand_idx),
+                          np.asarray(out.cand_score), axis=1)
+        ub_lo = (score_lo + cn[None, :] * r_wide[:, None]) * (1 + 8 * u_acc)
+        free = ~in_active
+        assert np.all(ub_lo[free] >= ub_exact[free]), (
+            f"seed {seed}: low-precision screen evicted a feature the "
+            f"exact screen keeps (max deficit "
+            f"{np.max(ub_exact[free] - ub_lo[free]):.3e})")
+        # and the public ADD-stop observable dominates too
+        assert np.all(np.asarray(out.max_ub) >= np.max(ub_exact, axis=1)
+                      - 1e-12)
+
+
+@quarantined
+def test_widened_screen_add_stop_safe_under_escalation():
+    """(a') With do=True the two-tier escalation may swap in working
+    precision for undecidable problems; the ADD-stop bound must still
+    dominate the exact one in every branch."""
+    n, p, b = 48, 160, 4
+    for seed in range(N_SEEDS):
+        rng = np.random.default_rng(2000 + seed)
+        X, cn, Theta, r, in_active = _screen_state(rng, n, p, b)
+        # scale Theta so max_ub straddles 1 and the undecidable band is hit
+        ub0 = _exact_ub(X, cn, Theta, r, in_active)
+        Theta = Theta / np.max(ub0, axis=1, keepdims=True)
+        screen = make_batch_screen_fast(jnp.asarray(X), jnp.asarray(cn),
+                                        8, screen_dtype="bfloat16")
+        out = screen(jnp.asarray(Theta), jnp.asarray(r),
+                     jnp.asarray(in_active), jnp.ones((b,), bool))
+        ub_exact = _exact_ub(X, cn, Theta, r, in_active)
+        assert np.all(np.asarray(out.max_ub) >= np.max(ub_exact, axis=1)
+                      - 1e-12)
+
+
+@pytest.mark.parametrize("screen_dtype", ["bfloat16", "float32"])
+@quarantined
+def test_fast_parity_matches_bitwise_supports(screen_dtype):
+    """(b) parity="fast" + low-precision screening: same supports as the
+    bitwise engine, gap <= eps, passing working-precision KKT — across
+    the full seed sweep at one compiled shape."""
+    loss = get_loss("least_squares")
+    B, n, p, eps = 4, 40, 100, 1e-6
+    cfg_fast = SaifConfig(eps=eps, parity="fast", screen_dtype=screen_dtype)
+    cfg_bit = SaifConfig(eps=eps)
+    for seed in range(N_SEEDS):
+        rng = np.random.default_rng(3000 + seed)
+        X = rng.uniform(-10, 10, (n, p))
+        Y = (X @ rng.normal(0, 0.2, (p, B))).T + rng.normal(0, 1.0, (B, n))
+        lam = np.array([0.4 * float(lambda_max(loss, jnp.asarray(X),
+                                               jnp.asarray(Y[i])))
+                        for i in range(B)])
+        fast = fleet_solve(X, Y, lam, cfg_fast)
+        bit = fleet_solve(X, Y, lam, cfg_bit)
+        for i in range(B):
+            sf = set(np.flatnonzero(np.abs(np.asarray(fast.beta[i])) > 0))
+            sb = set(np.flatnonzero(np.abs(np.asarray(bit.beta[i])) > 0))
+            assert sf == sb, f"seed {seed} problem {i}: support mismatch"
+            assert float(fast.gap[i]) <= eps
+            kkt = float(kkt_residual(loss, jnp.asarray(X), jnp.asarray(Y[i]),
+                                     fast.beta[i], float(lam[i])))
+            assert kkt <= 1e-6 * lam[i], (
+                f"seed {seed} problem {i}: kkt {kkt:.3e} vs lam {lam[i]:.3e}")
+
+
+@quarantined
+def test_gamma_monotone_in_n_and_u():
+    """(c) gamma_n(u) = nu/(1-nu) strictly increases in n and in u."""
+    us = [unit_roundoff(dt) for dt in ("float64", "float32", "bfloat16")]
+    ns = [int(v) for v in np.unique(np.geomspace(2, 10_000, 32).astype(int))]
+    assert len(ns) >= 30
+    for u in us:
+        gs = [dot_error_gamma(n, u) for n in ns]
+        # strictly increasing until the bound saturates to +inf (the
+        # vacuous n*u >= 1 region, reachable for bf16 at large n)
+        assert all(b > a > 0 or (a == b == float("inf"))
+                   for a, b in zip(gs, gs[1:]))
+        assert gs == sorted(gs)
+    for n in ns:
+        gs = [dot_error_gamma(n, u) for u in sorted(us)]
+        assert all(b > a or (a == b == float("inf"))
+                   for a, b in zip(gs, gs[1:]))
+
+
+@quarantined
+def test_mixed_precision_gamma_monotone():
+    """(c') the cast+accumulate composition is monotone in n and widens
+    as either the input or accumulator precision coarsens."""
+    ns = [int(v) for v in np.unique(np.geomspace(2, 10_000, 32).astype(int))]
+    for in_dt, acc_dt in [("bfloat16", "float32"), ("float32", "float32"),
+                          ("float64", "float64")]:
+        gs = [mixed_precision_gamma(n, in_dt, acc_dt) for n in ns]
+        # non-decreasing step to step (float evaluation of the composed
+        # bound can plateau at the ulp for near-adjacent n), strictly
+        # increasing across a decade
+        assert all(b >= a > 0 for a, b in zip(gs, gs[1:]))
+        assert all(mixed_precision_gamma(10 * n, in_dt, acc_dt) > g
+                   for n, g in zip(ns, gs))
+    for n in ns:
+        g64 = mixed_precision_gamma(n, "float64", "float64")
+        g32 = mixed_precision_gamma(n, "float32", "float32")
+        g16 = mixed_precision_gamma(n, "bfloat16", "float32")
+        assert g16 > g32 > g64
+
+
+@quarantined
+def test_widened_radius_monotone_and_conservative():
+    """(c'') r' = widened_radius(r, theta, gamma) satisfies r' >= r, is
+    monotone in gamma, and the widening grows with ||theta||."""
+    rng = np.random.default_rng(7)
+    theta = jnp.asarray(rng.normal(0, 1, (3, 50)))
+    r = jnp.asarray([0.0, 0.1, 2.0])
+    gammas = sorted(dot_error_gamma(n, unit_roundoff(dt))
+                    for n in (10, 100, 1000, 10_000)
+                    for dt in ("float64", "float32", "bfloat16"))
+    assert len(gammas) >= 12
+    prev = np.asarray(r)
+    for g in gammas:
+        rw = np.asarray(widened_radius(r, theta, g))
+        assert np.all(rw >= prev)          # monotone in gamma, >= r at g0
+        prev = rw
+    # widening scales with ||theta||
+    rw1 = np.asarray(widened_radius(r, theta, gammas[-1]))
+    rw2 = np.asarray(widened_radius(r, 2.0 * theta, gammas[-1]))
+    assert np.all(rw2 - np.asarray(r) >= 2.0 * (rw1 - np.asarray(r)) - 1e-15)

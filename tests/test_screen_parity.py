@@ -8,6 +8,10 @@ On this CPU container the Pallas kernels run in interpret mode; on a TPU
 backend the identical entry points compile to Mosaic and the ``compiled``
 parametrization activates.
 """
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -245,7 +249,29 @@ def test_path_engine_segmented_overflow_recovers(rng):
     oracle. (The lambda ~ lambda_max boundary on gaussian designs is a
     pre-existing solver-vs-CM-oracle edge unrelated to capacity — the grid
     starts at 0.5 lambda_max to stay out of it.)
+
+    Quarantined into its own pytest process: re-running this body in the
+    same interpreter as the rest of the suite trips a pre-existing XLA
+    ``backend_compile`` segfault (CPU backend state, unrelated to the
+    solver). The parent test re-invokes just this node id in a child
+    pytest with ``REPRO_SEGMENT_OVERFLOW_INPROC=1`` so the assertions
+    still gate CI, while the crash domain is the child process.
     """
+    if os.environ.get("REPRO_SEGMENT_OVERFLOW_INPROC") != "1":
+        env = dict(os.environ, REPRO_SEGMENT_OVERFLOW_INPROC="1")
+        nodeid = (
+            "tests/test_screen_parity.py::"
+            "test_path_engine_segmented_overflow_recovers"
+        )
+        proc = subprocess.run(
+            [sys.executable, "-m", "pytest", "-x", "-q", nodeid],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            env=env,
+        )
+        assert proc.returncode == 0, (
+            f"quarantined segment-overflow test failed (rc={proc.returncode})"
+        )
+        return
     loss = get_loss("least_squares")
     X, y, _ = make_regression(np.random.default_rng(78), n=40, p=200)
     lmax = float(lambda_max(loss, jnp.asarray(X), jnp.asarray(y)))
