@@ -47,6 +47,12 @@ _EXPORTS = {
     "NumericalError": "repro.core.serving",
     "BackendFault": "repro.core.serving",
     "DeadlineExceeded": "repro.core.serving",
+    # async serving front-end (DESIGN.md §12; import-light as well)
+    "open_server": "repro.core.server",
+    "Server": "repro.core.server",
+    "ServerConfig": "repro.core.server",
+    "ServerStats": "repro.core.server",
+    "ServingFuture": "repro.core.server",
     "FaultInjector": "repro.runtime.inject",
 }
 

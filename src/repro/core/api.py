@@ -147,10 +147,18 @@ class Problem:
 class Scalar:
     """One solve at ``lam``. ``warm=True`` seeds from the session's
     device-resident warm state (slot layout + inner carry of the previous
-    serial solve); the default is a cold, bitwise-reproducible solve."""
+    serial solve); the default is a cold, bitwise-reproducible solve.
+
+    ``deadline_s``/``priority`` are the serving knobs shared by the sync
+    ``ServingSession.solve()`` and the async ``Server.submit()``: a
+    request past its deadline fails with ``DeadlineExceeded`` instead of
+    occupying a solver, and higher-priority requests dequeue first.
+    """
     lam: float
     warm: bool = False
     sharded: bool = False
+    deadline_s: Optional[float] = None
+    priority: int = 0
 
     def __post_init__(self):
         from repro.core.serving import validate_request
@@ -165,6 +173,8 @@ class Path:
     lams: Any
     warm: bool = False
     sharded: bool = False
+    deadline_s: Optional[float] = None
+    priority: int = 0
 
     def __post_init__(self):
         from repro.core.serving import validate_request
@@ -182,6 +192,8 @@ class Fleet:
     weights: Any = None
     sharded: bool = False
     screen_fn: Any = None
+    deadline_s: Optional[float] = None
+    priority: int = 0
 
     def __post_init__(self):
         from repro.core.serving import validate_request
@@ -199,6 +211,8 @@ class CV:
     keep_fold_betas: bool = False
     refit: bool = True
     sharded: bool = False
+    deadline_s: Optional[float] = None
+    priority: int = 0
 
     def __post_init__(self):
         from repro.core.serving import validate_request
@@ -212,6 +226,32 @@ class GroupPathResult(NamedTuple):
     betas: List[Any]
     results: List[Any]                    # GroupSaifResult per lambda
     n_compilations: Optional[int] = None  # _gsaif_jit compiles added
+
+
+# ---------------------------------------------------------------------------
+# the shared session-kwargs spec (ONE signature for the whole entry-point
+# family: open_session / open_serving / open_server all accept exactly
+# these passthrough knobs — no drifting copies)
+# ---------------------------------------------------------------------------
+
+SESSION_KWARG_DEFAULTS = {
+    "mesh": None,          # device mesh enabling sharded=True requests
+    "segment_len": 16,     # path-engine overflow-sync segment length
+    "make_screen": None,   # custom ScreenFn factory (h -> ScreenFn)
+    "pad_to": None,        # (n_bucket, p_bucket) compile-bucket padding
+}
+
+
+def session_kwargs(**kw) -> dict:
+    """Validate and normalize the shared session passthrough kwargs."""
+    unknown = sorted(set(kw) - set(SESSION_KWARG_DEFAULTS))
+    if unknown:
+        raise TypeError(
+            f"unknown session kwargs {unknown}; the shared spec accepts "
+            f"{sorted(SESSION_KWARG_DEFAULTS)}")
+    out = dict(SESSION_KWARG_DEFAULTS)
+    out.update(kw)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -290,13 +330,15 @@ class Session:
     for default (cold) requests they are bitwise the legacy results.
     """
 
-    def __init__(self, problem: Problem, config=None, *, mesh=None,
-                 segment_len: int = 16, make_screen=None):
+    def __init__(self, problem: Problem, config=None, **kwargs):
+        kw = session_kwargs(**kwargs)
         self.problem = problem
         self.penalty = _coerce_penalty(problem.penalty)
-        self.mesh = mesh
-        self._segment_len = segment_len
-        self._make_screen = make_screen
+        self.mesh = kw["mesh"]
+        self._segment_len = kw["segment_len"]
+        self._make_screen = kw["make_screen"]
+        self._pad_to = kw["pad_to"]
+        self._p_real = None             # real width when pad_to is set
         self._screen_memo = {}          # h -> ScreenFn (make_screen hook)
         self._sharded = None            # ShardedDesign, built lazily
         self._sharded_screen_memo = {}  # h -> sharded ScreenFn
@@ -312,6 +354,40 @@ class Session:
 
         if problem.X is None:
             raise ValueError("Problem.X is required")
+
+        if self._pad_to is not None:
+            # compile-bucket padding (DESIGN.md §12): the session holds a
+            # bucket-shaped preparation whose stats were computed on the
+            # real problem; results are sliced back to the real width.
+            nb, pb = (int(self._pad_to[0]), int(self._pad_to[1]))
+            n0, p0 = np.shape(problem.X)
+            if nb < n0 or pb < p0:
+                raise ValueError(
+                    f"pad_to={self._pad_to} must dominate the problem "
+                    f"shape ({n0}, {p0}) — buckets only pad, never crop")
+            if problem.loss == "logistic" and nb > n0:
+                raise NotImplementedError(
+                    "row padding a logistic problem shifts the primal by "
+                    "log(2) per pad row (the zero-row trick is exact for "
+                    "least squares only); bucket logistic requests on "
+                    "exact n (p-only padding), DESIGN.md §12")
+            if problem.weights is not None:
+                raise NotImplementedError(
+                    "pad_to with sample weights: weighted problems ride "
+                    "the fleet engine with per-problem column norms; "
+                    "serve them from an unpadded session")
+            if self._make_screen is not None:
+                raise NotImplementedError(
+                    "pad_to with a custom make_screen: the built-in "
+                    "screens mask pad columns via the traced pad mask; a "
+                    "custom backend would need its own masking")
+            if not isinstance(_coerce_penalty(problem.penalty),
+                              LassoPenalty):
+                raise NotImplementedError(
+                    "pad_to serves plain-LASSO problems (the fused "
+                    "transform and group layout are shape-coupled)")
+            self._pad_to = (nb, pb)
+            self._p_real = p0
 
         if isinstance(self.penalty, GroupPenalty):
             from repro.core.group import GroupSaifConfig, prepare_group
@@ -366,13 +442,16 @@ class Session:
             self._design = None
             self.config = cfg
             self._y = problem.y
-            if problem.weights is not None and make_screen is not None:
+            if problem.weights is not None and self._make_screen is not None:
                 raise NotImplementedError(
                     "make_screen with a weighted problem: the fleet "
                     "engine serving weighted problems takes per-request "
                     "Fleet(..., screen_fn=...) hooks instead")
             if problem.y is not None and problem.weights is None:
                 self._prep = prepare_path(problem.X, problem.y, cfg)
+                if self._pad_to is not None:
+                    from repro.core.saif import pad_path_state
+                    self._prep = pad_path_state(self._prep, *self._pad_to)
             else:
                 self._prep = None
         try:
@@ -511,6 +590,8 @@ class Session:
         if isinstance(self.penalty, FusedPenalty):
             from repro.core.fused import recover_from_transformed
             return recover_from_transformed(res.beta, self._design), res
+        if self._p_real is not None and not req.sharded:
+            res = res._replace(beta=res.beta[:self._p_real])
         return res
 
     def _weighted_scalar(self, lam: float):
@@ -563,6 +644,12 @@ class Session:
                 warm0=self._warm if req.warm else None,
                 k_max0=self._warm_k if req.warm else None)
             self._warm, self._warm_k = warm, k
+            if self._p_real is not None:
+                from repro.core.path import SaifPathResult
+                pr = SaifPathResult(
+                    lams=pr.lams,
+                    betas=[b[:self._p_real] for b in pr.betas],
+                    results=pr.results, n_compilations=pr.n_compilations)
         if isinstance(self.penalty, FusedPenalty):
             from repro.core.fused import (FusedPathResult,
                                           recover_from_transformed)
@@ -612,6 +699,15 @@ class Session:
                 design=self._sharded_fleet_design(req.Y),
                 screen_cache=self._sharded_fleet_screens)
         from repro.core.batch import fleet_solve
+        if self._pad_to is not None:
+            import jax
+            from repro.core.batch import pad_fleet_prep, prepare_fleet
+            fprep = prepare_fleet(self.problem.X, req.Y, self.config,
+                                  weights=req.weights)
+            fprep = pad_fleet_prep(fprep, *self._pad_to)
+            res = fleet_solve(None, None, req.lams, self.config,
+                              screen_fn=req.screen_fn, prep=fprep)
+            return res._replace(beta=res.beta[:, :self._p_real])
         return fleet_solve(self.problem.X, req.Y, req.lams, self.config,
                            weights=req.weights, screen_fn=req.screen_fn)
 
@@ -705,8 +801,7 @@ class Session:
                                     prep=self._sharded_path_prep(design))
 
 
-def open_session(problem: Problem, config=None, *, mesh=None,
-                 segment_len: int = 16, make_screen=None) -> Session:
+def open_session(problem: Problem, config=None, **kwargs) -> Session:
     """Open a persistent solving session for ``problem``.
 
     Preparation (c0 / column norms / Theorem-6 transform / group norms)
@@ -715,8 +810,13 @@ def open_session(problem: Problem, config=None, *, mesh=None,
     session's device-resident warm buffers. ``config`` is a
     :class:`~repro.core.saif.SaifConfig` (or
     :class:`~repro.core.group.GroupSaifConfig` for group penalties;
-    defaults per penalty); ``mesh`` enables ``sharded=True`` requests;
-    ``make_screen``/``segment_len`` are the path-engine hooks.
+    defaults per penalty).
+
+    Keyword arguments are the shared session spec
+    (:data:`SESSION_KWARG_DEFAULTS` — identical for ``open_session``,
+    ``open_serving`` and ``open_server``): ``mesh`` enables
+    ``sharded=True`` requests; ``make_screen``/``segment_len`` are the
+    path-engine hooks; ``pad_to=(n_bucket, p_bucket)`` serves every
+    request from a compile-bucket-padded preparation (DESIGN.md §12).
     """
-    return Session(problem, config, mesh=mesh, segment_len=segment_len,
-                   make_screen=make_screen)
+    return Session(problem, config, **kwargs)

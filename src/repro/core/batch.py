@@ -102,7 +102,8 @@ def _freeze_select(live: jax.Array, old, new):
                                    "has_weights", "screen_fn"))
 def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
                     init_beta, init_mask, init_G, init_rho, init_gidx,
-                    h_tilde, h_cap, *, loss_name: str, h: int, k_max: int,
+                    h_tilde, h_cap, pad_mask=None,
+                    *, loss_name: str, h: int, k_max: int,
                     inner_epochs: int, polish_factor: int, max_outer: int,
                     use_seq_ball: bool, screen_backend: str = "jnp",
                     inner_backend: str = "jnp", has_weights: bool = False,
@@ -130,6 +131,11 @@ def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
 
     aset0 = aset_lib.init_active_set_batch(p, k_max, init_idx, X.dtype,
                                            init_beta, live_mask=init_mask)
+    if pad_mask is not None:
+        # bucket-pad columns are born "already active" in every problem
+        # (traced, shared across the compile bucket) — never recruited,
+        # never scored; see the serial engine's identical guard
+        aset0 = aset0._replace(in_active=aset0.in_active | pad_mask[None, :])
     carry_in = InnerCarry(G=init_G, rho=init_rho, gidx=init_gidx)
     inner0 = inner.init(aset0, carry_in,
                         aset_lib.gather_columns_batch(X, aset0))
@@ -502,7 +508,8 @@ def _gram_sweep_fast(G, rho, beta, mask, lam, n_ep, smoothness=1.0):
                                    "max_outer", "use_seq_ball",
                                    "screen_dtype", "has_weights"))
 def _saif_batch_fast_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
-                         init_beta, init_mask, h_tilde, h_cap, *,
+                         init_beta, init_mask, h_tilde, h_cap,
+                         pad_mask=None, *,
                          loss_name: str, h: int, k_max: int,
                          inner_epochs: int, polish_factor: int,
                          max_outer: int, use_seq_ball: bool,
@@ -533,6 +540,8 @@ def _saif_batch_fast_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
 
     aset0 = aset_lib.init_active_set_batch(p, k_max, init_idx, X.dtype,
                                            init_beta, live_mask=init_mask)
+    if pad_mask is not None:
+        aset0 = aset0._replace(in_active=aset0.in_active | pad_mask[None, :])
     carry0, _ = _gram_rebuild_fast(X, Y, weights, aset0)
     trace0 = jnp.full((b, max_outer), -1.0, X.dtype)
     state0 = _BatchState(
@@ -705,6 +714,11 @@ class FleetPrep(NamedTuple):
     col_norm: jax.Array     # (B, p) per-problem column norms
     c0_max: list            # B host floats (= per-problem lambda_max)
     c0_median: list
+    # bucket-padded fleets (DESIGN.md §12): X/Y carry trailing zero
+    # rows/columns up to a compile-bucket shape while every policy
+    # quantity is computed on the real dims. 0 means "use X.shape".
+    n_true: int = 0
+    p_true: int = 0
 
 
 @partial(jax.jit, static_argnames=("loss_name", "has_w"))
@@ -776,10 +790,36 @@ def prepare_fleet(X, Y, config: SaifConfig, weights=None) -> FleetPrep:
                      c0_median=[float(v) for v in c0_med])
 
 
+def pad_fleet_prep(prep: FleetPrep, n_bucket: int,
+                   p_bucket: int) -> FleetPrep:
+    """Zero-pad a real fleet preparation up to a compile-bucket shape —
+    the fleet edition of :func:`repro.core.saif.pad_path_state`
+    (DESIGN.md §12): the per-problem stats stay those of the real
+    problems (c0 pads at -inf, col-norm pads at 1.0, zero pad rows with
+    zero weights), and ``n_true``/``p_true`` feed every policy formula.
+    """
+    n, p = prep.X.shape
+    if n_bucket < n or p_bucket < p:
+        raise ValueError(
+            f"bucket ({n_bucket}, {p_bucket}) must dominate the fleet "
+            f"design shape ({n}, {p})")
+    if (n_bucket, p_bucket) == (n, p):
+        return prep
+    dn, dp = n_bucket - n, p_bucket - p
+    return prep._replace(
+        X=jnp.pad(prep.X, ((0, dn), (0, dp))),
+        Y=jnp.pad(prep.Y, ((0, 0), (0, dn))),
+        W=None if prep.W is None else jnp.pad(prep.W, ((0, 0), (0, dn))),
+        c0=jnp.pad(prep.c0, ((0, 0), (0, dp)), constant_values=-jnp.inf),
+        col_norm=jnp.pad(prep.col_norm, ((0, 0), (0, dp)),
+                         constant_values=1.0),
+        n_true=n, p_true=p)
+
+
 def fleet_batch_sizes(prep: FleetPrep, lams, config: SaifConfig):
     """Per-problem h values + the fleet-static maximum (pow2-bucketed by
     ``add_batch_size_static`` already)."""
-    p = prep.X.shape[1]
+    p = prep.p_true or prep.X.shape[1]
     hs = [add_batch_size_static(config.c, float(lam), mx, md, p)
           for lam, mx, md in zip(lams, prep.c0_max, prep.c0_median)]
     return hs, (max(hs) if hs else 1)
@@ -861,7 +901,8 @@ def resolve_batch_inner(config: SaifConfig, n: int, k_max: int,
 
 def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
                 weights=None,
-                screen_fn: Optional[BatchScreenFn] = None) -> SaifResult:
+                screen_fn: Optional[BatchScreenFn] = None,
+                prep: Optional[FleetPrep] = None) -> SaifResult:
     """Solve a fleet of B LASSO problems over a shared design in lockstep.
 
     Args:
@@ -873,6 +914,11 @@ def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
                Thm-2 sequential ball exactly like the fused subsystem).
       screen_fn: custom batched screening backend (e.g. the sharded
                collective from ``repro.distributed.saif_sharded``).
+      prep:    optional prebuilt :class:`FleetPrep` — the serving layer
+               passes a bucket-padded preparation whose c0/col_norm were
+               computed on the real design and zero/-inf-padded, with
+               ``n_true``/``p_true`` recording the real dims (DESIGN.md
+               §12). ``X``/``Y``/``weights`` are ignored when given.
 
     Returns a :class:`~repro.core.saif.SaifResult` whose every field has a
     leading problem axis. The whole fleet runs in ONE ``_saif_batch_jit``
@@ -884,15 +930,19 @@ def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
         raise NotImplementedError(
             "saif_batch solves plain-LASSO fleets; the fused unpenalized "
             "slot is serial-only for now (DESIGN.md §8)")
-    prep = prepare_fleet(X, Y, config, weights=weights)
+    if prep is None:
+        prep = prepare_fleet(X, Y, config, weights=weights)
     X, Y, W = prep.X, prep.Y, prep.W
     n, p = X.shape
+    n_eff = prep.n_true or n
+    p_eff = prep.p_true or p
+    pad_mask = (jnp.arange(p) >= p_eff) if p_eff < p else None
     b = Y.shape[0]
     lam_arr = jnp.broadcast_to(
         jnp.asarray(lam, X.dtype).reshape(-1), (b,))
     lams = [float(v) for v in jax.device_get(lam_arr)]
     use_seq = config.use_seq_ball and W is None
-    backend = resolve_batch_screen(config.screen_backend, b=b, p=p)
+    backend = resolve_batch_screen(config.screen_backend, b=b, p=p_eff)
     # parity="fast" dispatch (DESIGN.md §11): the lockstep engine is
     # least-squares only (its inner burst is the batched Gram sweep) and
     # a custom screen_fn owns its own scores — both fall back to the
@@ -907,7 +957,7 @@ def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
         [max(int(math.ceil(config.zeta * h_b)), 1) for h_b in hs],
         jnp.int32)
     h_cap = jnp.asarray(hs, jnp.int32)
-    k_max = config.k_max or default_capacity(h, p)
+    k_max = config.k_max or default_capacity(h, p_eff)
     delta0 = jnp.asarray(_delta0s(prep, lams, config), X.dtype)
     W_arg = W if W is not None else jnp.zeros((1, 1), X.dtype)
 
@@ -919,11 +969,11 @@ def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
         sel_dt = (None if config.screen_dtype == "working"
                   else jnp.dtype(jnp.float32))
         init_idx, init_beta, init_mask = _initial_support_batch_jit(
-            prep.c0, hs=tuple(hs), k_max=k_max, p=p, dtype=X.dtype,
+            prep.c0, hs=tuple(hs), k_max=k_max, p=p_eff, dtype=X.dtype,
             sel_dtype=sel_dt)
     else:
         init_idx, init_beta, init_mask = initial_support_batch(
-            prep.c0, hs, k_max, p, X.dtype)
+            prep.c0, hs, k_max, p_eff, X.dtype)
     while True:
         pad = k_max - init_idx.shape[1]
         if pad > 0:
@@ -938,6 +988,7 @@ def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
                 X, Y, W_arg, prep.col_norm, prep.c0, lam_arr,
                 jnp.full((b,), config.eps, X.dtype), delta0,
                 init_idx, init_beta, init_mask, h_tilde, h_cap,
+                pad_mask,
                 loss_name=config.loss, h=h, k_max=km,
                 inner_epochs=config.inner_epochs,
                 polish_factor=config.polish_factor,
@@ -945,13 +996,14 @@ def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
                 screen_dtype=config.screen_dtype,
                 has_weights=W is not None))
         else:
-            inner = resolve_batch_inner(config, n, k_max, b)
+            inner = resolve_batch_inner(config, n_eff, k_max, b)
             carry = cold_inner_carry_batch(b, k_max, X.dtype, backend=inner)
             res = _fault_seam("fleet", lambda: _saif_batch_jit(
                 X, Y, W_arg, prep.col_norm, prep.c0, lam_arr,
                 jnp.full((b,), config.eps, X.dtype), delta0,
                 init_idx, init_beta, init_mask,
                 carry.G, carry.rho, carry.gidx, h_tilde, h_cap,
+                pad_mask,
                 loss_name=config.loss, h=h, k_max=k_max,
                 inner_epochs=config.inner_epochs,
                 polish_factor=config.polish_factor,
@@ -962,9 +1014,9 @@ def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
         # growth re-enters cold at doubled capacity (per-problem results
         # are capacity-invariant, so non-overflowing problems reproduce
         # their previous answers bitwise)
-        if not bool(jnp.any(res.overflowed)) or k_max >= p:
+        if not bool(jnp.any(res.overflowed)) or k_max >= p_eff:
             return res
-        k_max = min(2 * k_max, p)
+        k_max = min(2 * k_max, p_eff)
 
 
 def saif_batch(X, Y, lam, config: SaifConfig = SaifConfig(),

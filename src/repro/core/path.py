@@ -99,10 +99,11 @@ def cold_start(prep: PathState, h0: int, k: int,
     the grid-max h) — a cold path entry must match a standalone solve at
     its first lambda exactly."""
     n, p = prep.X.shape
-    idx, beta, n_init = initial_support(prep.c0, h0, k, p,
+    idx, beta, n_init = initial_support(prep.c0, h0, k, prep.p_true or p,
                                         config.unpen_idx, prep.b0,
                                         prep.X.dtype)
-    inner = resolve_inner_backend(config.inner_backend, config.loss, n, k)
+    inner = resolve_inner_backend(config.inner_backend, config.loss,
+                                  prep.n_true or n, k)
     return (idx, beta, jnp.arange(k) < n_init,
             cold_inner_carry(k, prep.X.dtype, backend=inner))
 
@@ -156,6 +157,11 @@ def run_path(prep: PathState, lams: Sequence[float],
     """
     X = prep.X
     n, p = X.shape
+    # bucket-padded preparations: policy quantities on real dims, and the
+    # traced pad mask rides every engine dispatch (DESIGN.md §12)
+    n_true = prep.n_true or n
+    p_true = prep.p_true or p
+    pad_mask = (jnp.arange(p) >= p_true) if p_true < p else None
     unpen = config.unpen_idx
     unpen_static = -1 if unpen is None else unpen
     use_seq = config.use_seq_ball and unpen is None   # DESIGN.md §7
@@ -169,10 +175,10 @@ def run_path(prep: PathState, lams: Sequence[float],
     # scalar — the active set remains exactly as lean as per-lambda
     # compilation would keep it, at one compile for the whole grid.
     hs = [add_batch_size_static(config.c, lam, prep.c0_max, prep.c0_median,
-                                p)
+                                p_true)
           for lam in lams_np]
     h = max(hs) if hs else 1
-    k_max = config.k_max or default_capacity(h, p)
+    k_max = config.k_max or default_capacity(h, p_true)
     if k_max0 is not None:
         k_max = max(k_max, k_max0)
     if warm0 is not None:
@@ -181,7 +187,8 @@ def run_path(prep: PathState, lams: Sequence[float],
     screen_fn = make_screen(h) if make_screen is not None else None
 
     def inner_name(k: int) -> str:
-        return resolve_inner_backend(config.inner_backend, config.loss, n, k)
+        return resolve_inner_backend(config.inner_backend, config.loss,
+                                     n_true, k)
 
     def run_lam(lam: float, h_lam: int, warm: WarmState) -> SaifResult:
         delta0 = config.delta0 if config.delta0 is not None else \
@@ -197,6 +204,7 @@ def run_path(prep: PathState, lams: Sequence[float],
             jnp.asarray(max(int(np.ceil(config.zeta * h_lam)), 1),
                         jnp.int32),
             jnp.asarray(h_lam, jnp.int32),
+            pad_mask,
             loss_name=config.loss, h=h, k_max=k_max,
             inner_epochs=config.inner_epochs,
             polish_factor=config.polish_factor,
@@ -222,9 +230,9 @@ def run_path(prep: PathState, lams: Sequence[float],
                                   unpen_idx=unpen_static)
             # ONE host sync per segment: the batched overflow check
             flags = jnp.stack([r.overflowed for r in seg_results])
-            if not bool(jnp.any(flags)) or k_max >= p:
+            if not bool(jnp.any(flags)) or k_max >= p_true:
                 break
-            k_max = min(2 * k_max, p)   # elastic growth, segment re-entry
+            k_max = min(2 * k_max, p_true)  # elastic growth, segment re-entry
             entry = grow_warm(entry, k_max, inner_name(k_max))
         results[seg] = seg_results
         warm = cur

@@ -186,6 +186,7 @@ ScanFn = Callable[[jax.Array], jax.Array]
                                    "unpen_idx", "screen_fn", "scan_fn"))
 def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
               init_mask, init_G, init_rho, init_gidx, h_tilde, h_cap,
+              pad_mask=None,
               *, loss_name: str, h: int, k_max: int,
               inner_epochs: int, polish_factor: int, max_outer: int,
               use_seq_ball: bool, screen_backend: str = "jnp",
@@ -220,6 +221,14 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
 
     aset0 = aset_lib.init_active_set(p, k_max, init_idx, X.dtype, init_beta,
                                      live_mask=init_mask)
+    if pad_mask is not None:
+        # Bucket-pad columns (traced, so every problem in a compile bucket
+        # shares this cache entry) are born "already active" without ever
+        # holding a slot: the screens mask active columns to -inf, DEL
+        # only touches live slots, and ADD draws from screen candidates —
+        # so a pad can never be recruited, deleted, or scored, and the
+        # real columns' trajectory is exactly the unpadded one.
+        aset0 = aset0._replace(in_active=aset0.in_active | pad_mask)
     carry_in = InnerCarry(G=init_G, rho=init_rho, gidx=init_gidx)
     inner0 = inner.init(aset0, carry_in,
                         aset_lib.gather_columns(X, aset0))
@@ -402,6 +411,12 @@ class PathState(NamedTuple):
     c0_max: float         # host copies of the c0 statistics the h formula
     c0_median: float      # needs — synced exactly once per preparation
     b0: float = 0.0       # unpenalized-slot null fit (fused problems; §7)
+    # Bucket-padded preparations (DESIGN.md §12): X/y carry trailing zero
+    # rows/columns up to a compile-bucket shape, while every *policy*
+    # quantity (h, capacity, backend crossovers, initial support) must be
+    # computed on the real problem. 0 means "unpadded: use X.shape".
+    n_true: int = 0
+    p_true: int = 0
 
 
 def prepare_path(X, y, config: SaifConfig) -> PathState:
@@ -425,6 +440,38 @@ def prepare_path(X, y, config: SaifConfig) -> PathState:
                      c0_median=float(c0_median), b0=float(b0))
 
 
+def pad_path_state(prep: PathState, n_bucket: int,
+                   p_bucket: int) -> PathState:
+    """Zero-pad a real preparation up to a compile-bucket shape
+    (DESIGN.md §12).
+
+    The stats stay those of the REAL problem: c0 pads sit at -inf (they
+    can never win a top-k or a max), col-norm pads at 1.0 (never read —
+    pads are masked out of every screen — but a finite value keeps any
+    speculative lane arithmetic NaN-free), and ``n_true``/``p_true``
+    record the real dims for every policy formula. Zero pad rows are
+    mathematically inert for least squares (each contributes exactly 0
+    to the primal, the gradient and the column norms); column padding is
+    additionally *bitwise*-inert because no engine reduction ever runs
+    over the feature axis (screens score per column with the
+    padding-stable ``theta @ X`` orientation, selection is top-k/max).
+    """
+    n, p = prep.X.shape
+    if n_bucket < n or p_bucket < p:
+        raise ValueError(
+            f"bucket ({n_bucket}, {p_bucket}) must dominate the problem "
+            f"shape ({n}, {p})")
+    if (n_bucket, p_bucket) == (n, p):
+        return prep
+    return prep._replace(
+        X=jnp.pad(prep.X, ((0, n_bucket - n), (0, p_bucket - p))),
+        y=jnp.pad(prep.y, (0, n_bucket - n)),
+        c0=jnp.pad(prep.c0, (0, p_bucket - p), constant_values=-jnp.inf),
+        col_norm=jnp.pad(prep.col_norm, (0, p_bucket - p),
+                         constant_values=1.0),
+        n_true=n, p_true=p)
+
+
 def solve_scalar(prep: PathState, lam: float,
                  config: SaifConfig = SaifConfig(),
                  scan_fn: Optional[ScanFn] = None,
@@ -443,6 +490,12 @@ def solve_scalar(prep: PathState, lam: float,
     """
     X, y, c0, col_norm = prep.X, prep.y, prep.c0, prep.col_norm
     n, p = X.shape
+    # Bucket-padded preparations (DESIGN.md §12): the arrays carry the
+    # bucket shape; every policy decision below runs on the real dims so
+    # padding can never change h, capacity, or a backend crossover.
+    n_true = prep.n_true or n
+    p_true = prep.p_true or p
+    pad_mask = (jnp.arange(p) >= p_true) if p_true < p else None
     unpen = config.unpen_idx
     lam_max = prep.lam_max
     b0 = prep.b0
@@ -451,9 +504,10 @@ def solve_scalar(prep: PathState, lam: float,
     # §7), so the gap ball alone drives screening there.
     use_seq = config.use_seq_ball and unpen is None
 
-    h = add_batch_size_static(config.c, lam, prep.c0_max, prep.c0_median, p)
+    h = add_batch_size_static(config.c, lam, prep.c0_max, prep.c0_median,
+                              p_true)
     h_tilde = max(int(math.ceil(config.zeta * h)), 1)
-    k_max = config.k_max or default_capacity(h, p)
+    k_max = config.k_max or default_capacity(h, p_true)
     delta0 = config.delta0 if config.delta0 is not None else \
         min(max(lam / lam_max, 1e-3), 1.0)
     backend = resolve_backend(config.screen_backend)
@@ -462,10 +516,10 @@ def solve_scalar(prep: PathState, lam: float,
     # or a warm start from a neighbouring lambda (Sec 5.3 path mode).
     # Always padded to (k_max,) so warm-started paths share one compilation.
     if warm_idx is not None:
-        k_max = max(k_max, default_capacity(h, p))
+        k_max = max(k_max, default_capacity(h, p_true))
         if unpen is None:
             # plain LASSO: stay on device, no host round-trip
-            n_init = min(int(warm_idx.shape[0]), k_max, p)
+            n_init = min(int(warm_idx.shape[0]), k_max, p_true)
             init_idx = jnp.zeros((k_max,), jnp.int32).at[:n_init].set(
                 jnp.asarray(warm_idx)[:n_init].astype(jnp.int32))
             init_beta = jnp.zeros((k_max,), X.dtype)
@@ -483,14 +537,14 @@ def solve_scalar(prep: PathState, lam: float,
                 # capacity-full warm support can never truncate it away
                 warm_ids.insert(0, unpen)
                 warm_vals.insert(0, float(b0))
-            n_init = min(len(warm_ids), k_max, p)
+            n_init = min(len(warm_ids), k_max, p_true)
             init_idx = jnp.zeros((k_max,), jnp.int32).at[:n_init].set(
                 jnp.asarray(warm_ids[:n_init], jnp.int32))
             init_beta = jnp.zeros((k_max,), X.dtype).at[:n_init].set(
                 jnp.asarray(warm_vals[:n_init], X.dtype))
     else:
         init_idx, init_beta, n_init = initial_support(
-            c0, h, k_max, p, unpen, b0, X.dtype)
+            c0, h, k_max, p_true, unpen, b0, X.dtype)
 
     while True:
         init_idx = init_idx[:k_max]
@@ -501,7 +555,7 @@ def solve_scalar(prep: PathState, lam: float,
             init_beta = jnp.pad(init_beta, (0, pad))
         # capacity growth can move the auto crossover (DESIGN.md §6)
         inner = resolve_inner_backend(config.inner_backend, config.loss,
-                                      n, k_max)
+                                      n_true, k_max)
         carry = cold_inner_carry(k_max, X.dtype, backend=inner)
         # the engine dispatch routes through the fault-injection seam
         # (repro.runtime.inject) — a single None-check when disarmed
@@ -513,6 +567,7 @@ def solve_scalar(prep: PathState, lam: float,
             carry.G, carry.rho, carry.gidx,
             jnp.asarray(h_tilde, jnp.int32),
             jnp.asarray(h, jnp.int32),
+            pad_mask,
             loss_name=config.loss, h=h,
             k_max=k_max, inner_epochs=config.inner_epochs,
             polish_factor=config.polish_factor,
@@ -521,9 +576,9 @@ def solve_scalar(prep: PathState, lam: float,
             screen_backend=backend, inner_backend=inner,
             unpen_idx=-1 if unpen is None else unpen,
             screen_fn=screen_fn, scan_fn=scan_fn))
-        if not bool(res.overflowed) or k_max >= p:
+        if not bool(res.overflowed) or k_max >= p_true:
             return res
-        k_max = min(2 * k_max, p)   # elastic capacity growth + recompile
+        k_max = min(2 * k_max, p_true)  # elastic capacity growth + recompile
 
 
 def saif(X, y, lam: float, config: SaifConfig = SaifConfig(),

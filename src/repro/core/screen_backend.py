@@ -95,9 +95,18 @@ def _candidate_out(scores_masked, ub, col_norm, r, h) -> ScreenOut:
 
 
 def make_screen_jnp(X: jax.Array, col_norm: jax.Array, h: int) -> ScreenFn:
-    """Reference backend: one XLA matvec + cheap reductions."""
+    """Reference backend: one XLA matvec + cheap reductions.
+
+    The scan is written ``theta @ X`` (not ``X.T @ theta``): with the
+    row-vector orientation XLA:CPU computes each column's dot product with
+    a bracketing that does not depend on how many columns sit to its
+    right, so appending zero columns (the serving layer's p-bucket
+    padding, DESIGN.md §12) leaves every real column's score bitwise
+    unchanged. The transposed orientation re-tiles with the output width
+    and is measurably not padding-stable.
+    """
     def screen(theta, r, in_active):
-        score = jnp.abs(X.T @ theta)
+        score = jnp.abs(theta @ X)
         masked = jnp.where(in_active, -jnp.inf, score)
         ub = masked + col_norm * r
         return _candidate_out(masked, ub, col_norm, r, h)

@@ -51,6 +51,7 @@ import hashlib
 import math
 import random
 import time
+import warnings
 from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import numpy as np
@@ -235,6 +236,22 @@ def validate_request(req) -> None:
         if lams.size == 0:
             raise RequestError("CV.lams must be a non-empty grid")
         _require_lam(lams, "CV.lams")
+    # Serving knobs shared by every request kind (PR 8): the sync
+    # ServingSession.solve() and the async Server.submit() accept the
+    # same request values, so both are validated here.
+    deadline = getattr(req, "deadline_s", None)
+    if deadline is not None:
+        d = float(deadline)
+        if not math.isfinite(d) or d <= 0.0:
+            raise RequestError(
+                f"{kind}.deadline_s must be a finite positive number of "
+                f"seconds (or None), got {deadline!r}")
+    priority = getattr(req, "priority", 0)
+    if not isinstance(priority, (int, np.integer)) or isinstance(
+            priority, bool):
+        raise RequestError(
+            f"{kind}.priority must be an int (higher dequeues first), "
+            f"got {priority!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -277,6 +294,15 @@ class Verdict(NamedTuple):
     # backs ``ok`` always runs in working precision, whatever these say.
     parity: str = "bitwise"
     screen_dtype: str = "working"
+    # Per-unit breakdown (one entry per lambda / fleet member), so a
+    # coalescing front-end can attribute a failed certificate to the one
+    # poisoned member of a microbatch instead of degrading every rider
+    # (DESIGN.md §12). ``unit_ok[i]`` is unit i's final certification;
+    # ``unit_degraded[i]`` marks units that failed the FIRST
+    # certification pass and owe their final state to the degradation
+    # ladder. None when no certification units were produced.
+    unit_ok: Optional[Tuple[bool, ...]] = None
+    unit_degraded: Optional[Tuple[bool, ...]] = None
 
 
 class ServingResult(NamedTuple):
@@ -335,12 +361,48 @@ def _kkt_fn(loss_name: str):
     return jax.jit(residual)
 
 
+@functools.lru_cache(maxsize=None)
+def _kkt_fleet_fn(loss_name: str):
+    """Vmapped fleet certificate: one dispatch for all B members
+    (shared X, per-member y/beta/lam) instead of B scalar dispatches —
+    the per-unit jit round-trips would dominate wide coalesced
+    batches."""
+    import jax
+    from repro.core.duality import kkt_residual
+    from repro.core.losses import get_loss
+    loss = get_loss(loss_name)
+
+    def residual(X, y, beta, lam, pen):
+        return kkt_residual(loss, X, y, beta, lam, pen=pen,
+                            sample_w=None)
+
+    return jax.jit(jax.vmap(residual,
+                            in_axes=(None, 0, 0, 0, None)))
+
+
 def _wmax(a: float, b: float) -> float:
     """NaN-propagating max: a non-finite entry must dominate the
     verdict's worst-case fields, never be masked by a healthy one."""
     if math.isnan(a) or math.isnan(b):
         return float("nan")
     return max(a, b)
+
+
+_deadline_kwarg_warned = False
+
+
+def _warn_deadline_kwarg_once() -> None:
+    """One-shot DeprecationWarning for ``solve(deadline_s=...)`` — the
+    knob moved onto the request objects (``Scalar(..., deadline_s=)``)
+    so sync and async submission accept identical request values."""
+    global _deadline_kwarg_warned
+    if not _deadline_kwarg_warned:
+        _deadline_kwarg_warned = True
+        warnings.warn(
+            "ServingSession.solve(deadline_s=...) is deprecated; set "
+            "deadline_s on the request object (e.g. Scalar(lam, "
+            "deadline_s=...)) so the same request works with "
+            "Server.submit()", DeprecationWarning, stacklevel=3)
 
 
 # ---------------------------------------------------------------------------
@@ -352,13 +414,14 @@ class ServingSession:
     runtime: every ``solve`` admits, retries, certifies, degrades and
     (optionally) checkpoints. Construct via :func:`open_serving`."""
 
-    def __init__(self, problem, config=None, *, serving=None, mesh=None,
-                 segment_len: int = 16, make_screen=None, guard=None):
-        from repro.core.api import open_session
+    def __init__(self, problem, config=None, *, serving=None, guard=None,
+                 **kwargs):
+        from repro.core.api import open_session, session_kwargs
         self.serving = serving if serving is not None else ServingConfig()
         self.problem = problem
-        self._opts = dict(mesh=mesh, segment_len=segment_len,
-                          make_screen=make_screen)
+        # one shared passthrough spec (api.SESSION_KWARG_DEFAULTS) so
+        # open_session / open_serving / open_server never drift
+        self._opts = session_kwargs(**kwargs)
         self.session = open_session(problem, config, **self._opts)
         self.guard = guard
         self._rng = random.Random(self.serving.seed)
@@ -407,7 +470,11 @@ class ServingSession:
         only other way out."""
         ser = self.serving
         t0 = time.monotonic()
-        deadline = ser.deadline_s if deadline_s is None else deadline_s
+        if deadline_s is not None:
+            _warn_deadline_kwarg_once()
+        deadline = getattr(request, "deadline_s", None)
+        if deadline is None:
+            deadline = ser.deadline_s if deadline_s is None else deadline_s
         self._requests += 1
         events: List[str] = []
         self._drain_preemption(events)
@@ -426,11 +493,14 @@ class ServingSession:
         kkt_ms0 = self._kkt_ms
         ok, converged, gap, kkt, tol, ev = self._verify(request, value)
         events += ev
+        first_unit = tuple(self._last_unit_ok)
+        final_unit = first_unit
         rungs: List[Rung] = []
         degraded = False
         if not ok:
             self._scrub_warm(request, events)
             best_value, best_score = value, _score(kkt, gap)
+            best_unit = first_unit
             for name in ser.ladder:
                 self._check_deadline(t0, deadline, f"ladder rung {name!r}")
                 try:
@@ -454,13 +524,16 @@ class ServingSession:
                 rungs.append(Rung(name, ok2, gap2, kkt2))
                 if _score(kkt2, gap2) < best_score:
                     best_value, best_score = value2, _score(kkt2, gap2)
+                    best_unit = tuple(self._last_unit_ok)
                 if ok2:
                     ok, converged, gap, kkt = True, conv2, gap2, kkt2
                     value = value2
+                    final_unit = tuple(self._last_unit_ok)
                     events += [f"degraded:{name}"] + ev2
                     break
             else:
                 value = best_value
+                final_unit = best_unit
                 events.append("ladder_exhausted")
         if degraded:
             self._degraded += 1
@@ -472,7 +545,10 @@ class ServingSession:
             rungs=tuple(rungs), degraded=degraded, retries=retries,
             kkt_check_ms=self._kkt_ms - kkt_ms0,
             parity=getattr(cfg, "parity", "bitwise"),
-            screen_dtype=getattr(cfg, "screen_dtype", "working"))
+            screen_dtype=getattr(cfg, "screen_dtype", "working"),
+            unit_ok=final_unit or None,
+            unit_degraded=(tuple(not u for u in first_unit)
+                           if first_unit else None))
         if ok and ser.ckpt_every and self._requests % ser.ckpt_every == 0:
             self.checkpoint()
         if ser.strict and not ok:
@@ -617,7 +693,7 @@ class ServingSession:
         unit_ok: List[bool] = []
         t_k0 = time.perf_counter()
         for u in units:
-            finite = bool(jnp.all(jnp.isfinite(u["beta"])))
+            finite = bool(np.all(np.isfinite(np.asarray(u["beta"]))))
             g = float(u["gap"])
             finite = finite and math.isfinite(g)
             u_ok = finite
@@ -643,9 +719,13 @@ class ServingSession:
                 tol = max(ser.kkt_rtol * lam, ser.kkt_atol)
                 tol_w = max(tol_w, tol)
                 X = u["X"]
-                r = float(_kkt_fn(sess.config.loss)(
-                    X, u["y"], u["beta"],
-                    jnp.asarray(lam, X.dtype), u["pen"], u["sample_w"]))
+                if u.get("kkt_r") is not None:   # batched fleet cert
+                    r = u["kkt_r"]
+                else:
+                    r = float(_kkt_fn(sess.config.loss)(
+                        X, u["y"], u["beta"],
+                        jnp.asarray(lam, X.dtype), u["pen"],
+                        u["sample_w"]))
                 kkt_w = _wmax(kkt_w, r)
                 if not (r <= tol):           # NaN residual fails too
                     u_ok = False
@@ -721,12 +801,27 @@ class ServingSession:
             if request.weights is not None:
                 W = jnp.asarray(request.weights, X.dtype)
                 W = W[None, :] if W.ndim == 1 else W
-            return [dict(beta=value.beta[b], gap=value.gap[b],
-                         lam=float(lams[b]), kkt=True, X=X, y=Y[b],
+            # one host transfer per batched field, then free numpy
+            # slicing — per-unit device reads would cost a dispatch +
+            # sync each and dominate wide coalesced batches
+            beta = np.asarray(value.beta)
+            gap = np.asarray(value.gap)
+            ovf = np.asarray(value.overflowed)
+            nout = np.asarray(value.n_outer)
+            kkt_r = None
+            if self.serving.check_kkt and W is None:
+                kkt_r = np.asarray(_kkt_fleet_fn(sess.config.loss)(
+                    X, Y, value.beta,
+                    jnp.asarray(lams, X.dtype), pen))
+            Y_np = np.asarray(Y)    # host y slices for the fallback path
+            return [dict(beta=beta[b], gap=gap[b],
+                         lam=float(lams[b]), kkt=True, X=X, y=Y_np[b],
                          pen=pen,
                          sample_w=None if W is None else W[b],
-                         overflowed=bool(value.overflowed[b]),
-                         n_outer=int(value.n_outer[b]))
+                         kkt_r=None if kkt_r is None
+                         else float(kkt_r[b]),
+                         overflowed=bool(ovf[b]),
+                         n_outer=int(nout[b]))
                     for b in range(B)]
 
         if isinstance(request, api.CV):
@@ -1087,13 +1182,16 @@ def _result_like(like, beta, gap):
         active_idx=nz, active_mask=nz >= 0)
 
 
-def open_serving(problem, config=None, *, serving=None, mesh=None,
-                 segment_len: int = 16, make_screen=None, guard=None,
-                 install_sigterm: bool = False) -> ServingSession:
+def open_serving(problem, config=None, *, serving=None, guard=None,
+                 install_sigterm: bool = False,
+                 **session_kwargs) -> ServingSession:
     """Open a fault-tolerant serving session (DESIGN.md §10).
 
-    Same signature as :func:`repro.core.api.open_session` plus
-    ``serving`` (a :class:`ServingConfig`) and preemption wiring:
+    Same signature as :func:`repro.core.api.open_session` — the
+    passthrough ``session_kwargs`` are the one shared spec
+    ``repro.core.api.SESSION_KWARG_DEFAULTS`` (``mesh``,
+    ``segment_len``, ``make_screen``, ``pad_to``) — plus ``serving``
+    (a :class:`ServingConfig`) and preemption wiring:
     ``install_sigterm=True`` installs a
     :class:`~repro.runtime.fault.PreemptionGuard` whose SIGTERM flag
     makes the next ``solve`` checkpoint the warm state; passing an
@@ -1104,6 +1202,5 @@ def open_serving(problem, config=None, *, serving=None, mesh=None,
     if guard is None and install_sigterm:
         from repro.runtime.fault import PreemptionGuard
         guard = PreemptionGuard(install=True)
-    return ServingSession(problem, config, serving=serving, mesh=mesh,
-                          segment_len=segment_len,
-                          make_screen=make_screen, guard=guard)
+    return ServingSession(problem, config, serving=serving, guard=guard,
+                          **session_kwargs)

@@ -1,86 +1,78 @@
-"""Batched serving driver (deliverable b): prefill + decode loop.
+"""CLI shim over the async serving front-end (DESIGN.md §12).
+
+A thin argparse layer that builds a :class:`repro.core.server.
+ServerConfig`, opens the server and drives it with a small seeded
+synthetic request mix — the smoke-test entry point for the queue →
+shape-bucket → microbatch → fleet pipeline. The real load generator
+with Poisson arrivals and latency percentiles lives in
+``benchmarks/bench_serve.py``.
 
 Example:
-  PYTHONPATH=src python -m repro.launch.serve --arch whisper_tiny --smoke \
-      --batch 4 --prompt-len 16 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --requests 32 \
+      --max-batch 8 --max-wait-ms 5 --cache-dir /tmp/saif-cache
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config, smoke_config
-from repro.launch.mesh import make_host_mesh
-from repro.launch.shardings import param_shardings
-from repro.models import (decode_step, fill_cross_cache, init,
-                          init_decode_state)
-from repro.models import lm
+import numpy as np
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--model-parallel", type=int, default=1)
-    ap.add_argument("--temperature", type=float, default=1.0)
+    ap = argparse.ArgumentParser(
+        description="SAIF async serving smoke driver")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--problems", type=int, default=3,
+                    help="distinct problem shapes in the mix")
+    ap.add_argument("--n", type=int, default=128)
+    ap.add_argument("--p", type=int, default=96)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--max-sessions", type=int, default=8)
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent compilation cache directory")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if jax.default_backend() == "cpu":
-        cfg = cfg.scaled(dtype="float32")
-    mesh = make_host_mesh(model=args.model_parallel)
+    from repro import Problem, Scalar, open_server
+    from repro.core.saif import SaifConfig
 
-    with mesh:
-        params = init(jax.random.PRNGKey(0), cfg)
-        shapes_tree = lm.param_shapes(cfg)
-        params = jax.tree.map(jax.device_put, params,
-                              param_shardings(shapes_tree, cfg, mesh))
-        B = args.batch
-        total = args.prompt_len + args.gen
-        key = jax.random.PRNGKey(1)
-        prompt = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)
+    server = open_server(
+        max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+        max_sessions=args.max_sessions, cache_dir=args.cache_dir,
+        solver=SaifConfig())
 
-        state = init_decode_state(params, cfg, B, total)
-        extras = {}
-        if cfg.family == "vlm":
-            extras["img_embed"] = 0.02 * jax.random.normal(
-                key, (B, cfg.n_image_tokens, cfg.d_model))
-        if cfg.family == "encdec":
-            extras["frames"] = 0.02 * jax.random.normal(
-                key, (B, cfg.n_frames, cfg.d_model))
-        state = fill_cross_cache(params, cfg, state, **extras)
+    rng = np.random.default_rng(args.seed)
+    problems = []
+    for k in range(args.problems):
+        n = args.n - 8 * k
+        p = args.p - 8 * k
+        X = rng.normal(size=(n, p))
+        y = rng.normal(size=n)
+        problems.append(Problem(X=X, y=y))
 
-        step = jax.jit(lambda p, t, s: decode_step(p, t, s, cfg),
-                       donate_argnums=(2,))
+    t0 = time.monotonic()
+    futs = []
+    for _ in range(args.requests):
+        prob = problems[int(rng.integers(len(problems)))]
+        lam = float(rng.uniform(0.03, 0.12))
+        futs.append(server.submit(prob, Scalar(lam)))
+    results = [f.result(timeout=600) for f in futs]
+    dt = time.monotonic() - t0
+    server.drain()
+    stats = server.stats()
+    server.close()
 
-        # prefill by teacher-forcing the prompt through the decode path
-        # (a production server would use the chunked prefill kernel; the
-        # decode path is the correctness reference)
-        t0 = time.time()
-        logits = None
-        for t in range(args.prompt_len):
-            logits, state = step(params, prompt[:, t], state)
-        out_tokens = []
-        for t in range(args.gen):
-            key, sub = jax.random.split(key)
-            nxt = jax.random.categorical(sub, logits / args.temperature,
-                                         axis=-1).astype(jnp.int32)
-            out_tokens.append(nxt)
-            logits, state = step(params, nxt, state)
-        jax.block_until_ready(logits)
-        dt = time.time() - t0
-        toks = B * (args.prompt_len + args.gen)
-        print(f"{cfg.name}: {toks} tokens in {dt:.2f}s "
-              f"({toks/dt:.1f} tok/s batched decode)")
-        sample = jnp.stack(out_tokens, axis=1)[0, :16]
-        print("sample token ids:", sample.tolist())
-        return 0
+    ok = sum(1 for r in results if r.verdict.ok)
+    print(f"served {stats.served}/{stats.submitted} requests in "
+          f"{dt:.2f}s ({stats.served / dt:.1f} req/s); "
+          f"{ok} certified ok")
+    print(f"coalesced {stats.coalesced_requests} requests into "
+          f"{stats.coalesced_batches} microbatches; "
+          f"{stats.sessions_opened} sessions opened "
+          f"({stats.evictions} evicted)")
+    return 0 if ok == len(results) else 1
 
 
 if __name__ == "__main__":

@@ -54,19 +54,26 @@ def seam(tag: str, fn):
     return inj.run(tag, fn)
 
 
-def _poke_nan(out):
+def _poke_nan(out, unit: Optional[int] = None):
     """Corrupt a solver result the way an in-kernel NaN surfaces: NaN in
     the coefficients and the gap. Works on any result NamedTuple with
     ``beta``/``gap`` fields (serial SaifResult and fleet results alike);
-    anything else is returned untouched."""
+    anything else is returned untouched. With ``unit`` set and a batched
+    result (leading problem axis), only that one fleet member is
+    poisoned — the blast radius a per-unit verdict must contain."""
     if not (hasattr(out, "_replace") and hasattr(out, "beta")
             and hasattr(out, "gap")):
         return out
     import jax.numpy as jnp
     beta = jnp.asarray(out.beta)
+    gap = jnp.asarray(out.gap)
     nan = jnp.asarray(jnp.nan, beta.dtype)
+    if unit is not None and beta.ndim >= 2 and gap.ndim >= 1:
+        return out._replace(
+            beta=beta.at[unit, ..., 0].set(nan),
+            gap=gap.at[unit].set(jnp.asarray(jnp.nan, gap.dtype)))
     return out._replace(beta=beta.at[..., 0].set(nan),
-                        gap=jnp.full_like(jnp.asarray(out.gap), jnp.nan))
+                        gap=jnp.full_like(gap, jnp.nan))
 
 
 class FaultInjector:
@@ -86,6 +93,7 @@ class FaultInjector:
     def __init__(self, *, fail_at: Iterable[int] = (),
                  nan_at: Iterable[int] = (),
                  delay_at: Iterable[int] = (), delay_s: float = 0.0,
+                 nan_unit: Optional[int] = None,
                  tags: Optional[Iterable[str]] = None,
                  exc: type = RuntimeError,
                  message: str = "injected transient backend fault"):
@@ -93,6 +101,7 @@ class FaultInjector:
         self.nan_at = {int(i) for i in nan_at}
         self.delay_at = {int(i) for i in delay_at}
         self.delay_s = float(delay_s)
+        self.nan_unit = None if nan_unit is None else int(nan_unit)
         self.tags = None if tags is None else set(tags)
         self.exc = exc
         self.message = message
@@ -127,7 +136,7 @@ class FaultInjector:
         out = fn()
         if k in self.nan_at:
             self.log.append((k, tag, "nan"))
-            out = _poke_nan(out)
+            out = _poke_nan(out, unit=self.nan_unit)
         return out
 
     # -- arming ---------------------------------------------------------

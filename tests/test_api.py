@@ -385,11 +385,18 @@ def test_lazy_public_surface_subprocess():
     code = (
         "import sys\n"
         "from repro import Problem, Scalar, Path, Fleet, CV, open_session\n"
+        "from repro import open_server, ServerConfig, ServingFuture\n"
+        "light = {'repro.core.api', 'repro.core.server', "
+        "'repro.core.serving'}\n"
         "heavy = [m for m in sys.modules if m.startswith('repro.core.') "
-        "and m != 'repro.core.api']\n"
+        "and m not in light]\n"
         "assert not heavy, f'heavy imports: {heavy}'\n"
         "assert 'jax' not in sys.modules, 'jax imported eagerly'\n"
         "p = Problem(X=None)\n"
+        "cfg = ServerConfig(max_batch=4)\n"
+        "fut = ServingFuture()\n"
+        "assert not fut.done()\n"
+        "assert 'jax' not in sys.modules, 'jax imported eagerly'\n"
         "print('ok')\n"
     )
     import os

@@ -1,0 +1,288 @@
+"""Async serving front-end tests (DESIGN.md §12).
+
+What must hold:
+
+  * bucket padding is *bitwise* neutral in p (the serving tier every
+    request rides) across the jnp/gram screen x inner sample, and
+    support-exact + KKT-certified in n (the opt-in row tier);
+  * coalesced microbatches return each rider the bits of its own
+    direct, unpadded, serial Session solve;
+  * LRU eviction/readmission costs session re-prep but ZERO new engine
+    compilations (the jit caches are process-wide);
+  * one poisoned rider in a coalesced batch degrades only its own
+    future (per-unit verdicts);
+  * the deadline/priority request knobs validate, and the deprecated
+    ``solve(deadline_s=)`` alias warns exactly once.
+"""
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.api import (Problem, Scalar, open_session,
+                            unified_compile_count)
+from repro.core.saif import SaifConfig
+from repro.core.server import ServerConfig, ServingFuture, open_server
+from repro.core.serving import (DeadlineExceeded, RequestError,
+                                ServingConfig, open_serving)
+from repro.runtime.inject import FaultInjector
+
+from conftest import make_regression
+
+
+def _problem(rng, n=60, p=37):
+    X, y, _ = make_regression(rng, n=n, p=p, uniform=False)
+    return Problem(X=X, y=y)
+
+
+# ---------------------------------------------------------------------------
+# bucket-padding parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("inner", ["jnp", "gram"])
+@pytest.mark.parametrize("screen", ["jnp"])
+def test_p_bucket_padding_bitwise(rng, screen, inner):
+    """A p-padded session returns bit-identical coefficients, gap and
+    support to the direct unpadded solve — the serving bitwise tier."""
+    prob = _problem(rng)
+    cfg = SaifConfig(screen_backend=screen, inner_backend=inner)
+    direct = open_session(prob, cfg)
+    padded = open_session(prob, cfg, pad_to=(60, 64))
+    for lam in (0.1, 0.05, 0.03):
+        d = direct.solve(Scalar(lam))
+        p_ = padded.solve(Scalar(lam))
+        assert p_.beta.shape == d.beta.shape
+        assert np.array_equal(np.asarray(p_.beta), np.asarray(d.beta))
+        assert float(p_.gap) == float(d.gap)
+        assert np.array_equal(np.asarray(p_.active_mask),
+                              np.asarray(d.active_mask))
+
+
+def test_n_bucket_padding_support_parity(rng):
+    """Row padding (zero-weight rows) is exact in real arithmetic; in
+    floats the contract is support equality + tight coefficients + a
+    passing KKT certificate, not bitwise."""
+    prob = _problem(rng)
+    cfg = SaifConfig()
+    direct = open_session(prob, cfg)
+    padded = open_serving(prob, cfg, pad_to=(64, 64))
+    for lam in (0.1, 0.04):
+        d = direct.solve(Scalar(lam))
+        res = padded.solve(Scalar(lam))
+        assert res.verdict.ok
+        dsup = np.abs(np.asarray(d.beta)) > 0
+        psup = np.abs(np.asarray(res.value.beta)) > 0
+        assert np.array_equal(dsup, psup)
+        np.testing.assert_allclose(np.asarray(res.value.beta),
+                                   np.asarray(d.beta),
+                                   rtol=1e-10, atol=1e-12)
+
+
+def test_pad_to_rejects_logistic_row_padding(rng):
+    """Logistic pad rows shift the primal by log(2) each — row padding
+    must be refused, column padding allowed."""
+    X, y, _ = make_regression(rng, n=40, p=24, uniform=False)
+    prob = Problem(X=X, y=np.sign(y) + (np.sign(y) == 0), loss="logistic")
+    with pytest.raises(NotImplementedError, match="row padding"):
+        open_session(prob, SaifConfig(loss="logistic"), pad_to=(48, 32))
+    sess = open_session(prob, SaifConfig(loss="logistic"), pad_to=(40, 32))
+    res = sess.solve(Scalar(0.05))
+    direct = open_session(prob, SaifConfig(loss="logistic")).solve(
+        Scalar(0.05))
+    assert np.array_equal(np.asarray(res.beta), np.asarray(direct.beta))
+
+
+# ---------------------------------------------------------------------------
+# the server: coalescing, parity through the full async path
+# ---------------------------------------------------------------------------
+
+def test_server_coalesces_and_matches_direct_bitwise(rng):
+    prob = _problem(rng)
+    cfg = SaifConfig()
+    lams = [0.09, 0.06, 0.045, 0.03]
+    with open_server(max_batch=8, max_wait_ms=100.0, solver=cfg) as srv:
+        futs = [srv.submit(prob, Scalar(lam)) for lam in lams]
+        results = [f.result(timeout=300) for f in futs]
+        stats = srv.stats()
+    assert stats.served == len(lams)
+    assert stats.coalesced_batches >= 1
+    assert stats.coalesced_requests == len(lams)
+    direct = open_session(prob, cfg)
+    for lam, r in zip(lams, results):
+        assert r.verdict.ok
+        d = direct.solve(Scalar(lam))
+        assert np.array_equal(np.asarray(r.value.beta),
+                              np.asarray(d.beta))
+        assert float(r.value.gap) == float(d.gap)
+
+
+def test_server_coalesces_cross_user_same_design(rng):
+    """Different users (distinct Problem objects, own y, own lam) over
+    ONE shared design coalesce into a single fleet microbatch, and each
+    rider gets the bits of its own direct solve."""
+    X, y0, _ = make_regression(rng, n=60, p=37, uniform=False)
+    cfg = SaifConfig()
+    users = []
+    for lam in (0.09, 0.06, 0.045, 0.03):
+        yu = y0 + rng.normal(0, 0.3, size=y0.shape)
+        users.append((Problem(X=X, y=yu), lam))
+    with open_server(max_batch=8, max_wait_ms=100.0, solver=cfg) as srv:
+        futs = [srv.submit(pb, Scalar(lam)) for pb, lam in users]
+        results = [f.result(timeout=300) for f in futs]
+        stats = srv.stats()
+    # one design digest -> one queue -> all four coalesce
+    assert stats.coalesced_requests == len(users)
+    assert stats.sessions_opened == 1
+    for (pb, lam), r in zip(users, results):
+        assert r.verdict.ok
+        d = open_session(pb, cfg).solve(Scalar(lam))
+        assert np.array_equal(np.asarray(r.value.beta),
+                              np.asarray(d.beta))
+        assert float(r.value.gap) == float(d.gap)
+
+
+def test_server_priority_orders_dispatch(rng):
+    """With the dispatcher started late, the high-priority request must
+    be served first even though it was submitted last."""
+    prob = _problem(rng, n=40, p=24)
+    order = []
+    srv = open_server(autostart=False, max_wait_ms=0.0,
+                      solver=SaifConfig())
+    # distinct problems -> distinct queues -> dispatch order observable
+    prob2 = _problem(rng, n=40, p=24)
+    f1 = srv.submit(prob, Scalar(0.05, priority=0))
+    f2 = srv.submit(prob2, Scalar(0.05, priority=5))
+    srv.run(timeout=0.1)        # starts the dispatcher, returns
+    for f in (f1, f2):
+        f.result(timeout=300)
+    # monotonic resolution order: the priority-5 future resolved first
+    assert f2.done() and f1.done()
+    srv.close()
+
+
+def test_future_timeout_and_validation(rng):
+    prob = _problem(rng, n=40, p=24)
+    with pytest.raises(RequestError, match="deadline_s"):
+        Scalar(0.1, deadline_s=-3.0)
+    with pytest.raises(RequestError, match="priority"):
+        Scalar(0.1, priority="high")
+    fut = ServingFuture()
+    with pytest.raises(DeadlineExceeded):
+        fut.result(timeout=0.01)
+    srv = open_server(autostart=False, solver=SaifConfig())
+    f = srv.submit(prob, Scalar(0.05, deadline_s=0.02))
+    time.sleep(0.05)            # expire in the queue, dispatcher off
+    srv.run(timeout=0.2)
+    exc = f.exception(timeout=60)
+    assert isinstance(exc, DeadlineExceeded)
+    assert srv.stats().deadline_misses == 1
+    srv.close()
+
+
+def test_deprecated_solve_deadline_kwarg_warns_once(rng):
+    import repro.core.serving as serving_mod
+    prob = _problem(rng, n=40, p=24)
+    sess = open_serving(prob, SaifConfig())
+    serving_mod._deadline_kwarg_warned = False
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        sess.solve(Scalar(0.05), deadline_s=60.0)
+        sess.solve(Scalar(0.05), deadline_s=60.0)
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "request" in str(dep[0].message)
+
+
+# ---------------------------------------------------------------------------
+# LRU: eviction/readmission never recompiles an engine
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_readmission_compile_deltas(rng):
+    cfg = SaifConfig()
+    probs = [_problem(rng), _problem(rng)]     # same shape, two digests
+    with open_server(max_sessions=1, max_wait_ms=0.0,
+                     solver=cfg) as srv:
+        # warm both buckets once (compiles happen here)
+        for pb in probs:
+            srv.submit(pb, Scalar(0.05)).result(timeout=300)
+        warm = unified_compile_count()
+        opened0 = srv.stats().sessions_opened
+        # ping-pong: every hit is an LRU miss -> session reopen + evict
+        for pb in (probs[0], probs[1], probs[0]):
+            r = srv.submit(pb, Scalar(0.05)).result(timeout=300)
+            assert r.verdict.ok
+        stats = srv.stats()
+    assert unified_compile_count() == warm, \
+        "eviction/readmission must not recompile (process-wide caches)"
+    assert stats.sessions_opened == opened0 + 3
+    assert stats.evictions >= 3
+
+
+# ---------------------------------------------------------------------------
+# chaos: one poisoned rider degrades only its own future
+# ---------------------------------------------------------------------------
+
+def test_chaos_poisoned_rider_is_contained(rng):
+    prob = _problem(rng)
+    cfg = SaifConfig()
+    lams = [0.09, 0.06, 0.045, 0.03]
+    poisoned = 2
+    # ladder disabled: the poisoned unit must FAIL its verdict (and only
+    # it), proving per-unit attribution rather than ladder repair
+    srv = open_server(max_batch=8, max_wait_ms=500.0, solver=cfg,
+                      serving=ServingConfig(ladder=(), max_retries=0),
+                      autostart=False)
+    futs = [srv.submit(prob, Scalar(lam)) for lam in lams]
+    with FaultInjector(nan_at={1}, nan_unit=poisoned, tags={"fleet"}):
+        srv.run(timeout=0.05)
+        results = [f.result(timeout=300) for f in futs]
+    srv.close()
+    direct = open_session(prob, cfg)
+    for i, (lam, r) in enumerate(zip(lams, results)):
+        if i == poisoned:
+            assert not r.verdict.ok
+            assert r.verdict.unit_ok == (False,)
+            assert "nonfinite" in r.verdict.events
+        else:
+            assert r.verdict.ok, f"rider {i} was collaterally damaged"
+            assert r.verdict.unit_ok == (True,)
+            d = direct.solve(Scalar(lam))
+            assert np.array_equal(np.asarray(r.value.beta),
+                                  np.asarray(d.beta))
+
+
+def test_chaos_poisoned_rider_ladder_recovers(rng):
+    """With the ladder on, the poisoned rider's future still resolves
+    ok — marked degraded — and the riders stay untouched."""
+    prob = _problem(rng, n=40, p=24)
+    cfg = SaifConfig()
+    lams = [0.08, 0.05]
+    srv = open_server(max_batch=4, max_wait_ms=500.0, solver=cfg,
+                      serving=ServingConfig(max_retries=0),
+                      autostart=False)
+    futs = [srv.submit(prob, Scalar(lam)) for lam in lams]
+    with FaultInjector(nan_at={1}, nan_unit=0, tags={"fleet"}):
+        srv.run(timeout=0.05)
+        results = [f.result(timeout=300) for f in futs]
+    srv.close()
+    assert results[0].verdict.ok and results[0].verdict.degraded
+    assert results[1].verdict.ok and not results[1].verdict.degraded
+
+
+# ---------------------------------------------------------------------------
+# config surface
+# ---------------------------------------------------------------------------
+
+def test_server_config_grid_and_fallback(rng):
+    prob = _problem(rng, n=40, p=24)
+    with open_server(ServerConfig(p_buckets=(16,), max_wait_ms=0.0,
+                                  solver=SaifConfig())) as srv:
+        r = srv.submit(prob, Scalar(0.05)).result(timeout=300)
+        assert r.verdict.ok
+        assert srv.stats().bucket_fallbacks == 1   # p=24 > grid max 16
+
+
+def test_open_server_rejects_pad_to():
+    with pytest.raises(TypeError, match="pad_to"):
+        open_server(pad_to=(64, 64))
