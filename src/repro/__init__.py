@@ -35,6 +35,10 @@ _EXPORTS = {
     "SaifConfig": "repro.core.saif", "SaifResult": "repro.core.saif",
     "saif": "repro.core.saif",
     "GroupSaifConfig": "repro.core.group",
+    # screening-rule geometry (DESIGN.md §13; repro.core.screen_rule is
+    # import-light — no jax at import)
+    "ScreenRule": "repro.core.screen_rule",
+    "resolve_screen_rule": "repro.core.screen_rule",
     # fault-tolerant serving runtime (DESIGN.md §10; import-light too)
     "open_serving": "repro.core.serving",
     "ServingSession": "repro.core.serving",

@@ -92,6 +92,11 @@ _EXPORTS = {
     "make_screen_pallas": "repro.core.screen_backend",
     "resolve_backend": "repro.core.screen_backend",
 
+    # screening rules (certificate geometry, DESIGN.md §13; import-light)
+    "ScreenRule": "repro.core.screen_rule",
+    "SCREEN_RULES": "repro.core.screen_rule",
+    "resolve_screen_rule": "repro.core.screen_rule",
+
     # baselines
     "dynamic_screening": "repro.core.dynamic",
     "DynConfig": "repro.core.dynamic",
@@ -137,7 +142,7 @@ _EXPORTS = {
 _SUBMODULES = {
     "active_set", "api", "batch", "cm", "cv", "duality", "dynamic",
     "fused", "group", "homotopy", "inner_backend", "losses", "path",
-    "saif", "screen_backend", "sequential", "serving",
+    "saif", "screen_backend", "screen_rule", "sequential", "serving",
 }
 
 __all__ = sorted(_EXPORTS)

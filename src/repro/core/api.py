@@ -409,12 +409,14 @@ class Session:
             self._gprep = prepare_group(problem.X, problem.y,
                                         self.penalty.gsize, cfg)
             self.screen_backend = None   # the group engine has no pluggable
-            self._compiles0 = unified_compile_count()  # screen backend
+            self.screen_rule = None      # screen backend (nor rule)
+            self._compiles0 = unified_compile_count()
             return
 
         from repro.core.saif import SaifConfig, prepare_path
         from repro.core.screen_backend import (resolve_backend,
-                                               resolve_batch_screen)
+                                               resolve_batch_screen,
+                                               resolve_screen_rule)
         cfg = config if config is not None else SaifConfig()
         if cfg.loss != problem.loss:
             cfg = dataclasses.replace(cfg, loss=problem.loss)
@@ -462,6 +464,10 @@ class Session:
             # on such a session fail at the engine boundary exactly like
             # the legacy frontends did. An unknown name raises here.
             self.screen_backend = resolve_batch_screen(cfg.screen_backend)
+        # the resolved certificate geometry (DESIGN.md §13) — validated at
+        # open_session so a bad rule name fails before any engine dispatch,
+        # and inspectable for Verdict provenance
+        self.screen_rule = resolve_screen_rule(cfg.screen_rule)
         self._compiles0 = unified_compile_count()
 
     # ------------------------------------------------------------------

@@ -66,10 +66,12 @@ from repro.core.inner_backend import (InnerCarry, _dual_and_gap,
 from repro.core.losses import get_loss
 from repro.core.saif import (SaifConfig, SaifResult, add_batch_size_static,
                              default_capacity)
-from repro.core.screen_backend import (BatchScreenFn, ScreenOut,
+from repro.core.screen_backend import (SCREEN_RULES, BatchScreenFn,
+                                       ScreenOut, ScreenRule,
                                        make_batch_screen,
                                        make_batch_screen_fast,
-                                       resolve_batch_screen)
+                                       resolve_batch_screen,
+                                       resolve_screen_rule)
 from repro.runtime.inject import seam as _fault_seam
 
 
@@ -85,6 +87,9 @@ class _BatchState(NamedTuple):
     trace_n_active: jax.Array   # (B, max_outer)
     trace_gap: jax.Array
     trace_dual: jax.Array
+    trace_screened: jax.Array   # (B, max_outer) int32 observability (ISSUE 9)
+    trace_survivors: jax.Array
+    trace_post_viol: jax.Array
 
 
 def _freeze_select(live: jax.Array, old, new):
@@ -95,11 +100,21 @@ def _freeze_select(live: jax.Array, old, new):
     return jax.tree.map(sel, old, new)
 
 
+def _n_surv32_batch(out: ScreenOut, b: int) -> jax.Array:
+    """(B,) int32 survivor counts; ``None`` (legacy custom BatchScreenFns)
+    reads as 0, matching the serial engine's normalization."""
+    ns = out.n_surv
+    if ns is None:
+        return jnp.zeros((b,), jnp.int32)
+    return jnp.broadcast_to(ns.astype(jnp.int32), (b,))
+
+
 @partial(jax.jit, static_argnames=("loss_name", "h", "k_max",
                                    "inner_epochs", "polish_factor",
                                    "max_outer", "use_seq_ball",
                                    "screen_backend", "inner_backend",
-                                   "has_weights", "screen_fn"))
+                                   "has_weights", "screen_fn",
+                                   "screen_rule"))
 def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
                     init_beta, init_mask, init_G, init_rho, init_gidx,
                     h_tilde, h_cap, pad_mask=None,
@@ -107,7 +122,8 @@ def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
                     inner_epochs: int, polish_factor: int, max_outer: int,
                     use_seq_ball: bool, screen_backend: str = "jnp",
                     inner_backend: str = "jnp", has_weights: bool = False,
-                    screen_fn: Optional[BatchScreenFn] = None
+                    screen_fn: Optional[BatchScreenFn] = None,
+                    screen_rule: ScreenRule = SCREEN_RULES["saif"]
                     ) -> SaifResult:
     """The fleet while_loop. Mirrors ``_saif_jit`` body-for-body with a
     leading problem axis; see the module docstring for the batching rules.
@@ -140,16 +156,50 @@ def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
     inner0 = inner.init(aset0, carry_in,
                         aset_lib.gather_columns_batch(X, aset0))
     trace0 = jnp.full((b, max_outer), -1.0, X.dtype)
+    itrace0 = jnp.full((b, max_outer), -1, jnp.int32)
     state0 = _BatchState(
         aset=aset0, z=jnp.zeros_like(Y),
         gap=jnp.full((b,), jnp.inf, X.dtype),
         delta=jnp.asarray(delta0, X.dtype),
         is_add=jnp.ones((b,), bool), stop=jnp.zeros((b,), bool),
         t=jnp.zeros((b,), jnp.int32), inner=inner0,
-        trace_n_active=trace0, trace_gap=trace0, trace_dual=trace0)
+        trace_n_active=trace0, trace_gap=trace0, trace_dual=trace0,
+        trace_screened=itrace0, trace_survivors=itrace0,
+        trace_post_viol=itrace0)
+    # per-problem serial Newton polish (hybrid rule): rides inside the
+    # map-fused live branch so each problem's arithmetic is the literal
+    # serial newton_step — the parity contract extends to the hybrid rule
+    newton = (screen_rule.newton_polish and inner_backend == "gram"
+              and loss_name == "least_squares")
 
     def cond(s: _BatchState):
         return jnp.any(~s.stop & (s.t < max_outer))
+
+    def _newton_one(carry_b, mask_b, Xa_b, y_b, w_b, lam_b, args):
+        """The serial engine's working-set Newton step for one problem
+        (core/saif.py body, DESIGN.md §13): solve on the CM iterate's
+        support, accept only if the official gap certifies improvement."""
+        beta_c, z_c, theta_c_, gap_c = args
+        G, rho = carry_b.G, carry_b.rho
+        m = mask_b & (beta_c != 0.0)
+        sgn = jnp.sign(beta_c)
+        mf = m.astype(X.dtype)
+        Gm = G * (mf[:, None] * mf[None, :]) + jnp.diag(1.0 - mf)
+        rhs = (rho - lam_b * sgn) * mf
+        b_n = jnp.where(m, jnp.linalg.solve(Gm, rhs), 0.0)
+        z_n = Xa_b @ b_n
+        if w_b is None:
+            th_n, gap_n = _dual_and_gap(loss, Xa_b, y_b, b_n, z_n, m,
+                                        lam_b)
+        else:
+            th_n, gap_n = _dual_and_gap(loss, Xa_b, y_b, b_n, z_n, m,
+                                        lam_b, sample_w=w_b)
+        gap_n = jnp.asarray(gap_n, X.dtype)
+        better = gap_n < gap_c          # NaN/garbage reads False
+        return (jnp.where(better, b_n, beta_c),
+                jnp.where(better, z_n, z_c),
+                jnp.where(better, th_n, theta_c_),
+                jnp.where(better, gap_n, gap_c))
 
     def _certify(y_b, w_b, theta_b, gap_b, lam_b, eps_b, delta_b,
                  is_add_b, Xa_b, idx_b, mask_b, cn_b, c0_b):
@@ -173,8 +223,13 @@ def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
         if w_b is not None:
             conj = w_b * conj
         dual_val = -jnp.sum(conj)
-        return (ball.center, delta_b * ball.radius, stop_now_b, del_row,
-                dual_val)
+        if screen_rule.add_bound == "point":
+            # strong-rule ADD geometry (DESIGN.md §13): radius 0
+            r_eff_b = jnp.zeros_like(ball.radius)
+        else:
+            r_eff_b = delta_b * ball.radius
+        return (ball.center, r_eff_b, stop_now_b, del_row,
+                dual_val, ball.radius)
 
     def body(s: _BatchState) -> _BatchState:
         live = ~s.stop & (s.t < max_outer)       # (B,) frozen problems coast
@@ -203,12 +258,21 @@ def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
                     be = inner.make_one(y_b, w_b)
                     carry2 = be.refresh(carry_b, aset_b, Xa_b)
                     out = be.run(carry2, aset_b, Xa_b, lam_b, nep_b)
-                    cert = _certify(y_b, w_b, out.theta,
-                                    jnp.asarray(out.gap, X.dtype), lam_b,
+                    beta_b = out.beta
+                    zo_b = out.z
+                    theta_b = out.theta
+                    gapo_b = jnp.asarray(out.gap, X.dtype)
+                    if newton:
+                        beta_b, zo_b, theta_b, gapo_b = jax.lax.cond(
+                            ~is_add_b,
+                            lambda a: _newton_one(carry2, aset_b.mask,
+                                                  Xa_b, y_b, w_b, lam_b,
+                                                  a),
+                            lambda a: a, (beta_b, zo_b, theta_b, gapo_b))
+                    cert = _certify(y_b, w_b, theta_b, gapo_b, lam_b,
                                     eps_b, delta_b, is_add_b, Xa_b,
                                     aset_b.idx, aset_b.mask, cn_b, c0_b)
-                    return (out.beta, out.z,
-                            jnp.asarray(out.gap, X.dtype), carry2) + cert
+                    return (beta_b, zo_b, gapo_b, carry2) + cert
 
                 def frozen_branch(_):
                     k = aset_b.beta.shape[0]
@@ -217,6 +281,7 @@ def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
                             jnp.zeros((), X.dtype),
                             jnp.asarray(True),
                             jnp.zeros((k,), bool),
+                            jnp.zeros((), X.dtype),
                             jnp.zeros((), X.dtype))
 
                 return jax.lax.cond(live_b, live_branch, frozen_branch,
@@ -227,7 +292,7 @@ def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
             if has_weights:
                 xs = (live, Y, weights) + xs[2:]
             (beta, z, gap, inner_carry, theta_c, r_eff, stop_now, del_row,
-             dual_val) = jax.lax.map(solve_one, xs)
+             dual_val, r_del) = jax.lax.map(solve_one, xs)
         else:
             # --- fleet-step path (the pallas problem-gridded kernel): the
             # backend owns the whole fleet's bursts in one launch, then
@@ -258,7 +323,8 @@ def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
                     k = aset_b.mask.shape[0]
                     return (jnp.zeros_like(theta_b),
                             jnp.zeros((), X.dtype), jnp.asarray(True),
-                            jnp.zeros((k,), bool), jnp.zeros((), X.dtype))
+                            jnp.zeros((k,), bool), jnp.zeros((), X.dtype),
+                            jnp.zeros((), X.dtype))
 
                 return jax.lax.cond(live_b, live_branch, frozen_branch,
                                     None)
@@ -267,8 +333,8 @@ def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
                   aset, col_norm, c0)
             if has_weights:
                 xs = (live, Y, weights) + xs[2:]
-            theta_c, r_eff, stop_now, del_row, dual_val = jax.lax.map(
-                certify_one, xs)
+            (theta_c, r_eff, stop_now, del_row, dual_val,
+             r_del) = jax.lax.map(certify_one, xs)
 
         aset = aset._replace(beta=beta)
 
@@ -278,17 +344,29 @@ def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
         aset = aset_lib.delete_features_batch(aset, del_mask)
 
         # --- ADD phase (skipped fleet-wide once every problem is done) ----
-        do_add = live & s.is_add & ~stop_now
+        if screen_rule.add_bound == "point":
+            # point screens run on EVERY non-stopping step (see the serial
+            # engine: a straggler recruited mid-convergence saves a full
+            # re-convergence after the post-check)
+            do_add = live & ~stop_now
+        else:
+            do_add = live & s.is_add & ~stop_now
 
         def do_add_phase(args):
             aset, delta, is_add = args
             out: ScreenOut = screen(theta_c, r_eff, aset.in_active, do_add)
             add_done = out.max_ub < 1.0                       # (B,)
+            n_sur_scr = _n_surv32_batch(out, b)
+            n_scr_scr = (jnp.sum(~aset.in_active, axis=1).astype(jnp.int32)
+                         - n_sur_scr)
             ranks = jnp.arange(h)
             v_count = jnp.maximum(out.cand_ge - 1 - ranks[None, :], 0)
             keep = ((v_count < h_tilde[:, None]) &
                     (ranks[None, :] < h_cap[:, None]) &
                     jnp.isfinite(out.cand_score))
+            if screen_rule.add_bound == "point":
+                # strong-rule recruiting: only actual KKT violators
+                keep = keep & (out.cand_score >= 1.0)
             keep = jnp.cumprod(keep.astype(jnp.int32), axis=1).astype(bool)
             # progress guarantee, per problem (DESIGN.md §2)
             stuck = gap <= 100.0 * eps
@@ -298,24 +376,70 @@ def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
             aset = aset_lib.add_features_batch(aset, out.cand_idx,
                                                keep & adding[:, None])
             done = do_add & add_done
-            grown = jnp.minimum(10.0 * delta, 1.0)
-            new_delta = jnp.where(done & (delta < 1.0), grown, delta)
-            new_is_add = jnp.where(done & (delta >= 1.0), False, is_add)
-            return aset, new_delta, new_is_add
+            if screen_rule.delta_ramp:
+                grown = jnp.minimum(10.0 * delta, 1.0)
+                new_delta = jnp.where(done & (delta < 1.0), grown, delta)
+                new_is_add = jnp.where(done & (delta >= 1.0), False,
+                                       is_add)
+            else:
+                new_delta = delta
+                new_is_add = jnp.where(done, False, is_add)
+            return (aset, new_delta, new_is_add,
+                    jnp.where(do_add, n_scr_scr, -1),
+                    jnp.where(do_add, n_sur_scr, -1))
 
-        aset, delta, is_add = jax.lax.cond(
-            jnp.any(do_add), do_add_phase, lambda a: a,
+        neg1 = jnp.full((b,), -1, jnp.int32)
+        aset, delta, is_add, n_scr, n_sur = jax.lax.cond(
+            jnp.any(do_add), do_add_phase,
+            lambda a: a + (neg1, neg1),
             (aset, s.delta, s.is_add))
+
+        # --- safe post-check (hybrid rule, DESIGN.md §13) -----------------
+        # one full screen at the unshrunk safe radius gates every stop;
+        # violators deny the stop and are recruited (the safe fallback) —
+        # the serial engine's check, batched per problem
+        if screen_rule.post_check:
+            do_check = live & stop_now
+
+            def check(a):
+                chk: ScreenOut = screen(theta_c, r_del, a.in_active,
+                                        do_check)
+                viol = do_check & (chk.max_ub >= 1.0)         # (B,)
+                ub_c = (chk.cand_score +
+                        jnp.take_along_axis(col_norm, chk.cand_idx, axis=1)
+                        * r_del[:, None])
+                keep = (viol[:, None] & jnp.isfinite(chk.cand_score) &
+                        (ub_c >= 1.0))
+                keep = keep.at[:, 0].set(
+                    viol & jnp.isfinite(chk.cand_score[:, 0]))
+                return (aset_lib.add_features_batch(a, chk.cand_idx, keep),
+                        jnp.where(do_check, viol.astype(jnp.int32), -1))
+
+            def no_check(a):
+                return a, neg1
+
+            aset, post_viol = jax.lax.cond(jnp.any(do_check), check,
+                                           no_check, aset)
+            stop_final = stop_now & (post_viol != 1)
+        else:
+            post_viol = neg1
+            stop_final = stop_now
 
         n_act = aset.count.astype(X.dtype)
         new = _BatchState(
             aset=aset, z=z, gap=gap, delta=delta, is_add=is_add,
-            stop=stop_now, t=s.t + 1, inner=inner_carry,
+            stop=stop_final, t=s.t + 1, inner=inner_carry,
             trace_n_active=s.trace_n_active.at[barange, s.t].set(
                 n_act, mode="drop"),
             trace_gap=s.trace_gap.at[barange, s.t].set(gap, mode="drop"),
             trace_dual=s.trace_dual.at[barange, s.t].set(
-                dual_val, mode="drop"))
+                dual_val, mode="drop"),
+            trace_screened=s.trace_screened.at[barange, s.t].set(
+                n_scr, mode="drop"),
+            trace_survivors=s.trace_survivors.at[barange, s.t].set(
+                n_sur, mode="drop"),
+            trace_post_viol=s.trace_post_viol.at[barange, s.t].set(
+                post_viol, mode="drop"))
         return _freeze_select(live, s, new)
 
     final = jax.lax.while_loop(cond, body, state0)
@@ -328,7 +452,10 @@ def _saif_batch_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
                       trace_dual=final.trace_dual,
                       active_idx=final.aset.idx,
                       active_mask=final.aset.mask,
-                      inner=final.inner)
+                      inner=final.inner,
+                      trace_screened=final.trace_screened,
+                      trace_survivors=final.trace_survivors,
+                      trace_post_viol=final.trace_post_viol)
 
 
 # ---------------------------------------------------------------------------
@@ -506,7 +633,8 @@ def _gram_sweep_fast(G, rho, beta, mask, lam, n_ep, smoothness=1.0):
 @partial(jax.jit, static_argnames=("loss_name", "h", "k_max",
                                    "inner_epochs", "polish_factor",
                                    "max_outer", "use_seq_ball",
-                                   "screen_dtype", "has_weights"))
+                                   "screen_dtype", "has_weights",
+                                   "screen_rule"))
 def _saif_batch_fast_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
                          init_beta, init_mask, h_tilde, h_cap,
                          pad_mask=None, *,
@@ -514,7 +642,9 @@ def _saif_batch_fast_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
                          inner_epochs: int, polish_factor: int,
                          max_outer: int, use_seq_ball: bool,
                          screen_dtype: str = "working",
-                         has_weights: bool = False) -> SaifResult:
+                         has_weights: bool = False,
+                         screen_rule: ScreenRule = SCREEN_RULES["saif"]
+                         ) -> SaifResult:
     """The fast-parity fleet while_loop (see the section comment above).
 
     Same decision structure as ``_saif_batch_jit`` — the same per-problem
@@ -544,13 +674,16 @@ def _saif_batch_fast_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
         aset0 = aset0._replace(in_active=aset0.in_active | pad_mask[None, :])
     carry0, _ = _gram_rebuild_fast(X, Y, weights, aset0)
     trace0 = jnp.full((b, max_outer), -1.0, X.dtype)
+    itrace0 = jnp.full((b, max_outer), -1, jnp.int32)
     state0 = _BatchState(
         aset=aset0, z=jnp.zeros_like(Y),
         gap=jnp.full((b,), jnp.inf, X.dtype),
         delta=jnp.asarray(delta0, X.dtype),
         is_add=jnp.ones((b,), bool), stop=jnp.zeros((b,), bool),
         t=jnp.zeros((b,), jnp.int32), inner=carry0,
-        trace_n_active=trace0, trace_gap=trace0, trace_dual=trace0)
+        trace_n_active=trace0, trace_gap=trace0, trace_dual=trace0,
+        trace_screened=itrace0, trace_survivors=itrace0,
+        trace_post_viol=itrace0)
 
     def cond(s: _BatchState):
         return jnp.any(~s.stop & (s.t < max_outer))
@@ -577,8 +710,19 @@ def _saif_batch_fast_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
         if w_b is not None:
             conj = w_b * conj
         dual_val = -jnp.sum(conj)
-        return (ball.center, delta_b * ball.radius, stop_now_b, del_row,
-                dual_val)
+        if screen_rule.add_bound == "point":
+            # strong-rule ADD at radius 0: the mixed-precision screen
+            # widens whatever radius it is handed by its own certified
+            # rounding bound, so the "point" screen under a reduced dtype
+            # is really a gamma*||theta||-ball — still aggressive, still
+            # covered by the post-check below
+            r_eff_b = jnp.zeros_like(ball.radius)
+        else:
+            r_eff_b = delta_b * ball.radius
+        # the raw safe radius rides along for the post-check screen, which
+        # re-applies the dtype-appropriate widening internally
+        return (ball.center, r_eff_b, stop_now_b, del_row,
+                dual_val, ball.radius)
 
     if has_weights:
         certify = jax.vmap(_certify_one)
@@ -623,12 +767,51 @@ def _saif_batch_fast_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
             theta, gap = dual_gap(Xa, Y, beta, z, aset.mask, lam)
         gap = jnp.asarray(gap, X.dtype)
 
+        # --- fleet Newton polish (hybrid rule, DESIGN.md §13) -------------
+        # The lockstep engine already holds the batched working-set normal
+        # equations, so the serial engine's Newton step batches as ONE
+        # (B, k, k) masked solve. Acceptance stays per problem and is
+        # certified by the same (vmapped) official dual/gap the §11
+        # contract already trusts — a rejected proposal leaves that
+        # problem's CM iterate untouched.
+        if screen_rule.newton_polish:
+            polishing = live & ~s.is_add
+
+            def newton_fleet(args):
+                beta_c, z_c, theta_cc, gap_c = args
+                m = aset.mask & (beta_c != 0.0)
+                mf = m.astype(X.dtype)
+                k = beta_c.shape[1]
+                Gm = (carry2.G * (mf[:, :, None] * mf[:, None, :]) +
+                      jnp.eye(k, dtype=X.dtype) * (1.0 - mf)[:, :, None])
+                rhs = (carry2.rho - lam[:, None] * jnp.sign(beta_c)) * mf
+                b_n = jnp.where(
+                    m, jnp.linalg.solve(Gm, rhs[..., None])[..., 0], 0.0)
+                z_n = jnp.einsum("bnk,bk->bn", Xa, b_n)
+                if has_weights:
+                    th_n, gap_n = dual_gap(Xa, Y, b_n, z_n, m, lam,
+                                           weights)
+                else:
+                    th_n, gap_n = dual_gap(Xa, Y, b_n, z_n, m, lam)
+                gap_n = jnp.asarray(gap_n, X.dtype)
+                better = polishing & (gap_n < gap_c)
+                return (jnp.where(better[:, None], b_n, beta_c),
+                        jnp.where(better[:, None], z_n, z_c),
+                        jnp.where(better[:, None], th_n, theta_cc),
+                        jnp.where(better, gap_n, gap_c))
+
+            beta, z, theta, gap = jax.lax.cond(
+                jnp.any(polishing), newton_fleet, lambda a: a,
+                (beta, z, theta, gap))
+
         if has_weights:
-            (theta_c, r_eff, stop_now, del_row, dual_val) = certify(
+            (theta_c, r_eff, stop_now, del_row, dual_val,
+             r_del_raw) = certify(
                 Y, weights, theta, gap, lam, eps, s.delta, s.is_add, Xa,
                 aset.idx, aset.mask, col_norm, c0)
         else:
-            (theta_c, r_eff, stop_now, del_row, dual_val) = certify(
+            (theta_c, r_eff, stop_now, del_row, dual_val,
+             r_del_raw) = certify(
                 Y, theta, gap, lam, eps, s.delta, s.is_add, Xa,
                 aset.idx, aset.mask, col_norm, c0)
 
@@ -640,17 +823,25 @@ def _saif_batch_fast_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
         aset = _delete_features_fast(aset, del_mask)
 
         # --- ADD phase (skipped fleet-wide once every problem is done) ----
-        do_add = live & s.is_add & ~stop_now
+        if screen_rule.add_bound == "point":
+            do_add = live & ~stop_now
+        else:
+            do_add = live & s.is_add & ~stop_now
 
         def do_add_phase(args):
             aset, delta, is_add = args
             out: ScreenOut = screen(theta_c, r_eff, aset.in_active, do_add)
             add_done = out.max_ub < 1.0                  # (B,)
+            n_sur_scr = _n_surv32_batch(out, b)
+            n_scr_scr = (jnp.sum(~aset.in_active, axis=1).astype(jnp.int32)
+                         - n_sur_scr)
             ranks = jnp.arange(h)
             v_count = jnp.maximum(out.cand_ge - 1 - ranks[None, :], 0)
             keep = ((v_count < h_tilde[:, None]) &
                     (ranks[None, :] < h_cap[:, None]) &
                     jnp.isfinite(out.cand_score))
+            if screen_rule.add_bound == "point":
+                keep = keep & (out.cand_score >= 1.0)
             keep = jnp.cumprod(keep.astype(jnp.int32), axis=1).astype(bool)
             stuck = gap <= 100.0 * eps
             keep = keep.at[:, 0].set(
@@ -659,24 +850,69 @@ def _saif_batch_fast_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
             aset = _add_features_fast(aset, out.cand_idx,
                                       keep & adding[:, None])
             done = do_add & add_done
-            grown = jnp.minimum(10.0 * delta, 1.0)
-            new_delta = jnp.where(done & (delta < 1.0), grown, delta)
-            new_is_add = jnp.where(done & (delta >= 1.0), False, is_add)
-            return aset, new_delta, new_is_add
+            if screen_rule.delta_ramp:
+                grown = jnp.minimum(10.0 * delta, 1.0)
+                new_delta = jnp.where(done & (delta < 1.0), grown, delta)
+                new_is_add = jnp.where(done & (delta >= 1.0), False,
+                                       is_add)
+            else:
+                new_delta = delta
+                new_is_add = jnp.where(done, False, is_add)
+            return (aset, new_delta, new_is_add,
+                    jnp.where(do_add, n_scr_scr, -1),
+                    jnp.where(do_add, n_sur_scr, -1))
 
-        aset, delta, is_add = jax.lax.cond(
-            jnp.any(do_add), do_add_phase, lambda a: a,
+        neg1 = jnp.full((b,), -1, jnp.int32)
+        aset, delta, is_add, n_scr, n_sur = jax.lax.cond(
+            jnp.any(do_add), do_add_phase,
+            lambda a: a + (neg1, neg1),
             (aset, s.delta, s.is_add))
+
+        # --- safe post-check (hybrid rule) --------------------------------
+        # the mixed-precision screen re-widens the raw safe radius for its
+        # own dtype, so a passing check certifies the exact screen passes
+        if screen_rule.post_check:
+            do_check = live & stop_now
+
+            def check(a):
+                chk: ScreenOut = screen(theta_c, r_del_raw, a.in_active,
+                                        do_check)
+                viol = do_check & (chk.max_ub >= 1.0)
+                ub_c = (chk.cand_score +
+                        jnp.take_along_axis(col_norm, chk.cand_idx, axis=1)
+                        * r_del_raw[:, None])
+                keep = (viol[:, None] & jnp.isfinite(chk.cand_score) &
+                        (ub_c >= 1.0))
+                keep = keep.at[:, 0].set(
+                    viol & jnp.isfinite(chk.cand_score[:, 0]))
+                return (_add_features_fast(a, chk.cand_idx, keep),
+                        jnp.where(do_check, viol.astype(jnp.int32), -1))
+
+            def no_check(a):
+                return a, neg1
+
+            aset, post_viol = jax.lax.cond(jnp.any(do_check), check,
+                                           no_check, aset)
+            stop_final = stop_now & (post_viol != 1)
+        else:
+            post_viol = neg1
+            stop_final = stop_now
 
         n_act = aset.count.astype(X.dtype)
         new = _BatchState(
             aset=aset, z=z, gap=gap, delta=delta, is_add=is_add,
-            stop=stop_now, t=s.t + 1, inner=carry2,
+            stop=stop_final, t=s.t + 1, inner=carry2,
             trace_n_active=s.trace_n_active.at[barange, s.t].set(
                 n_act, mode="drop"),
             trace_gap=s.trace_gap.at[barange, s.t].set(gap, mode="drop"),
             trace_dual=s.trace_dual.at[barange, s.t].set(
-                dual_val, mode="drop"))
+                dual_val, mode="drop"),
+            trace_screened=s.trace_screened.at[barange, s.t].set(
+                n_scr, mode="drop"),
+            trace_survivors=s.trace_survivors.at[barange, s.t].set(
+                n_sur, mode="drop"),
+            trace_post_viol=s.trace_post_viol.at[barange, s.t].set(
+                post_viol, mode="drop"))
         return _freeze_select(live, s, new)
 
     final = jax.lax.while_loop(cond, body, state0)
@@ -689,7 +925,10 @@ def _saif_batch_fast_jit(X, Y, W, col_norm, c0, lam, eps, delta0, init_idx,
                       trace_dual=final.trace_dual,
                       active_idx=final.aset.idx,
                       active_mask=final.aset.mask,
-                      inner=final.inner)
+                      inner=final.inner,
+                      trace_screened=final.trace_screened,
+                      trace_survivors=final.trace_survivors,
+                      trace_post_viol=final.trace_post_viol)
 
 
 def saif_batch_compile_count() -> int:
@@ -941,7 +1180,8 @@ def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
     lam_arr = jnp.broadcast_to(
         jnp.asarray(lam, X.dtype).reshape(-1), (b,))
     lams = [float(v) for v in jax.device_get(lam_arr)]
-    use_seq = config.use_seq_ball and W is None
+    rule = resolve_screen_rule(config.screen_rule)
+    use_seq = config.use_seq_ball and W is None and rule.use_seq_ball
     backend = resolve_batch_screen(config.screen_backend, b=b, p=p_eff)
     # parity="fast" dispatch (DESIGN.md §11): the lockstep engine is
     # least-squares only (its inner burst is the batched Gram sweep) and
@@ -994,7 +1234,7 @@ def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
                 polish_factor=config.polish_factor,
                 max_outer=config.max_outer, use_seq_ball=use_seq,
                 screen_dtype=config.screen_dtype,
-                has_weights=W is not None))
+                has_weights=W is not None, screen_rule=rule))
         else:
             inner = resolve_batch_inner(config, n_eff, k_max, b)
             carry = cold_inner_carry_batch(b, k_max, X.dtype, backend=inner)
@@ -1009,7 +1249,8 @@ def fleet_solve(X, Y, lam, config: SaifConfig = SaifConfig(),
                 polish_factor=config.polish_factor,
                 max_outer=config.max_outer, use_seq_ball=use_seq,
                 screen_backend=backend, inner_backend=inner,
-                has_weights=W is not None, screen_fn=screen_fn))
+                has_weights=W is not None, screen_fn=screen_fn,
+                screen_rule=rule))
         # ONE host sync for the whole fleet's overflow flags; elastic
         # growth re-enters cold at doubled capacity (per-problem results
         # are capacity-invariant, so non-overflowing problems reproduce

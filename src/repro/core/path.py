@@ -57,7 +57,8 @@ from repro.core.saif import (PathState, SaifConfig, SaifResult, _saif_jit,
                              add_batch_size_static, default_capacity,
                              initial_support, prepare_path, saif,
                              saif_jit_compile_count)
-from repro.core.screen_backend import ScreenFn, resolve_backend
+from repro.core.screen_backend import (ScreenFn, resolve_backend,
+                                       resolve_screen_rule)
 from repro.runtime.inject import seam as _fault_seam
 
 # Device-resident inter-solve handoff: (idx (k,), beta (k,), live-mask (k,),
@@ -164,7 +165,12 @@ def run_path(prep: PathState, lams: Sequence[float],
     pad_mask = (jnp.arange(p) >= p_true) if p_true < p else None
     unpen = config.unpen_idx
     unpen_static = -1 if unpen is None else unpen
-    use_seq = config.use_seq_ball and unpen is None   # DESIGN.md §7
+    rule = resolve_screen_rule(config.screen_rule)
+    # DESIGN.md §7 (fused) + §13 (rule geometry): the rule gates the
+    # Theorem-2 ball exactly like the serial driver — warm lambda-path
+    # steps are where the gap-safe/hybrid radii screen hardest (the entry
+    # gap from the previous grid point is already tiny)
+    use_seq = config.use_seq_ball and unpen is None and rule.use_seq_ball
     lams_np = np.asarray(sorted([float(l) for l in lams], reverse=True))
     backend = resolve_backend(config.screen_backend)
     n_compile0 = saif_jit_compile_count()
@@ -210,7 +216,8 @@ def run_path(prep: PathState, lams: Sequence[float],
             polish_factor=config.polish_factor,
             max_outer=config.max_outer, use_seq_ball=use_seq,
             screen_backend=backend, inner_backend=inner_name(k_max),
-            unpen_idx=unpen_static, screen_fn=screen_fn))
+            unpen_idx=unpen_static, screen_fn=screen_fn,
+            screen_rule=rule))
 
     results: List[SaifResult] = [None] * len(lams_np)
     if warm0 is not None:

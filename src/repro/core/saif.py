@@ -32,13 +32,15 @@ from repro.core import active_set as aset_lib
 from repro.core.active_set import ActiveSet
 from repro.core.duality import (gap_ball, gap_precision_floor,
                                 intersect_balls, sequential_ball)
-from repro.core.inner_backend import (InnerCarry, cold_inner_carry,
-                                      make_inner, resolve_inner_backend)
+from repro.core.inner_backend import (InnerCarry, _dual_and_gap,
+                                      cold_inner_carry, make_inner,
+                                      resolve_inner_backend)
 from repro.core.losses import get_loss
-from repro.core.screen_backend import (ScreenFn, ScreenOut,
+from repro.core.screen_backend import (ScreenFn, ScreenOut, ScreenRule,
                                        make_screen_from_scan,
                                        make_screen_jnp, make_screen_pallas,
-                                       resolve_backend)
+                                       resolve_backend, resolve_screen_rule)
+from repro.core.screen_rule import SCREEN_RULES
 from repro.runtime.inject import seam as _fault_seam
 
 
@@ -75,6 +77,13 @@ class SaifConfig:
     #   compute dtype of the fast-parity screening gemm (inputs cast down,
     #   f32 accumulation, radius widened by the certified error bound).
     #   Anything but "working" requires parity="fast".
+    screen_rule: str = "saif"     # "saif" | "gap_safe" | "hybrid" — the
+    #   certificate geometry (repro.core.screen_rule, DESIGN.md §13).
+    #   "saif" keeps the Theorem-2 sequential+gap ball and the delta ramp
+    #   bitwise-unchanged; "gap_safe" screens on the gap sphere alone;
+    #   "hybrid" discards with the strong-rule point bound and gates every
+    #   stop behind a safe full-radius post-check (fallback recruits any
+    #   violator in-loop, so safety is preserved by construction).
 
     def __post_init__(self):
         if self.parity not in ("bitwise", "fast"):
@@ -89,6 +98,7 @@ class SaifConfig:
                 "screen_dtype != 'working' is a fast-parity feature: "
                 "low-precision screening deviates from the bitwise serial "
                 "float path; set parity='fast' to opt in")
+        resolve_screen_rule(self.screen_rule)   # fail fast on unknown names
 
 
 class SaifResult(NamedTuple):
@@ -106,6 +116,14 @@ class SaifResult(NamedTuple):
     active_idx: jax.Array    # (k_max,) final slot -> feature map
     active_mask: jax.Array   # (k_max,) final slot validity
     inner: InnerCarry        # final inner-backend carry (placeholder if none)
+    # screening observability (ISSUE 9; fleet engines carry a leading B
+    # axis). Per outer step: features the ADD screen ruled out / could not
+    # rule out (-1 on steps whose ADD phase did not run), and the number
+    # of safe post-check violations (-1 on steps with no check — always
+    # -1 for rules without one). None from engines predating the counters.
+    trace_screened: Optional[jax.Array] = None    # (max_outer,) int32
+    trace_survivors: Optional[jax.Array] = None   # (max_outer,) int32
+    trace_post_viol: Optional[jax.Array] = None   # (max_outer,) int32
 
 
 class _State(NamedTuple):
@@ -120,6 +138,9 @@ class _State(NamedTuple):
     trace_n_active: jax.Array
     trace_gap: jax.Array
     trace_dual: jax.Array
+    trace_screened: jax.Array   # int32 screening counters (ISSUE 9)
+    trace_survivors: jax.Array
+    trace_post_viol: jax.Array
 
 
 def add_batch_size_static(c: float, lam: float, c0_max: float,
@@ -179,11 +200,21 @@ ScanFn = Callable[[jax.Array], jax.Array]
 # legacy signature: theta (n,) -> |X^T theta| (p,)
 
 
+def _n_surv32(out: ScreenOut) -> jax.Array:
+    """Survivor count as int32; legacy/custom ScreenFns without the
+    counter (n_surv=None) read as 0."""
+    ns = out.n_surv
+    if ns is None:
+        return jnp.zeros((), jnp.int32)
+    return ns.astype(jnp.int32)
+
+
 @partial(jax.jit, static_argnames=("loss_name", "h", "k_max",
                                    "inner_epochs", "polish_factor",
                                    "max_outer", "use_seq_ball",
                                    "screen_backend", "inner_backend",
-                                   "unpen_idx", "screen_fn", "scan_fn"))
+                                   "unpen_idx", "screen_fn", "scan_fn",
+                                   "screen_rule"))
 def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
               init_mask, init_G, init_rho, init_gidx, h_tilde, h_cap,
               pad_mask=None,
@@ -192,7 +223,8 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
               use_seq_ball: bool, screen_backend: str = "jnp",
               inner_backend: str = "jnp", unpen_idx: int = -1,
               screen_fn: Optional[ScreenFn] = None,
-              scan_fn: Optional[ScanFn] = None) -> SaifResult:
+              scan_fn: Optional[ScanFn] = None,
+              screen_rule: ScreenRule = SCREEN_RULES["saif"]) -> SaifResult:
     # h (static) sizes the candidate shapes; h_tilde (the violation
     # tolerance) and h_cap (the effective per-step batch size, <= h) are
     # traced — they only feed comparisons. Splitting them lets a lambda
@@ -233,12 +265,15 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
     inner0 = inner.init(aset0, carry_in,
                         aset_lib.gather_columns(X, aset0))
     trace0 = jnp.full((max_outer,), -1.0, X.dtype)
+    itrace0 = jnp.full((max_outer,), -1, jnp.int32)
     state0 = _State(aset=aset0, z=jnp.zeros_like(y),
                     gap=jnp.asarray(jnp.inf, X.dtype),
                     delta=jnp.asarray(delta0, X.dtype),
                     is_add=jnp.asarray(True), stop=jnp.asarray(False),
                     t=jnp.asarray(0), inner=inner0,
-                    trace_n_active=trace0, trace_gap=trace0, trace_dual=trace0)
+                    trace_n_active=trace0, trace_gap=trace0, trace_dual=trace0,
+                    trace_screened=itrace0, trace_survivors=itrace0,
+                    trace_post_viol=itrace0)
 
     def cond(s: _State):
         return (~s.stop) & (s.t < max_outer)
@@ -255,11 +290,52 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
         # refresh for "gram", no-op otherwise), runs the burst, and returns
         # the dual point + duality gap (Eq. 11) along with (beta, z).
         inner_carry = inner.refresh(s.inner, aset, Xa)
+        newton = (screen_rule.newton_polish and inner_backend == "gram"
+                  and loss_name == "least_squares" and unpen_idx < 0)
         n_ep = jnp.where(s.is_add, inner_epochs,
                          inner_epochs * polish_factor)
         out = inner.run(inner_carry, aset, Xa, lam, n_ep)
         beta, z, theta = out.beta, out.z, out.theta
         gap = jnp.asarray(out.gap, X.dtype)
+
+        # --- working-set Newton polish (hybrid rule, DESIGN.md §13) --------
+        # Once recruiting quiesces, the gram carry already holds the
+        # working-set normal equations, so ONE masked solve of
+        # G b = rho - lam*sign gives the exact sub-problem solution under
+        # the current sign pattern — collapsing the O(1/rate) CM polish
+        # tail into a handful of outer steps. The proposal is certified by
+        # the OFFICIAL dual/gap tail and accepted only if it beats the CM
+        # iterate's gap, so a wrong sign pattern, a singular working set
+        # (|A| > n), or numerical junk silently falls back to the CM burst
+        # — no certificate is ever derived from an unverified solve.
+        if newton:
+            def newton_step(args):
+                beta_c, z_c, theta_c_, gap_c = args
+                G, rho = inner_carry.G, inner_carry.rho
+                # Solve on the CM iterate's *support*, not the whole
+                # working set: soft-thresholding zeroes slots whose partial
+                # correlation is < lam exactly, so recruited-but-inactive
+                # extras sit at beta == 0 long before DEL evicts them —
+                # forcing the equality KKT on those slots would push them
+                # off zero and lose the accept test every step.
+                m = aset.mask & (beta_c != 0.0)
+                sgn = jnp.sign(beta_c)
+                mf = m.astype(X.dtype)
+                Gm = (G * (mf[:, None] * mf[None, :]) +
+                      jnp.diag(1.0 - mf))
+                rhs = (rho - lam * sgn) * mf
+                b_n = jnp.where(m, jnp.linalg.solve(Gm, rhs), 0.0)
+                z_n = Xa @ b_n
+                th_n, gap_n = _dual_and_gap(loss, Xa, y, b_n, z_n, m, lam)
+                gap_n = jnp.asarray(gap_n, X.dtype)
+                better = gap_n < gap_c          # NaN/garbage reads False
+                return (jnp.where(better, b_n, beta_c),
+                        jnp.where(better, z_n, z_c),
+                        jnp.where(better, th_n, theta_c_),
+                        jnp.where(better, gap_n, gap_c))
+
+            beta, z, theta, gap = jax.lax.cond(
+                ~s.is_add, newton_step, lambda a: a, (beta, z, theta, gap))
         aset = aset._replace(beta=beta)
 
         # --- ball region from the backend's dual point (Thm 2 / Eq. 12) ----
@@ -283,7 +359,13 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
         # genuinely-active features of the sub-problem, destroying CM
         # progress and thrashing (observed experimentally; documented
         # deviation in DESIGN.md §2).
-        r_eff = s.delta * ball.radius
+        if screen_rule.add_bound == "point":
+            # strong-rule geometry (DESIGN.md §13): the ADD screen runs at
+            # radius 0 — pure KKT violation at the current dual iterate.
+            # Aggressive, not safe; the post-check below gates every stop.
+            r_eff = jnp.zeros_like(ball.radius)
+        else:
+            r_eff = s.delta * ball.radius
         r_del = ball.radius
         theta_c = ball.center
 
@@ -311,9 +393,17 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
             out: ScreenOut = screen(theta_c, r_eff, aset.in_active)
             # stop criterion for ADD (Remark 1): max_{R_t} ub < 1
             add_done = out.max_ub < 1.0
+            n_sur = _n_surv32(out)
+            n_scr = (jnp.sum(~aset.in_active).astype(jnp.int32) - n_sur)
 
             def on_done(args):
                 aset, delta, is_add = args
+                if not screen_rule.delta_ramp:
+                    # point-bound rules (DESIGN.md §13): no violator at the
+                    # current iterate means recruiting is over — go straight
+                    # to the polish phase; the safe post-check still gates
+                    # the eventual stop.
+                    return aset, delta, jnp.asarray(False)
                 grown = jnp.minimum(10.0 * delta, 1.0)
                 new_delta = jnp.where(delta < 1.0, grown, delta)
                 new_is_add = jnp.where(delta < 1.0, is_add, False)
@@ -328,6 +418,11 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
                 v_count = jnp.maximum(out.cand_ge - 1 - ranks, 0)
                 keep = ((v_count < h_tilde) & (ranks < h_cap) &
                         jnp.isfinite(out.cand_score))
+                if screen_rule.add_bound == "point":
+                    # strong-rule recruiting: only actual KKT violators
+                    # (ub = score >= 1) enter; scores sort descending so
+                    # the cumulative-AND below keeps the violator prefix
+                    keep = keep & (out.cand_score >= 1.0)
                 keep = jnp.cumprod(keep.astype(jnp.int32)).astype(bool)
                 # Progress guarantee (TPU adaptation, DESIGN.md §2): when the
                 # sub-problem is already solved to near-target accuracy but no
@@ -341,21 +436,74 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
                 return (aset_lib.add_features(aset, out.cand_idx, keep),
                         delta, is_add)
 
-            return jax.lax.cond(add_done, on_done, on_add,
-                                (aset, delta, is_add))
+            aset, delta, is_add = jax.lax.cond(add_done, on_done, on_add,
+                                               (aset, delta, is_add))
+            return aset, delta, is_add, n_scr, n_sur
 
-        aset, delta, is_add = jax.lax.cond(
-            s.is_add & ~stop_now, do_add_phase,
-            lambda args: args, (aset, s.delta, s.is_add))
+        if screen_rule.add_bound == "point":
+            # the point screen costs one matvec, so it runs on EVERY
+            # non-stopping step, polish phase included: a feature whose
+            # score crosses 1 mid-convergence is recruited the burst it
+            # crosses, not discovered by the final post-check after full
+            # convergence (each such late discovery would otherwise pay a
+            # whole re-convergence of the sub-problem — measured 3-4x the
+            # total solve time on the CI benchmark shape). ``is_add``
+            # still flips off at the first violator-free screen and stays
+            # off (long polish bursts); late recruits don't re-enter the
+            # short-burst phase.
+            do_add = ~stop_now
+        else:
+            do_add = s.is_add & ~stop_now
+        aset, delta, is_add, n_scr, n_sur = jax.lax.cond(
+            do_add, do_add_phase,
+            lambda args: args + (jnp.full((), -1, jnp.int32),
+                                 jnp.full((), -1, jnp.int32)),
+            (aset, s.delta, s.is_add))
+
+        # --- safe post-check (hybrid rule, DESIGN.md §13) -------------------
+        # A point-bound ADD phase discards aggressively, so termination is
+        # gated behind ONE full screen at the certified safe radius: any
+        # violator denies the stop and is recruited on the spot (the safe
+        # fallback). The active set strictly grows on every failed check,
+        # so at most p checks can fail — termination is preserved. All
+        # ADDs are safe (Thm 1a); a solve can only stop with a passing
+        # safe certificate, so hybrid keeps the SAIF guarantee.
+        if screen_rule.post_check:
+            def check(a):
+                chk: ScreenOut = screen(theta_c, r_del, a.in_active)
+                viol = chk.max_ub >= 1.0
+                # recruit every candidate the safe ball cannot rule out;
+                # force slot 0 so a failed check always makes progress
+                # (max_ub can come from a non-candidate column, so the
+                # top-score recruit is the progress guarantee, not ub_c)
+                ub_c = (chk.cand_score +
+                        jnp.take(col_norm, chk.cand_idx) * r_del)
+                keep = viol & jnp.isfinite(chk.cand_score) & (ub_c >= 1.0)
+                keep = keep.at[0].set(
+                    viol & jnp.isfinite(chk.cand_score[0]))
+                return (aset_lib.add_features(a, chk.cand_idx, keep),
+                        viol.astype(jnp.int32))
+
+            def no_check(a):
+                return a, jnp.full((), -1, jnp.int32)
+
+            aset, post_viol = jax.lax.cond(stop_now, check, no_check, aset)
+            stop_final = stop_now & (post_viol != 1)
+        else:
+            post_viol = jnp.full((), -1, jnp.int32)
+            stop_final = stop_now
 
         dual_val = loss.dual_objective(y, theta, lam)   # feasible point
         n_act = aset.count.astype(X.dtype)
         return _State(
             aset=aset, z=z, gap=gap, delta=delta, is_add=is_add,
-            stop=stop_now, t=s.t + 1, inner=inner_carry,
+            stop=stop_final, t=s.t + 1, inner=inner_carry,
             trace_n_active=s.trace_n_active.at[s.t].set(n_act),
             trace_gap=s.trace_gap.at[s.t].set(gap),
-            trace_dual=s.trace_dual.at[s.t].set(dual_val))
+            trace_dual=s.trace_dual.at[s.t].set(dual_val),
+            trace_screened=s.trace_screened.at[s.t].set(n_scr),
+            trace_survivors=s.trace_survivors.at[s.t].set(n_sur),
+            trace_post_viol=s.trace_post_viol.at[s.t].set(post_viol))
 
     final = jax.lax.while_loop(cond, body, state0)
     beta_full = aset_lib.scatter_beta(final.aset, p)
@@ -367,7 +515,10 @@ def _saif_jit(X, y, col_norm, c0, lam, eps, delta0, init_idx, init_beta,
                       trace_dual=final.trace_dual,
                       active_idx=final.aset.idx,
                       active_mask=final.aset.mask,
-                      inner=final.inner)
+                      inner=final.inner,
+                      trace_screened=final.trace_screened,
+                      trace_survivors=final.trace_survivors,
+                      trace_post_viol=final.trace_post_viol)
 
 
 def saif_jit_compile_count() -> int:
@@ -499,10 +650,12 @@ def solve_scalar(prep: PathState, lam: float,
     unpen = config.unpen_idx
     lam_max = prep.lam_max
     b0 = prep.b0
+    rule = resolve_screen_rule(config.screen_rule)
     # The Thm-2 sequential ball assumes the all-penalized null dual
     # theta0 = -f'(0)/lam_max — invalid once b is unpenalized (DESIGN.md
-    # §7), so the gap ball alone drives screening there.
-    use_seq = config.use_seq_ball and unpen is None
+    # §7), so the gap ball alone drives screening there. The rule gates it
+    # too: gap_safe/hybrid screen on the gap sphere alone (§13).
+    use_seq = config.use_seq_ball and unpen is None and rule.use_seq_ball
 
     h = add_batch_size_static(config.c, lam, prep.c0_max, prep.c0_median,
                               p_true)
@@ -575,7 +728,8 @@ def solve_scalar(prep: PathState, lam: float,
             use_seq_ball=use_seq,
             screen_backend=backend, inner_backend=inner,
             unpen_idx=-1 if unpen is None else unpen,
-            screen_fn=screen_fn, scan_fn=scan_fn))
+            screen_fn=screen_fn, scan_fn=scan_fn,
+            screen_rule=rule))
         if not bool(res.overflowed) or k_max >= p_true:
             return res
         k_max = min(2 * k_max, p_true)  # elastic capacity growth + recompile

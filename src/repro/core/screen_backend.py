@@ -54,6 +54,12 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+# the rule/backend seam (DESIGN.md §13): the ScreenRule picks the
+# certificate geometry, the backends here only compute its bounds fast —
+# re-exported so rule consumers import one module
+from repro.core.screen_rule import (SCREEN_RULES, ScreenRule,  # noqa: F401
+                                    resolve_screen_rule)
+
 
 class ScreenOut(NamedTuple):
     max_ub: jax.Array      # scalar: max over R_t of ub (−inf if R_t empty)
@@ -61,6 +67,12 @@ class ScreenOut(NamedTuple):
     cand_idx: jax.Array    # (h,) int32 global feature ids
     cand_lb: jax.Array     # (h,) |score − ||x|| r| per candidate
     cand_ge: jax.Array     # (h,) int32 #{i in R_t : ub_i >= cand_lb}
+    # observability (ISSUE 9): #{i in R_t : ub_i >= 1} — the features this
+    # screen could NOT rule out ("survivors"; |R_t| - n_surv were screened).
+    # Mixed-precision screens count against the widened bounds, so the
+    # count is conservative exactly like the decisions themselves. None is
+    # tolerated from legacy/custom ScreenFns; engines treat it as 0.
+    n_surv: Optional[jax.Array] = None
 
 
 # signature: (theta (n,), r scalar, in_active (p,) bool) -> ScreenOut
@@ -84,6 +96,12 @@ def violation_ge_counts(ub: jax.Array, lb_cand: jax.Array) -> jax.Array:
     return ge_counts_from_hist(hist, lb_sorted, lb_cand)
 
 
+def survivor_count(ub: jax.Array, axis=None) -> jax.Array:
+    """#{i : ub_i >= 1} over the trailing feature axis — the screen's
+    survivor count. -inf entries (active/skipped) never count."""
+    return jnp.sum((ub >= 1.0), axis=axis, dtype=jnp.int32)
+
+
 def _candidate_out(scores_masked, ub, col_norm, r, h) -> ScreenOut:
     """Shared tail: top-h + bounds + counts from masked scores and ub."""
     cand_score, cand_idx = jax.lax.top_k(scores_masked, h)
@@ -91,7 +109,8 @@ def _candidate_out(scores_masked, ub, col_norm, r, h) -> ScreenOut:
     cand_lb = jnp.abs(cand_score - jnp.take(col_norm, cand_idx) * r)
     cand_ge = violation_ge_counts(ub, cand_lb)
     return ScreenOut(max_ub=jnp.max(ub), cand_score=cand_score,
-                     cand_idx=cand_idx, cand_lb=cand_lb, cand_ge=cand_ge)
+                     cand_idx=cand_idx, cand_lb=cand_lb, cand_ge=cand_ge,
+                     n_surv=survivor_count(ub))
 
 
 def make_screen_jnp(X: jax.Array, col_norm: jax.Array, h: int) -> ScreenFn:
@@ -145,7 +164,8 @@ def make_screen_pallas(X: jax.Array, col_norm: jax.Array, h: int,
         hist = ub_histogram_pallas(ub, lb_sorted, interpret=interpret)
         cand_ge = ge_counts_from_hist(hist, lb_sorted, cand_lb)
         return ScreenOut(max_ub=jnp.max(tmax), cand_score=cand_score,
-                         cand_idx=cand_idx, cand_lb=cand_lb, cand_ge=cand_ge)
+                         cand_idx=cand_idx, cand_lb=cand_lb, cand_ge=cand_ge,
+                         n_surv=survivor_count(ub))
     return screen
 
 
@@ -207,7 +227,8 @@ def _candidate_out_batch(masked, ub, col_norm, r, h,
     else:
         cand_ge = jax.vmap(violation_ge_counts)(ub, cand_lb)
     return ScreenOut(max_ub=jnp.max(ub, axis=1), cand_score=cand_score,
-                     cand_idx=cand_idx, cand_lb=cand_lb, cand_ge=cand_ge)
+                     cand_idx=cand_idx, cand_lb=cand_lb, cand_ge=cand_ge,
+                     n_surv=survivor_count(ub, axis=1))
 
 
 def fleet_col_norms(col_norm: jax.Array, b: int) -> jax.Array:
@@ -224,7 +245,8 @@ def _skip_screen_out(h: int, dtype) -> ScreenOut:
                      cand_score=jnp.full((h,), -jnp.inf, dtype),
                      cand_idx=jnp.zeros((h,), jnp.int32),
                      cand_lb=jnp.full((h,), jnp.inf, dtype),
-                     cand_ge=jnp.zeros((h,), jnp.int32))
+                     cand_ge=jnp.zeros((h,), jnp.int32),
+                     n_surv=jnp.zeros((), jnp.int32))
 
 
 def make_batch_screen_jnp(X: jax.Array, col_norm: jax.Array,
@@ -300,7 +322,8 @@ def make_batch_screen_pallas(X: jax.Array, col_norm: jax.Array, h: int,
         cand_ge = jax.vmap(ge_counts_from_hist)(hist, lb_sorted, cand_lb)
         return ScreenOut(max_ub=jnp.max(tmax, axis=1),
                          cand_score=cand_score, cand_idx=cand_idx,
-                         cand_lb=cand_lb, cand_ge=cand_ge)
+                         cand_lb=cand_lb, cand_ge=cand_ge,
+                         n_surv=survivor_count(ub, axis=1))
     return screen
 
 
@@ -385,7 +408,7 @@ def make_batch_screen_fast(X: jax.Array, col_norm: jax.Array, h: int,
                              cand_score=out.cand_score.astype(work_dt),
                              cand_idx=out.cand_idx,
                              cand_lb=out.cand_lb.astype(work_dt),
-                             cand_ge=out.cand_ge)
+                             cand_ge=out.cand_ge, n_surv=out.n_surv)
 
         def escalate(_):
             score_w = jnp.where(undecidable[:, None],

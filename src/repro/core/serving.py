@@ -294,6 +294,11 @@ class Verdict(NamedTuple):
     # backs ``ok`` always runs in working precision, whatever these say.
     parity: str = "bitwise"
     screen_dtype: str = "working"
+    # screening-rule provenance (DESIGN.md §13): which certificate
+    # geometry produced the value — "saif" | "gap_safe" | "hybrid" | a
+    # custom ScreenRule's name. The KKT certification behind ``ok`` is
+    # rule-independent (it checks the returned value, not the rule).
+    screen_rule: str = "saif"
     # Per-unit breakdown (one entry per lambda / fleet member), so a
     # coalescing front-end can attribute a failed certificate to the one
     # poisoned member of a microbatch instead of degrading every rider
@@ -539,6 +544,7 @@ class ServingSession:
             self._degraded += 1
 
         cfg = self.session.config
+        rule = getattr(cfg, "screen_rule", "saif")   # str or ScreenRule
         verdict = Verdict(
             ok=ok, converged=converged, gap=gap, kkt_residual=kkt,
             kkt_tol=tol, events=tuple(dict.fromkeys(events)),
@@ -546,6 +552,7 @@ class ServingSession:
             kkt_check_ms=self._kkt_ms - kkt_ms0,
             parity=getattr(cfg, "parity", "bitwise"),
             screen_dtype=getattr(cfg, "screen_dtype", "working"),
+            screen_rule=getattr(rule, "name", rule),
             unit_ok=final_unit or None,
             unit_degraded=(tuple(not u for u in first_unit)
                            if first_unit else None))

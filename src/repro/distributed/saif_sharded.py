@@ -101,7 +101,8 @@ def make_sharded_screen(design: ShardedDesign, h: int):
     against the h sorted bounds + bincount — no O(p) gather, no O(p log p)
     sort; XLA lowers the (h+1,)-sized reductions to a tiny psum).
     """
-    from repro.core.screen_backend import ScreenOut, violation_ge_counts
+    from repro.core.screen_backend import (ScreenOut, survivor_count,
+                                           violation_ge_counts)
 
     mesh = design.mesh
     axes = _feature_axes(mesh)
@@ -142,7 +143,8 @@ def make_sharded_screen(design: ShardedDesign, h: int):
         cand_lb = jnp.abs(cand_score - jnp.take(design.col_norm, cand_idx) * r)
         cand_ge = violation_ge_counts(ub, cand_lb)
         return ScreenOut(max_ub=max_ub, cand_score=cand_score,
-                         cand_idx=cand_idx, cand_lb=cand_lb, cand_ge=cand_ge)
+                         cand_idx=cand_idx, cand_lb=cand_lb, cand_ge=cand_ge,
+                         n_surv=survivor_count(ub))
     return screen
 
 
@@ -160,7 +162,8 @@ def make_sharded_screen_batch(design: ShardedDesign, h: int):
     the design carries the *shared* norms and the caller passes fleet
     norms explicitly when they differ.
     """
-    from repro.core.screen_backend import ScreenOut, violation_ge_counts
+    from repro.core.screen_backend import (ScreenOut, survivor_count,
+                                           violation_ge_counts)
 
     mesh = design.mesh
     axes = _feature_axes(mesh)
@@ -211,7 +214,7 @@ def make_sharded_screen_batch(design: ShardedDesign, h: int):
         cand_ge = jax.vmap(violation_ge_counts)(ub, cand_lb)
         return ScreenOut(max_ub=max_ub, cand_score=cand_score,
                          cand_idx=cand_idx, cand_lb=cand_lb,
-                         cand_ge=cand_ge)
+                         cand_ge=cand_ge, n_surv=survivor_count(ub, axis=1))
     return screen
 
 

@@ -386,8 +386,9 @@ def test_lazy_public_surface_subprocess():
         "import sys\n"
         "from repro import Problem, Scalar, Path, Fleet, CV, open_session\n"
         "from repro import open_server, ServerConfig, ServingFuture\n"
+        "from repro import ScreenRule, resolve_screen_rule\n"
         "light = {'repro.core.api', 'repro.core.server', "
-        "'repro.core.serving'}\n"
+        "'repro.core.serving', 'repro.core.screen_rule'}\n"
         "heavy = [m for m in sys.modules if m.startswith('repro.core.') "
         "and m not in light]\n"
         "assert not heavy, f'heavy imports: {heavy}'\n"
@@ -396,6 +397,9 @@ def test_lazy_public_surface_subprocess():
         "cfg = ServerConfig(max_batch=4)\n"
         "fut = ServingFuture()\n"
         "assert not fut.done()\n"
+        "rule = resolve_screen_rule('hybrid')\n"
+        "assert isinstance(rule, ScreenRule) and rule.post_check\n"
+        "assert resolve_screen_rule(rule) is rule\n"
         "assert 'jax' not in sys.modules, 'jax imported eagerly'\n"
         "print('ok')\n"
     )

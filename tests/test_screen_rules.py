@@ -1,0 +1,214 @@
+"""Screen-rule grid safety + invariance (ISSUE 9, DESIGN.md §13).
+
+The rule contract under test:
+
+  * ``saif`` (default) is the Theorem-2 geometry, bitwise-unchanged from
+    PR 8 — selecting it explicitly (by name or ScreenRule object) must
+    not move a single bit across the screen x inner backend grid;
+  * ``gap_safe`` is exactly the old engine with the sequential ball
+    disabled — it must equal ``saif`` + ``use_seq_ball=False`` bitwise;
+  * ``hybrid`` discards with the unsafe strong-rule point bound but
+    gates every stop behind a full-radius safe post-check, so its FINAL
+    answer carries the same safe guarantee: support and coefficients
+    match the unscreened CM oracle on every problem — swept over 32
+    seeds, near-lambda_max regimes, and the mixed-precision fast fleet.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SaifConfig, get_loss, saif, saif_batch,
+                        solve_lasso_cm)
+from repro.core.duality import lambda_max
+from repro.core.screen_rule import (SCREEN_RULES, ScreenRule,
+                                    resolve_screen_rule)
+
+LOSS = get_loss("least_squares")
+
+
+def _support(beta, tol=1e-8):
+    return set(np.where(np.abs(np.asarray(beta)) > tol)[0].tolist())
+
+
+def _problem(seed, n=40, p=150, frac=0.15):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(-10, 10, (n, p))
+    w = np.zeros(p)
+    k = max(p // 15, 3)
+    w[rng.choice(p, k, replace=False)] = rng.normal(size=k)
+    y = X @ w + 0.5 * rng.normal(size=n)
+    lam = frac * float(lambda_max(LOSS, jnp.asarray(X), jnp.asarray(y)))
+    return X, y, lam
+
+
+# --------------------------------------------------------------- registry
+
+def test_registry_and_defaults():
+    assert set(SCREEN_RULES) == {"saif", "gap_safe", "hybrid"}
+    assert SaifConfig().screen_rule == "saif"
+    r = resolve_screen_rule("hybrid")
+    assert isinstance(r, ScreenRule)
+    assert r.add_bound == "point" and r.post_check and not r.delta_ramp
+    assert resolve_screen_rule(r) is r           # objects pass through
+    assert resolve_screen_rule("saif").use_seq_ball
+    assert not resolve_screen_rule("gap_safe").use_seq_ball
+
+
+def test_resolve_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown screen rule"):
+        resolve_screen_rule("strong")
+    with pytest.raises(ValueError):
+        SaifConfig(screen_rule="strong")         # config fails fast too
+
+
+def test_point_bound_requires_post_check():
+    with pytest.raises(ValueError, match="post_check"):
+        ScreenRule("bad", use_seq_ball=False, add_bound="point",
+                   post_check=False, delta_ramp=False)
+
+
+# --------------------------------------- saif-rule bitwise invariance
+
+@pytest.mark.parametrize("screen,inner", [("jnp", "jnp"), ("jnp", "gram")])
+def test_saif_rule_selection_is_bitwise_noop(screen, inner):
+    """Naming the default rule (str or object) moves zero bits (PR-8
+    parity across the backend grid)."""
+    X, y, lam = _problem(3)
+    base = SaifConfig(eps=1e-7, screen_backend=screen, inner_backend=inner)
+    ref = saif(X, y, lam, base)
+    for rule in ("saif", SCREEN_RULES["saif"]):
+        res = saif(X, y, lam,
+                   SaifConfig(eps=1e-7, screen_backend=screen,
+                              inner_backend=inner, screen_rule=rule))
+        assert bool(jnp.all(res.beta == ref.beta))
+        assert bool(res.gap == ref.gap)
+        assert int(res.n_outer) == int(ref.n_outer)
+        assert bool(jnp.all(res.trace_gap == ref.trace_gap))
+        assert bool(jnp.all(res.active_idx == ref.active_idx))
+
+
+def test_gap_safe_equals_saif_without_seq_ball():
+    """gap_safe IS the Theorem-2 engine minus the sequential ball."""
+    X, y, lam = _problem(4)
+    a = saif(X, y, lam, SaifConfig(eps=1e-7, use_seq_ball=False))
+    g = saif(X, y, lam, SaifConfig(eps=1e-7, screen_rule="gap_safe"))
+    assert bool(jnp.all(a.beta == g.beta))
+    assert bool(a.gap == g.gap)
+    assert int(a.n_outer) == int(g.n_outer)
+    assert bool(jnp.all(a.trace_gap == g.trace_gap))
+
+
+# ----------------------------------------------- safety: 32-seed sweep
+
+@pytest.mark.parametrize("rule", ["hybrid", "gap_safe"])
+def test_rule_safety_sweep_32_seeds(rule):
+    """Across 32 random problems the rule's support AND coefficients
+    match the unscreened CM oracle — the safe guarantee survives the
+    unsafe discards (hybrid) because the post-check gates every stop."""
+    b = 32
+    rng = np.random.default_rng(7)
+    n, p = 40, 150
+    X = rng.uniform(-10, 10, (n, p))
+    Ys, lams = [], []
+    for i in range(b):
+        w = np.zeros(p)
+        w[rng.choice(p, 10, replace=False)] = rng.normal(size=10)
+        Ys.append(X @ w + 0.5 * rng.normal(size=n))
+        lams.append(0.05 + 0.3 * i / (b - 1))   # lam fractions 0.05..0.35
+    Y = np.stack(Ys)
+    Xj = jnp.asarray(X)
+    lam_abs = [f * float(lambda_max(LOSS, Xj, jnp.asarray(Ys[i])))
+               for i, f in enumerate(lams)]
+    cfg = SaifConfig(eps=1e-8, screen_rule=rule)
+    res = saif_batch(X, Y, jnp.asarray(lam_abs), cfg)
+    for i in range(b):
+        ref = solve_lasso_cm(LOSS, Xj, jnp.asarray(Ys[i]), lam_abs[i],
+                             tol=1e-10)
+        assert _support(res.beta[i]) == _support(ref), (
+            f"rule={rule} seed-problem {i}: support mismatch")
+        np.testing.assert_allclose(np.asarray(res.beta[i]),
+                                   np.asarray(ref), atol=2e-5)
+        assert float(res.gap[i]) <= 1e-8
+
+
+@pytest.mark.parametrize("rule", ["hybrid", "gap_safe"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_rule_safety_near_lambda_max(rule, seed):
+    """The hardest screening regime: lam -> lambda_max, tiny supports,
+    gap at the precision floor. Serial engine, Gaussian design."""
+    rng = np.random.default_rng(100 + seed)
+    n, p = 50, 200
+    X = rng.normal(0, 1, (n, p))
+    w = np.zeros(p)
+    w[rng.choice(p, 5, replace=False)] = rng.normal(size=5)
+    y = X @ w + 0.1 * rng.normal(size=n)
+    lmax = float(lambda_max(LOSS, jnp.asarray(X), jnp.asarray(y)))
+    for frac in (0.95, 0.8):
+        lam = frac * lmax
+        res = saif(X, y, lam, SaifConfig(eps=1e-8, screen_rule=rule))
+        ref = solve_lasso_cm(LOSS, jnp.asarray(X), jnp.asarray(y), lam,
+                             tol=1e-10)
+        assert _support(res.beta) == _support(ref)
+
+
+def test_hybrid_composes_with_mixed_precision_fleet():
+    """hybrid + parity='fast' + bfloat16 screening gemm: the unsafe
+    point discards ride on the widened certified radii and the safe
+    post-check still holds the final answer to the oracle support."""
+    b = 6
+    rng = np.random.default_rng(11)
+    n, p = 40, 150
+    X = rng.uniform(-10, 10, (n, p))
+    Ys, lam_abs = [], []
+    for i in range(b):
+        w = np.zeros(p)
+        w[rng.choice(p, 8, replace=False)] = rng.normal(size=8)
+        y = X @ w + 0.5 * rng.normal(size=n)
+        Ys.append(y)
+        frac = 0.08 + 0.25 * i / (b - 1)
+        lam_abs.append(frac * float(lambda_max(LOSS, jnp.asarray(X),
+                                               jnp.asarray(y))))
+    Y = np.stack(Ys)
+    cfg = SaifConfig(eps=1e-7, screen_rule="hybrid", parity="fast",
+                     screen_dtype="bfloat16")
+    res = saif_batch(X, Y, jnp.asarray(lam_abs), cfg)
+    for i in range(b):
+        ref = solve_lasso_cm(LOSS, jnp.asarray(X), jnp.asarray(Ys[i]),
+                             lam_abs[i], tol=1e-10)
+        assert _support(res.beta[i]) == _support(ref)
+        assert float(res.gap[i]) <= 1e-7
+
+
+# ------------------------------------------------- observability traces
+
+def test_hybrid_trace_counters_populated():
+    """Per-step counters: screens every non-stop step, records the
+    final post-check, and reports rule provenance via config."""
+    X, y, lam = _problem(5)
+    res = saif(X, y, lam, SaifConfig(eps=1e-7, screen_rule="hybrid"))
+    t = int(res.n_outer)
+    scr = np.asarray(res.trace_screened)[:t]
+    srv = np.asarray(res.trace_survivors)[:t]
+    pv = np.asarray(res.trace_post_viol)[:t]
+    ran = scr >= 0
+    assert ran.sum() >= t - 1          # hybrid screens every non-stop step
+    assert (srv[ran] >= 0).all() and (srv[ran] <= X.shape[1]).all()
+    # counters cover the non-active candidate pool only
+    assert (scr[ran] + srv[ran] <= X.shape[1]).all()
+    assert (scr[ran] > 0).all()        # point bound discards aggressively
+    assert (pv == 0).sum() >= 1        # the accepted stop's clean check
+    assert (pv == 1).sum() == 0        # no violations on this problem
+    # untaken steps stay at the -1 sentinel
+    assert (np.asarray(res.trace_screened)[t:] == -1).all()
+
+
+def test_saif_trace_counters_populated():
+    """The default rule also reports counters (ADD steps only, no
+    post-checks — the ball geometry needs none)."""
+    X, y, lam = _problem(6)
+    res = saif(X, y, lam, SaifConfig(eps=1e-7))
+    t = int(res.n_outer)
+    scr = np.asarray(res.trace_screened)[:t]
+    pv = np.asarray(res.trace_post_viol)[:t]
+    assert (scr >= 0).sum() >= 1
+    assert (pv == -1).all()            # saif never post-checks
