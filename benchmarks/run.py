@@ -43,7 +43,7 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma list: runtime,trajectory,heatmap,logistic,"
                          "path,fused,complexity,inner,batch,baselines,"
-                         "serve")
+                         "serve,stream")
     ap.add_argument("--no-json", action="store_true",
                     help="skip the BENCH_<suite>.json artifacts")
     args = ap.parse_args(argv)
@@ -51,7 +51,7 @@ def main(argv=None):
     from benchmarks import (bench_baselines, bench_batch, bench_complexity,
                             bench_fused, bench_heatmap, bench_inner,
                             bench_logistic, bench_path, bench_runtime,
-                            bench_serve, bench_trajectory)
+                            bench_serve, bench_stream, bench_trajectory)
 
     suites = {
         "runtime": bench_runtime,        # Fig 2
@@ -65,6 +65,7 @@ def main(argv=None):
         "batch": bench_batch,            # fleet engine vs sequential (PR 4)
         "baselines": bench_baselines,    # Sec 5 "50x vs dynamic" tracking
         "serve": bench_serve,            # hot session vs cold requests (PR 5)
+        "stream": bench_stream,          # online rows / warm cache (PR 10)
     }
     if args.only:
         keep = set(args.only.split(","))
@@ -77,7 +78,8 @@ def main(argv=None):
             t = (row.get("saif_s") or row.get("saif_path_s")
                  or row.get("engine_s") or row.get("epoch_s")
                  or row.get("fleet_s") or row.get("cv_path_s")
-                 or row.get("hot_s_per_req") or 0.0)
+                 or row.get("hot_s_per_req") or row.get("stream_s")
+                 or 0.0)
             derived = ";".join(f"{k}={v}" for k, v in row.items())
             print(f"{name}[{i}],{t*1e6:.1f},{derived}")
         if not args.no_json:

@@ -1,0 +1,95 @@
+"""Streaming demo: rows arrive in batches, the support evolves, repeat
+traffic hits the homotopy cache, and ``select()`` picks the lambda.
+
+    PYTHONPATH=src python examples/online_stream.py
+
+The three production workloads of DESIGN.md §14 on one session:
+
+  * ``session.update(rows, responses)`` absorbs each arriving batch
+    into the device-resident state (row-capacity padding + incremental
+    Gram/correlation updates) and re-solves warm — watch the latency
+    column stay at solve cost and ``compile_stats()`` stay frozen;
+  * a second session over the same problem asks for a nearby lambda
+    and enters through the shared ``WarmCache`` (Theorem-2 sequential
+    ball around the cached dual) instead of growing a cold active set;
+  * ``session.select()`` runs the CV fleet + the 1-SE rule + a
+    B-subsample stability-selection fleet and returns the support a
+    client actually wants.
+"""
+import time
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro import (Problem, SaifConfig, Scalar, Select, WarmCache,
+                   WarmCacheConfig, open_session)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n0, p = 96, 600
+    beta = np.zeros(p)
+    hot = rng.choice(p, 10, replace=False)
+    beta[hot] = rng.uniform(0.8, 1.6, 10)
+    X = rng.normal(size=(n0, p))
+    y = X @ beta + 0.3 * rng.normal(size=n0)
+    lam = 0.15 * float(np.abs(X.T @ y).max())
+
+    cache = WarmCache(WarmCacheConfig())
+    session = open_session(Problem(X=X, y=y), SaifConfig(eps=1e-7),
+                           warm_cache=cache)
+    res = session.solve(Scalar(lam))
+    support = set(np.flatnonzero(np.abs(np.asarray(res.beta)) > 0))
+    print(f"cold solve: {len(support)} active features")
+
+    # --- rows arrive in batches; the support evolves ------------------
+    print("\nstreaming 8 batches of 16 rows (zero engine recompiles "
+          "after the first padded solve):")
+    for t in range(8):
+        Xn = rng.normal(size=(16, p))
+        yn = Xn @ beta + 0.3 * rng.normal(size=16)
+        t0 = time.perf_counter()
+        res = session.update(rows=Xn, responses=yn, lam=lam)
+        jax.block_until_ready(res.beta)
+        ms = (time.perf_counter() - t0) * 1e3
+        sup = set(np.flatnonzero(np.abs(np.asarray(res.beta)) > 0))
+        joined = len(sup - support)
+        left = len(support - sup)
+        support = sup
+        print(f"  batch {t}: {ms:7.1f} ms  active={len(sup):3d}  "
+              f"(+{joined}/-{left})  gap={float(res.gap):.2e}")
+    stats = session.compile_stats()
+    print(f"engine compilations since open: {stats.since_open}")
+
+    # --- repeat traffic at a nearby lambda hits the warm cache --------
+    repeat = open_session(Problem(X=X, y=y), SaifConfig(eps=1e-7),
+                          warm_cache=cache)
+    t0 = time.perf_counter()
+    r2 = repeat.solve(Scalar(0.7 * lam))
+    jax.block_until_ready(r2.beta)
+    ms = (time.perf_counter() - t0) * 1e3
+    events = [e for e in repeat.drain_events()
+              if e.startswith("warm_cache")]
+    print(f"\nnearby-lambda repeat (0.7x) on a fresh session: "
+          f"{ms:.1f} ms, events={events}")
+    print(f"cache stats: {cache.stats()}")
+
+    # --- auto-lambda: 1-SE CV + stability selection -------------------
+    lam_max = float(np.abs(X.T @ y).max())
+    report = session.select(Select(
+        lams=tuple(np.geomspace(0.5, 0.03, 8) * lam_max),
+        n_folds=4, n_subsamples=12, seed=1))
+    stable = report.stable_support
+    print(f"\nselect(): lam_min={report.lam_min:.3f}  "
+          f"lam_1se={report.lam_1se:.3f}  (rule={report.rule})")
+    print(f"stable support ({stable.size} features at "
+          f"pi>={report.pi_threshold}): recovered "
+          f"{len(set(stable.tolist()) & set(hot.tolist()))}/{len(hot)} "
+          f"true signals")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -17,7 +17,8 @@ import runpy
 import sys
 import warnings
 
-EXAMPLES = ["quickstart", "lasso_path", "cv_readme", "serving"]
+EXAMPLES = ["quickstart", "lasso_path", "cv_readme", "serving",
+            "online_stream"]
 
 
 def main():

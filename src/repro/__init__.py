@@ -51,6 +51,12 @@ _EXPORTS = {
     "NumericalError": "repro.core.serving",
     "BackendFault": "repro.core.serving",
     "DeadlineExceeded": "repro.core.serving",
+    # streaming & model selection (DESIGN.md §14; import-light)
+    "Update": "repro.core.online",
+    "Select": "repro.core.select",
+    "SelectionReport": "repro.core.select",
+    "WarmCache": "repro.core.warm_cache",
+    "WarmCacheConfig": "repro.core.warm_cache",
     # async serving front-end (DESIGN.md §12; import-light as well)
     "open_server": "repro.core.server",
     "Server": "repro.core.server",

@@ -54,6 +54,18 @@ _EXPORTS = {
     "validate_problem": "repro.core.serving",
     "validate_request": "repro.core.serving",
 
+    # streaming & model selection (DESIGN.md §14; import-light)
+    "Update": "repro.core.online",
+    "online_compile_count": "repro.core.online",
+    "Select": "repro.core.select",
+    "SelectionReport": "repro.core.select",
+    "select_solve": "repro.core.select",
+    "subsample_weights": "repro.core.select",
+    "WarmCache": "repro.core.warm_cache",
+    "WarmCacheConfig": "repro.core.warm_cache",
+    "WarmCacheStats": "repro.core.warm_cache",
+    "problem_digest": "repro.core.warm_cache",
+
     # serial solver
     "saif": "repro.core.saif", "solve_scalar": "repro.core.saif",
     "SaifConfig": "repro.core.saif", "SaifResult": "repro.core.saif",
@@ -73,6 +85,7 @@ _EXPORTS = {
     # cross-validation
     "cv_solve": "repro.core.cv", "cv_path": "repro.core.cv",
     "CVPathResult": "repro.core.cv", "kfold_weights": "repro.core.cv",
+    "one_se_lambda": "repro.core.cv",
 
     # oracle / inner machinery
     "solve_lasso_cm": "repro.core.cm", "soft_threshold": "repro.core.cm",
@@ -141,8 +154,9 @@ _EXPORTS = {
 
 _SUBMODULES = {
     "active_set", "api", "batch", "cm", "cv", "duality", "dynamic",
-    "fused", "group", "homotopy", "inner_backend", "losses", "path",
-    "saif", "screen_backend", "screen_rule", "sequential", "serving",
+    "fused", "group", "homotopy", "inner_backend", "losses", "online",
+    "path", "saif", "screen_backend", "screen_rule", "select",
+    "sequential", "serving", "warm_cache",
 }
 
 __all__ = sorted(_EXPORTS)

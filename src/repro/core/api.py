@@ -55,9 +55,17 @@ from typing import Any, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
+# streaming / model-selection request types (DESIGN.md §14) — both
+# modules are import-light (numpy+stdlib at module scope), so re-export
+# here keeps `from repro import Update, Select` on the cheap path while
+# serving.py can isinstance-dispatch on api.Update / api.Select
+from repro.core.online import Update
+from repro.core.select import Select, SelectionReport
+
 __all__ = [
     "Problem", "Session", "open_session",
-    "Scalar", "Path", "Fleet", "CV",
+    "Scalar", "Path", "Fleet", "CV", "Update", "Select",
+    "SelectionReport",
     "lasso", "fused", "group",
     "LassoPenalty", "FusedPenalty", "GroupPenalty",
     "GroupPathResult", "CompileStats", "unified_compile_count",
@@ -239,6 +247,7 @@ SESSION_KWARG_DEFAULTS = {
     "segment_len": 16,     # path-engine overflow-sync segment length
     "make_screen": None,   # custom ScreenFn factory (h -> ScreenFn)
     "pad_to": None,        # (n_bucket, p_bucket) compile-bucket padding
+    "warm_cache": None,    # shared cross-request homotopy WarmCache (§14)
 }
 
 
@@ -351,6 +360,13 @@ class Session:
         self._sharded_warm_k = None
         self._gwarm = None              # group (gidx, gmask, beta_slots)
         self._requests = 0
+        # streaming + homotopy-cache state (DESIGN.md §14)
+        self._warm_cache = kw["warm_cache"]  # shared WarmCache or None
+        self._online = None             # OnlineState once streaming
+        self._last_lam = None           # last solved lambda (Update default)
+        self._pending_events = []       # provenance drained by serving
+        self._cache_last = None         # (digest, lam) of last cache store
+        self._digest_memo = None        # problem digest, computed once
 
         if problem.X is None:
             raise ValueError("Problem.X is required")
@@ -487,8 +503,30 @@ class Session:
             return self._solve_fleet(request)
         if isinstance(request, CV):
             return self._solve_cv(request)
+        if isinstance(request, Update):
+            return self._solve_update(request)
+        if isinstance(request, Select):
+            return self._solve_select(request)
         raise TypeError(f"unknown request {request!r}: expected Scalar, "
-                        f"Path, Fleet or CV")
+                        f"Path, Fleet, CV, Update or Select")
+
+    def update(self, rows=None, responses=None, request=None, **kw):
+        """Streaming verb (DESIGN.md §14): absorb an (m, p) row block into
+        the device-resident problem state and re-solve warm — sugar for
+        ``solve(Update(rows, responses, ...))``."""
+        if isinstance(rows, Update):     # update(Update(...)) sugar
+            request = rows
+        if request is None:
+            request = Update(rows=rows, responses=responses, **kw)
+        return self.solve(request)
+
+    def select(self, request=None, **kw):
+        """Auto-lambda verb (DESIGN.md §14): CV + 1-SE rule + stability
+        selection + refit — sugar for ``solve(Select(...))``; returns a
+        :class:`~repro.core.select.SelectionReport`."""
+        if request is None:
+            request = Select(**kw)
+        return self.solve(request)
 
     # ------------------------------------------------------------------
     # warm boundary state (the serving runtime's checkpoint surface)
@@ -524,6 +562,70 @@ class Session:
         return CompileStats(serial=serial, fleet=fleet, group=grp,
                             total=total, since_open=since,
                             requests=self._requests)
+
+    # ------------------------------------------------------------------
+    # provenance events + cross-request homotopy cache (DESIGN.md §14)
+    # ------------------------------------------------------------------
+
+    def _push_event(self, name: str) -> None:
+        self._pending_events.append(name)
+
+    def drain_events(self) -> Tuple[str, ...]:
+        """Hand back (and clear) provenance events accumulated by the
+        streaming / warm-cache paths — the serving layer folds these
+        into the request's Verdict."""
+        events, self._pending_events = tuple(self._pending_events), []
+        return events
+
+    def drop_cache_entry(self) -> int:
+        """Invalidate the warm-cache entry stored by the most recent
+        cache-routed solve (the serving scrub path calls this when a
+        result fails certification)."""
+        if self._warm_cache is None or self._cache_last is None:
+            return 0
+        digest, lam = self._cache_last
+        self._cache_last = None
+        return self._warm_cache.invalidate(digest, lam)
+
+    def _cache_eligible(self, req) -> bool:
+        """The homotopy cache serves cold, unsharded, plain-LASSO
+        requests on a static (non-streaming) design with the built-in
+        screens — everything else keeps its existing path untouched."""
+        return (self._warm_cache is not None and not req.warm
+                and not req.sharded and self._make_screen is None
+                and self._design is None and self._online is None
+                and self.problem.weights is None
+                and isinstance(self.penalty, LassoPenalty))
+
+    def _cached_entry_solve(self, lams: List[float]):
+        """Solve through the cross-request homotopy cache: on a band hit,
+        enter via the compiled Theorem-2 sequential-ball seed
+        (``path.seq_warm_entry``); on a miss, run the bitwise cold path.
+        Either way the exit warm state is stored for the next request."""
+        from repro.core.path import run_path, seq_warm_entry
+        from repro.core.warm_cache import problem_digest
+        cache = self._warm_cache
+        if self._digest_memo is None:
+            self._digest_memo = problem_digest(self._prep.X, self._prep.y)
+        digest = self._digest_memo
+        lam_hi = max(lams)
+        entry = cache.lookup(digest, lam_hi)
+        if entry is not None:
+            warm0, k0 = seq_warm_entry(self._prep, entry.warm,
+                                       entry.k_max, entry.lam0, lam_hi,
+                                       self.config)
+            self._push_event(f"warm_cache_hit:lam0={entry.lam0:.6g}")
+        else:
+            warm0, k0 = None, None
+            self._push_event("warm_cache_miss")
+        pr, warm, k_max = run_path(self._prep, lams, self.config,
+                                   segment_len=self._segment_len,
+                                   warm0=warm0, k_max0=k0)
+        self._warm, self._warm_k = warm, k_max
+        lam_lo = min(lams)
+        cache.store(digest, lam_lo, warm, k_max)
+        self._cache_last = (digest, lam_lo)
+        return pr
 
     # ------------------------------------------------------------------
     # dispatch arms
@@ -573,6 +675,12 @@ class Session:
             return self._weighted_scalar(float(req.lam))
         if req.sharded:
             res = self._scalar_sharded(float(req.lam), warm=req.warm)
+        elif self._cache_eligible(req):
+            # cross-request homotopy cache (DESIGN.md §14): band hits
+            # enter via the Theorem-2 sequential-ball seed, misses run
+            # the bitwise cold path; the exit warm state is cached
+            pr = self._cached_entry_solve([float(req.lam)])
+            res = pr.results[0]
         elif req.warm or self._make_screen is not None:
             # a single-lambda run of the path engine: bitwise the cold
             # solve_scalar when entered cold, and the only driver that
@@ -593,6 +701,7 @@ class Session:
             from repro.core.saif import solve_scalar
             res = solve_scalar(self._prep, float(req.lam), self.config)
             self._harvest_warm(res)
+        self._last_lam = float(req.lam)
         if isinstance(self.penalty, FusedPenalty):
             from repro.core.fused import recover_from_transformed
             return recover_from_transformed(res.beta, self._design), res
@@ -642,14 +751,18 @@ class Session:
                                 results=pr.results,
                                 n_compilations=pr.n_compilations)
         else:
-            pr, warm, k = run_path(
-                self._prep, lams, self.config,
-                make_screen=(None if self._make_screen is None
-                             else self._memo_make_screen),
-                segment_len=self._segment_len,
-                warm0=self._warm if req.warm else None,
-                k_max0=self._warm_k if req.warm else None)
-            self._warm, self._warm_k = warm, k
+            if self._cache_eligible(req):
+                pr = self._cached_entry_solve(list(lams))
+            else:
+                pr, warm, k = run_path(
+                    self._prep, lams, self.config,
+                    make_screen=(None if self._make_screen is None
+                                 else self._memo_make_screen),
+                    segment_len=self._segment_len,
+                    warm0=self._warm if req.warm else None,
+                    k_max0=self._warm_k if req.warm else None)
+                self._warm, self._warm_k = warm, k
+            self._last_lam = float(min(lams))
             if self._p_real is not None:
                 from repro.core.path import SaifPathResult
                 pr = SaifPathResult(
@@ -737,6 +850,36 @@ class Session:
                         self.config, seed=req.seed,
                         keep_fold_betas=req.keep_fold_betas,
                         refit=req.refit)
+
+    def _solve_update(self, req: Update):
+        if not isinstance(self.penalty, LassoPenalty):
+            raise NotImplementedError(
+                "online row updates serve plain-LASSO sessions "
+                "(DESIGN.md §14)")
+        from repro.core.online import apply_update
+        return apply_update(self, req)
+
+    def _solve_select(self, req: Select) -> SelectionReport:
+        if not isinstance(self.penalty, LassoPenalty):
+            raise NotImplementedError(
+                "Session.select serves plain-LASSO problems "
+                "(DESIGN.md §8/§14)")
+        if self.problem.weights is not None:
+            raise NotImplementedError(
+                "weighted selection is not supported: CV and stability "
+                "selection build their own binary row weights")
+        self._require_y()
+        from repro.core.select import select_solve
+        if self._online is not None:
+            # streaming session: select on the CURRENT resident rows
+            # (the first `filled` buffer rows hold exactly the live data)
+            n = self._prep.n_true or self._prep.X.shape[0]
+            X, y = self._prep.X[:n], self._prep.y[:n]
+        else:
+            X, y = self.problem.X, self.problem.y
+        report = select_solve(X, y, req, self.config)
+        self._last_lam = float(report.lam)
+        return report
 
     # ------------------------------------------------------------------
     # sharded plumbing (lazy: built at the first sharded request)

@@ -186,6 +186,23 @@ def cv_solve(X, y, lams: Sequence[float], n_folds: int = 5,
         n_compilations=n_comp)
 
 
+def one_se_lambda(lams: np.ndarray, cv_mean: np.ndarray,
+                  cv_se: np.ndarray) -> float:
+    """The glmnet 1-SE rule (DESIGN.md §14): the *largest* lambda whose
+    CV error is within one standard error of the minimum — the sparsest
+    model statistically indistinguishable from the best scorer. Expects
+    the descending grid / per-lambda scores of a :class:`CVPathResult`.
+    """
+    lams = np.asarray(lams, np.float64)
+    cv_mean = np.asarray(cv_mean, np.float64)
+    cv_se = np.asarray(cv_se, np.float64)
+    i_min = int(np.argmin(cv_mean))
+    thresh = cv_mean[i_min] + cv_se[i_min]
+    # descending grid: the first index within the threshold is the
+    # largest eligible lambda (i_min itself qualifies, so one exists)
+    return float(lams[int(np.argmax(cv_mean <= thresh))])
+
+
 def cv_path(X, y, lams: Sequence[float], n_folds: int = 5,
             config: SaifConfig = SaifConfig(), seed: int = 0,
             keep_fold_betas: bool = False,

@@ -493,3 +493,36 @@ def resolve_inner_backend(name: str, loss_name: str, n: int,
             f"the VMEM budget (DESIGN.md §6); shrink k_max, shard the "
             f"sample dimension, or use 'gram'/'jnp'")
     return name
+
+
+def gram_block_update(G: jax.Array, rho: jax.Array, gidx: jax.Array,
+                      rows_new: jax.Array, y_new: jax.Array,
+                      rows_old: jax.Array, y_old: jax.Array):
+    """Rank-m streaming update/downdate of a resident gram carry
+    (DESIGN.md §14): replace the (m, p) rows ``rows_old`` (responses
+    ``y_old``) with ``rows_new`` (``y_new``) in the active-block state,
+
+        G   += C_new^T C_new - C_old^T C_old
+        rho += C_new^T y_new - C_old^T y_old
+
+    where ``C = rows[:, gidx]`` gathers the per-slot feature columns of
+    the row block. Traceable (no shape depends on data). Slots with
+    ``gidx < 0`` are masked out of the gather; their G/rho entries may go
+    stale, which invariant (2) above explicitly allows — ``init`` /
+    ``refresh`` never read a slot before reconciling it. An append-only
+    stream passes zero rows as ``rows_old``/``y_old`` (an exact no-op on
+    the subtracted terms), so one traced expression serves both the
+    update and the downdate.
+
+    ``gidx`` is returned unchanged by construction: live slots keep
+    ``gidx == idx``, so the warm re-solve's ``init`` finds zero dirty
+    slots and keeps the updated carry without the O(n k^2) rebuild.
+    """
+    valid = gidx >= 0
+    ids = jnp.where(valid, gidx, 0)
+    vf = valid.astype(G.dtype)
+    c_new = jnp.take(rows_new, ids, axis=1) * vf[None, :]
+    c_old = jnp.take(rows_old, ids, axis=1) * vf[None, :]
+    G2 = G + c_new.T @ c_new - c_old.T @ c_old
+    rho2 = rho + c_new.T @ y_new - c_old.T @ y_old
+    return G2, rho2

@@ -1,0 +1,359 @@
+"""Online row updates for a live Session (DESIGN.md §14).
+
+A production feature-selection service sees new samples (users) arrive
+while a session is hot. ``Session.update(rows, responses)`` absorbs an
+(m, p) row block into the device-resident problem state and re-solves
+warm through the existing ``_saif_jit`` boundary:
+
+  * the design/response buffers are **row-capacity padded** once, at
+    stream entry, to a fixed ``n_cap`` (pow2 headroom in append mode, the
+    ring size in sliding-window mode). Zero pad rows are *exact* for
+    least squares (``grad(0, 0) = 0`` contributes nothing to any X^T
+    correlation, the primal value, or the dual), which is the same
+    identity ``pad_path_state`` already relies on — so the engine's
+    compile key (X's shape) never changes at steady state: **zero new
+    engine compilations per update**;
+  * the screening statistics stay exact incrementally: the signed
+    correlation ``xty = X^T y`` and squared column norms are rank-m
+    updated on device (``c0 = |xty|``, ``col_norm = sqrt(col_sq)``), so
+    the in-loop Theorem-2 sequential ball keeps its exact geometry under
+    streaming;
+  * the resident gram ``InnerCarry`` is block-updated in place
+    (``G += X_new^T X_new - X_old^T X_old`` on the active block,
+    ``rho += X_new^T y_new - X_old^T y_old``) via
+    :func:`repro.core.inner_backend.gram_block_update`; ``gidx`` is left
+    untouched on live slots, so the engine's ``init`` reconciliation
+    finds zero dirty slots and the warm re-solve skips the O(n k^2)
+    rebuild entirely;
+  * sliding-window mode replaces the oldest resident rows (a ring
+    buffer), i.e. a rank-m **downdate**. Catastrophic cancellation in
+    the downdated column stats is caught by a conditioning guard
+    (``col_sq`` shrinking below ~64 eps of the removed mass), which
+    triggers a one-shot exact recompute of the stats and invalidates the
+    carry (``gidx = -1`` forces the engine's out-of-loop rebuild).
+
+Host-side policy statistics frozen at stream entry — and why that is
+sound: ``lam_max`` / ``c0_max`` / ``c0_median`` feed only the *policy*
+quantities (the pow2 ADD-batch bucket ``h`` and the ``delta0`` radius
+ramp), never a safety certificate. Freezing them keeps the compile key
+and host/device sync count constant across the stream; the safe
+screening geometry itself runs on the exactly-updated device ``c0`` /
+``col_norm`` / ``y``.
+
+Module scope stays numpy+stdlib only (the PEP-562 import-light
+contract); jax loads on first use inside :func:`_fns`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import numpy as np
+
+__all__ = ["Update", "OnlineState", "apply_update", "online_compile_count"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Update:
+    """Streaming request: absorb an (m, p) row block, then re-solve warm.
+
+    ``lam`` defaults to the session's last solved lambda; ``window``
+    (fixed at stream entry) turns the stream into a sliding window of
+    the most recent ``window`` rows; ``resolve=False`` applies the
+    update without re-solving (the next Update/Scalar sees the new
+    rows).
+    """
+    rows: Any
+    responses: Any
+    lam: Optional[float] = None
+    window: Optional[int] = None
+    resolve: bool = True
+    deadline_s: Optional[float] = None
+    priority: int = 0
+
+    def __post_init__(self):
+        from repro.core.serving import validate_request
+        validate_request(self)
+
+
+class OnlineState:
+    """Host bookkeeping for a streaming session.
+
+    The authoritative problem state (padded X/y, exact c0/col_norm)
+    lives in the session's ``PathState``; this object tracks the ring
+    geometry plus the two signed device stats the incremental updates
+    need (``xty`` keeps the *sign* that ``c0 = |xty|`` drops).
+    """
+    __slots__ = ("n_cap", "filled", "head", "window", "xty", "col_sq",
+                 "updates", "rebuilds", "grows")
+
+    def __init__(self, n_cap, filled, head, window, xty, col_sq):
+        self.n_cap = n_cap          # padded row capacity (== window in ring mode)
+        self.filled = filled        # true resident row count (n_true)
+        self.head = head            # next write position
+        self.window = window        # None => append-only stream
+        self.xty = xty              # (p,) device: X^T y, signed
+        self.col_sq = col_sq        # (p,) device: ||x_j||^2
+        self.updates = 0
+        self.rebuilds = 0           # downdate-guard exact recomputes
+        self.grows = 0              # append-mode capacity doublings
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << (int(x) - 1).bit_length()
+
+
+@functools.lru_cache(maxsize=None)
+def _fns():
+    """Jitted streaming kernels, built on first use (keeps this module
+    import-light). None of these touch the engine caches — the
+    compile-count contract ``unified_compile_count()`` tracks is about
+    ``_saif_jit``/fleet keys, which a steady-state stream never adds to."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.inner_backend import gram_block_update
+
+    @jax.jit
+    def init_stats(X, y):
+        xty = X.T @ y
+        col_sq = jnp.sum(X * X, axis=0)
+        return xty, col_sq, jnp.abs(xty), jnp.sqrt(jnp.maximum(col_sq, 0.0))
+
+    def _core(X, y, xty, col_sq, pos, rows, resp):
+        old = X[pos]
+        old_y = y[pos]
+        X2 = X.at[pos].set(rows)
+        y2 = y.at[pos].set(resp)
+        removed = jnp.sum(old * old, axis=0)
+        col_sq2 = col_sq + jnp.sum(rows * rows, axis=0) - removed
+        xty2 = xty + rows.T @ resp - old.T @ old_y
+        # downdate conditioning guard: if removing the old rows cancelled
+        # essentially all of a column's mass, the incremental stat has no
+        # trustworthy bits left — flag for an exact recompute. Append-mode
+        # streams replace zero rows (removed == 0) and never trigger.
+        eps = jnp.finfo(X.dtype).eps
+        bad = jnp.any((removed > 0.0) & (col_sq2 <= 64.0 * eps * removed))
+        return (X2, y2, xty2, jnp.maximum(col_sq2, 0.0), old, old_y, bad)
+
+    @jax.jit
+    def apply_plain(X, y, xty, col_sq, pos, rows, resp):
+        X2, y2, xty2, col_sq2, _, _, bad = _core(
+            X, y, xty, col_sq, pos, rows, resp)
+        return (X2, y2, xty2, col_sq2, jnp.abs(xty2),
+                jnp.sqrt(col_sq2), bad)
+
+    @jax.jit
+    def apply_carry(X, y, xty, col_sq, pos, rows, resp, mask, G, rho, gidx):
+        X2, y2, xty2, col_sq2, old, old_y, bad = _core(
+            X, y, xty, col_sq, pos, rows, resp)
+        G2, rho2 = gram_block_update(G, rho, gidx, rows, resp, old, old_y)
+        n_live = jnp.sum(mask).astype(jnp.int32)
+        return (X2, y2, xty2, col_sq2, jnp.abs(xty2),
+                jnp.sqrt(col_sq2), G2, rho2, bad, n_live)
+
+    return {"init": init_stats, "plain": apply_plain, "carry": apply_carry}
+
+
+def online_compile_count() -> int:
+    """Total compilations of the streaming kernels (observability; these
+    are deliberately *outside* ``unified_compile_count`` — the zero-new-
+    engine-compilations contract is about ``_saif_jit`` keys)."""
+    if _fns.cache_info().currsize == 0:
+        return 0
+    return sum(int(f._cache_size()) for f in _fns().values())
+
+
+def _request_error(msg: str):
+    from repro.core.serving import RequestError
+    return RequestError(msg)
+
+
+def _enter_stream(session, req: Update, m: int) -> OnlineState:
+    """First Update on a session: check eligibility, pad the resident
+    design to its row capacity, seed the device stats."""
+    import jax.numpy as jnp
+
+    from repro.core.api import LassoPenalty
+
+    if not isinstance(session.penalty, LassoPenalty):
+        raise NotImplementedError(
+            "online row updates serve plain-LASSO sessions only "
+            f"(penalty: {type(session.penalty).__name__})")
+    prep = getattr(session, "_prep", None)
+    if prep is None:
+        raise _request_error(
+            "Update needs a session with responses (Problem.y)")
+    if session.config.loss != "least_squares":
+        raise NotImplementedError(
+            "online row updates need the least-squares zero-pad-row "
+            f"identity (DESIGN.md §14); loss is {session.config.loss!r}")
+    if session.problem.weights is not None:
+        raise NotImplementedError(
+            "online row updates do not compose with per-sample weights")
+    if getattr(session, "_pad_to", None) is not None:
+        raise NotImplementedError(
+            "online updates own their row-capacity padding; open the "
+            "session without pad_to")
+    if getattr(session, "_sharded", None) is not None:
+        raise NotImplementedError(
+            "online updates would stale the sharded design placement; "
+            "open an unsharded session for streaming")
+
+    n0, _p = prep.X.shape
+    if req.window is not None:
+        window: Optional[int] = int(req.window)
+        if window < n0:
+            raise _request_error(
+                f"Update.window ({window}) must be >= the resident row "
+                f"count ({n0}) at stream entry")
+        n_cap = window
+    else:
+        window = None
+        # pow2 headroom: absorbs many updates before the one recompile a
+        # capacity doubling costs (amortized O(log total_rows) compiles)
+        n_cap = _next_pow2(max(2 * n0, n0 + 4 * m))
+    Xp = jnp.pad(jnp.asarray(prep.X), ((0, n_cap - n0), (0, 0)))
+    yp = jnp.pad(jnp.asarray(prep.y), (0, n_cap - n0))
+    xty, col_sq, c0, col_norm = _fns()["init"](Xp, yp)
+    # zero pad rows leave every column dot product bit-identical, so the
+    # pre-stream warm state (idx/beta/mask and the (k, k) gram carry —
+    # all n-independent shapes) survives the padding exactly.
+    session._prep = prep._replace(X=Xp, y=yp, c0=c0, col_norm=col_norm,
+                                  n_true=n0)
+    st = OnlineState(n_cap=n_cap, filled=n0, head=n0 % n_cap,
+                     window=window, xty=xty, col_sq=col_sq)
+    session._online = st
+    session._push_event(f"online_stream_entered:n_cap={n_cap}")
+    return st
+
+
+def apply_update(session, req: Update):
+    """Absorb ``req`` into ``session`` and (optionally) re-solve warm.
+
+    Returns the warm re-solve's :class:`~repro.core.saif.SaifResult`, or
+    ``None`` when ``req.resolve`` is False. The update is functional on
+    device buffers — nothing is committed to the session until every
+    admission check has passed.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    rows_np = np.asarray(req.rows)
+    m = rows_np.shape[0]
+    st = session._online
+    if st is None:
+        st = _enter_stream(session, req, m)
+    elif req.window is not None and int(req.window) != st.window:
+        raise _request_error(
+            f"Update.window changed mid-stream ({st.window} -> "
+            f"{req.window}); the ring capacity is fixed at stream entry")
+    prep = session._prep
+    n_cap, p = prep.X.shape
+    if rows_np.shape[1] != p:
+        raise _request_error(
+            f"Update.rows must have {p} columns to match the design, "
+            f"got {rows_np.shape[1]}")
+
+    # append-mode capacity growth: double the row buffer (one engine
+    # recompile at the next solve; O(log) such events over any stream)
+    if st.window is None and st.filled + m > n_cap:
+        new_cap = _next_pow2(st.filled + m)
+        pad = new_cap - n_cap
+        prep = prep._replace(X=jnp.pad(prep.X, ((0, pad), (0, 0))),
+                             y=jnp.pad(prep.y, (0, pad)))
+        session._prep = prep
+        st.n_cap = n_cap = new_cap
+        st.grows += 1
+        session._push_event(f"online_capacity_grown:n_cap={new_cap}")
+
+    if st.window is None:
+        pos_np = st.head + np.arange(m)
+    else:
+        pos_np = (st.head + np.arange(m)) % st.n_cap
+    dtype = prep.X.dtype
+    rows = jnp.asarray(rows_np, dtype)
+    resp = jnp.asarray(np.asarray(req.responses), dtype)
+    pos = jnp.asarray(pos_np, jnp.int32)
+
+    fns = _fns()
+    warm = session._warm
+    carry = None if warm is None else warm[3]
+    use_carry = (carry is not None and carry.G.ndim == 2
+                 and carry.G.shape[0] == warm[0].shape[0]
+                 and warm[0].shape[0] > 1)
+    if use_carry:
+        idx, vals, mask, carry = warm
+        (X2, y2, xty2, col_sq2, c02, cn2, G2, rho2, bad, n_live) = (
+            fns["carry"](prep.X, prep.y, st.xty, st.col_sq, pos, rows,
+                         resp, mask, carry.G, carry.rho, carry.gidx))
+    else:
+        (X2, y2, xty2, col_sq2, c02, cn2, bad) = fns["plain"](
+            prep.X, prep.y, st.xty, st.col_sq, pos, rows, resp)
+        n_live = None
+
+    # the one host sync per update: the conditioning guard, batched with
+    # the window-vs-active admission count when a carry is resident
+    if n_live is not None:
+        bad_h, live_h = (int(v) for v in jax.device_get((bad, n_live)))
+    else:
+        bad_h, live_h = int(jax.device_get(bad)), 0
+    if st.window is not None and live_h > st.window:
+        # nothing committed yet — the session state is untouched
+        raise _request_error(
+            f"Update.window ({st.window}) is smaller than the resident "
+            f"active count ({live_h}); the windowed system would be "
+            f"underdetermined — raise the window")
+
+    # commit
+    st.updates += 1
+    if st.window is None:
+        st.filled += m
+        st.head += m
+    else:
+        st.filled = min(st.filled + m, st.window)
+        st.head = (st.head + m) % st.n_cap
+    if bad_h:
+        from repro.core.inner_backend import InnerCarry
+        xty2, col_sq2, c02, cn2 = fns["init"](X2, y2)
+        if use_carry:
+            # the freshly-updated G/rho shared the cancellation — mark
+            # every slot dirty so the engine's init rebuilds them exactly
+            session._warm = (idx, vals, mask, InnerCarry(
+                G=G2, rho=rho2, gidx=jnp.full_like(carry.gidx, -1)))
+        st.rebuilds += 1
+        session._push_event("online_downdate_rebuild")
+    elif use_carry:
+        from repro.core.inner_backend import InnerCarry
+        session._warm = (idx, vals, mask,
+                         InnerCarry(G=G2, rho=rho2, gidx=carry.gidx))
+    st.xty, st.col_sq = xty2, col_sq2
+    session._prep = prep._replace(X=X2, y=y2, c0=c02, col_norm=cn2,
+                                  n_true=st.filled)
+
+    if not req.resolve:
+        return None
+    lam = req.lam if req.lam is not None else session._last_lam
+    if lam is None:
+        raise _request_error(
+            "Update.lam is required on the first resolving update (the "
+            "session has no previous lambda to re-solve at)")
+    return _resolve(session, float(lam))
+
+
+def _resolve(session, lam: float):
+    """Warm re-solve at the updated state through the shared engine —
+    identical statics to the session's Scalar path, so the steady-state
+    stream reuses one ``_saif_jit`` entry."""
+    from repro.core.path import run_path
+
+    pr, warm, k_max = run_path(
+        session._prep, [lam], session.config,
+        make_screen=(None if session._make_screen is None
+                     else session._memo_make_screen),
+        segment_len=session._segment_len,
+        warm0=session._warm, k_max0=session._warm_k)
+    session._warm, session._warm_k = warm, k_max
+    session._last_lam = lam
+    return pr.results[0]

@@ -51,8 +51,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core._compat import warn_deprecated
+from repro.core.duality import (duality_gap, feasible_dual, gap_ball,
+                                sequential_ball)
 from repro.core.inner_backend import (InnerCarry, cold_inner_carry,
                                       resolve_inner_backend)
+from repro.core.losses import get_loss
 from repro.core.saif import (PathState, SaifConfig, SaifResult, _saif_jit,
                              add_batch_size_static, default_capacity,
                              initial_support, prepare_path, saif,
@@ -127,6 +130,88 @@ def grow_warm(warm: WarmState, k: int, inner_name: str) -> WarmState:
         carry = cold_inner_carry(k, vals.dtype, backend=inner_name)
     return (jnp.pad(idx, (0, pad)), jnp.pad(vals, (0, pad)),
             jnp.pad(mask, (0, pad)), carry)
+
+
+@partial(jax.jit, static_argnames=("loss_name",))
+def _seq_entry_jit(X, y, col_norm, idx, vals, mask, gidx, lam0, lam, p_true,
+                   loss_name: str = "least_squares"):
+    """Theorem-2 sequential-ball warm entry (DESIGN.md §14), compiled.
+
+    Given a cached solution at ``lam0 >= lam`` (slot layout idx/vals/mask
+    plus its gram carry's gidx), certify a dual ball that contains the
+    *target* dual optimum theta*(lam) and pre-recruit its screening
+    survivors into the free slots:
+
+      * theta0 = feasible dual of the cached primal at lam0, with
+        gap0 its duality gap — so theta*(lam0) lies in the gap sphere
+        B(theta0, r_gap0) (Ndiaye et al., "Mind the duality gap");
+      * the paper's Theorem-2 sequential ball maps theta*(lam0) to a
+        ball around (lam0/lam) theta*(lam0); seeding it from theta0
+        instead is made rigorous by widening with the *propagated* gap
+        radius: theta*(lam) in B((lam0/lam) theta0,
+        r_seq + (lam0/lam) r_gap0), since the center moved by at most
+        (lam0/lam) ||theta0 - theta*(lam0)||.
+
+    Features with ub_j = |x_j^T center| + ||x_j|| r < 1 are certified
+    inactive at lam; the survivors (minus those already resident) fill
+    the free slots with vals 0 and gidx -1, so the engine's ``init``
+    reconciles the new columns in-trace (one bounded rebuild, no
+    recompile). The cached live slots keep gidx untouched — an exact-
+    lambda repeat enters with zero dirty slots. This only *seeds* the
+    active set: the solve itself still runs SAIF's ADD loop and stop
+    test, so the end result stays KKT-certified regardless of the seed.
+    """
+    loss = get_loss(loss_name)
+    p = X.shape[1]
+    k = idx.shape[0]
+    vals = jnp.where(mask, vals, 0.0)
+    cols = jnp.take(X, idx, axis=1)
+    z = cols @ vals
+    hat = -loss.grad(z, y) / lam0
+    theta0 = feasible_dual(loss, X, y, hat, lam0)
+    gap0 = jnp.maximum(duality_gap(loss, cols, y, vals, theta0, lam0,
+                                   mask=mask), 0.0)
+    r_gap0 = gap_ball(loss, theta0, gap0, lam0).radius
+    ball = sequential_ball(loss, y, theta0, lam0, lam)
+    r = ball.radius + (lam0 / lam) * r_gap0
+    ub = jnp.abs(X.T @ ball.center) + col_norm * r
+    real = jnp.arange(p) < p_true          # bucket-padded columns never seed
+    survive = (ub >= 1.0) & real
+    # pre-recruit survivors not already resident into the free slots
+    in_slots = jnp.zeros((p,), bool).at[idx].max(mask)
+    score = jnp.where(survive & ~in_slots, ub, -jnp.inf)
+    cand_score, cand_idx = jax.lax.top_k(score, k)
+    ok = jnp.isfinite(cand_score)
+    free_pos = jnp.nonzero(~mask, size=k, fill_value=k)[0]
+    pos = jnp.where(ok, free_pos, k)       # k = out of range -> dropped
+    idx2 = idx.at[pos].set(cand_idx, mode="drop")
+    mask2 = mask.at[pos].set(True, mode="drop")
+    gidx2 = gidx.at[pos].set(-1, mode="drop")
+    n_seeded = jnp.sum(ok & (free_pos < k)).astype(jnp.int32)
+    return idx2, vals, mask2, gidx2, jnp.sum(survive).astype(jnp.int32), \
+        n_seeded
+
+
+def seq_warm_entry(prep: PathState, warm: WarmState, k_max: int,
+                   lam0: float, lam: float,
+                   config: SaifConfig) -> Tuple[WarmState, int]:
+    """Build a certified warm-entry state at ``lam`` from a cached
+    solution at ``lam0`` (the cross-request homotopy cache's hit path,
+    DESIGN.md §14). Host-sync-free: one jitted call, lam/lam0 traced, so
+    every (shape, capacity) pair compiles exactly once."""
+    n, _ = prep.X.shape
+    k_out = max(int(k_max), int(warm[0].shape[0]))
+    name = resolve_inner_backend(config.inner_backend, config.loss,
+                                 prep.n_true or n, k_out)
+    idx, vals, mask, carry = grow_warm(warm, k_out, name)
+    X = prep.X
+    p_true = prep.p_true or X.shape[1]
+    idx2, vals2, mask2, gidx2, _, _ = _seq_entry_jit(
+        X, prep.y, prep.col_norm, idx, vals, mask, carry.gidx,
+        jnp.asarray(lam0, X.dtype), jnp.asarray(lam, X.dtype),
+        jnp.asarray(p_true, jnp.int32), loss_name=config.loss)
+    return ((idx2, vals2, mask2,
+             InnerCarry(G=carry.G, rho=carry.rho, gidx=gidx2)), k_out)
 
 
 def _segments(n_lams: int, segment_len: int) -> List[slice]:

@@ -81,6 +81,8 @@ class ServerConfig:
     cache_dir: Optional[str] = None   # persistent compilation cache
     solver: Any = None            # solver config shared by every session
     serving: Any = None           # ServingConfig shared by every session
+    warm_cache: Any = None        # shared WarmCache — cross-request
+    #                               homotopy entries (DESIGN.md §14)
     autostart: bool = True        # start the dispatch thread at open
 
 
@@ -488,10 +490,17 @@ class Server:
         n_b, p_b = key[-2], key[-1]
         n, p = np.asarray(problem.X).shape
         pad_to = (n_b, p_b) if (n_b, p_b) != (n, p) else None
+        opts = self._opts
+        if self.config.warm_cache is not None \
+                and opts.get("warm_cache") is None:
+            # every session the server opens shares the configured
+            # cross-request homotopy cache; an eviction/readmission
+            # cycle then re-enters warm instead of cold
+            opts = dict(opts, warm_cache=self.config.warm_cache)
         sess = open_serving(problem, self.config.solver,
                             serving=self.config.serving,
                             guard=self._guard, pad_to=pad_to,
-                            **self._opts)
+                            **opts)
         with self._cond:
             self._sessions_opened += 1
         self._lru[key] = sess

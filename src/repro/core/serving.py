@@ -236,6 +236,66 @@ def validate_request(req) -> None:
         if lams.size == 0:
             raise RequestError("CV.lams must be a non-empty grid")
         _require_lam(lams, "CV.lams")
+    elif kind == "Update":
+        rows = _np(req.rows)
+        if rows.ndim != 2 or rows.shape[0] < 1 or rows.shape[1] < 1:
+            raise RequestError(
+                f"Update.rows must be a non-empty (m, p) row block, got "
+                f"shape {rows.shape}")
+        _require_finite("Update.rows", rows)
+        resp = _np(req.responses)
+        if resp.shape != (rows.shape[0],):
+            raise RequestError(
+                f"Update.responses must have shape ({rows.shape[0]},) to "
+                f"match rows {rows.shape}, got {resp.shape}")
+        _require_finite("Update.responses", resp)
+        if req.lam is not None:
+            if np.asarray(req.lam, dtype=np.float64).ndim != 0:
+                raise RequestError(
+                    f"Update.lam must be a scalar (or None to re-solve at "
+                    f"the session's last lambda), got shape "
+                    f"{np.asarray(req.lam).shape}")
+            _require_lam(req.lam, "Update.lam")
+        if req.window is not None:
+            w = int(req.window)
+            if w < 1:
+                raise RequestError(
+                    f"Update.window must be a positive row count (or None "
+                    f"for an append-only stream), got {req.window!r}")
+            if w < rows.shape[0]:
+                raise RequestError(
+                    f"Update.window ({w}) must be >= the update batch "
+                    f"({rows.shape[0]} rows); a single batch may not "
+                    f"overflow the sliding window")
+            # window >= resident-active-count is enforced at serve time
+            # (core/online.py) where the active set is known
+    elif kind == "Select":
+        lams = np.asarray(req.lams, dtype=np.float64)
+        if lams.size == 0:
+            raise RequestError("Select.lams must be a non-empty grid")
+        _require_lam(lams, "Select.lams")
+        if int(req.n_folds) < 2:
+            raise RequestError(
+                f"Select.n_folds must be >= 2, got {req.n_folds}")
+        if req.rule not in ("1se", "min"):
+            raise RequestError(
+                f"Select.rule must be '1se' or 'min', got {req.rule!r}")
+        if req.stability:
+            if int(req.n_subsamples) < 2:
+                raise RequestError(
+                    f"Select.n_subsamples must be >= 2 (selection "
+                    f"frequencies need >= 2 subsamples), got "
+                    f"{req.n_subsamples}")
+            frac = float(req.subsample_frac)
+            if not (0.0 < frac < 1.0):
+                raise RequestError(
+                    f"Select.subsample_frac must lie in (0, 1), got "
+                    f"{req.subsample_frac!r}")
+        pi = float(req.pi_threshold)
+        if not (0.0 < pi <= 1.0):
+            raise RequestError(
+                f"Select.pi_threshold must lie in (0, 1], got "
+                f"{req.pi_threshold!r}")
     # Serving knobs shared by every request kind (PR 8): the sync
     # ServingSession.solve() and the async Server.submit() accept the
     # same request values, so both are validated here.
@@ -492,6 +552,9 @@ class ServingSession:
             events.append(f"retry:{attempt}:{type(e).__name__}")
 
         value = self._primary(request, t0, deadline, on_retry, events)
+        drain = getattr(self.session, "drain_events", None)
+        if drain is not None:
+            events += list(drain())
         self._retries_total += retries
         self._breaker_failures = 0      # a served request closes the streak
 
@@ -847,6 +910,40 @@ class ServingSession:
                          else bool(res.overflowed),
                          n_outer=0 if res is None else int(res.n_outer))]
 
+        if isinstance(request, api.Update):
+            if value is None:        # resolve=False: ingest-only, nothing
+                return []            # to certify until the next solve
+            prep = sess._prep
+            lam = getattr(sess, "_last_lam", None)
+            # streaming design: the capacity-padding rows are exactly
+            # zero, so the full padded (X, y) gives the same LS KKT
+            # residual as the logical row set (DESIGN.md §14)
+            return [dict(beta=value.beta, gap=value.gap,
+                         lam=float(lam), kkt=True, X=prep.X, y=prep.y,
+                         pen=None, sample_w=None,
+                         overflowed=bool(value.overflowed),
+                         n_outer=int(value.n_outer))]
+
+        if isinstance(request, api.Select):
+            if value.beta is None:
+                # no refit requested: certify the CV score table's
+                # finiteness at the chosen lambda (the CV idiom above)
+                return [dict(beta=jnp.asarray(np.asarray(value.cv_mean)),
+                             gap=0.0, lam=float(value.lam), kkt=False)]
+            if getattr(sess, "_online", None) is not None:
+                prep = sess._prep
+                X, y, pen = prep.X, prep.y, None   # zero pad rows exact
+            else:
+                X, y, pen = design()
+            res = value.best_result
+            return [dict(beta=value.beta,
+                         gap=(0.0 if res is None else res.gap),
+                         lam=float(value.lam), kkt=True, X=X, y=y,
+                         pen=pen, sample_w=None,
+                         overflowed=False if res is None
+                         else bool(res.overflowed),
+                         n_outer=0 if res is None else int(res.n_outer))]
+
         raise RequestError(f"unknown request {request!r}")
 
     def _scrub_warm(self, request, events) -> None:
@@ -854,7 +951,7 @@ class ServingSession:
         coefficients in the slot buffers); reset the affected warm
         surface so later warm=True requests re-enter cold."""
         from repro.core import api
-        if not isinstance(request, (api.Scalar, api.Path)):
+        if not isinstance(request, (api.Scalar, api.Path, api.Update)):
             return
         s = self.session
         if getattr(request, "sharded", False):
@@ -863,6 +960,12 @@ class ServingSession:
             s._gwarm = None
         else:
             s.set_warm_state(None, None)
+            # a result seeded from the cross-request cache failed its
+            # certificate: drop the seeding entry so repeat traffic
+            # re-enters cold (DESIGN.md §14)
+            drop = getattr(s, "drop_cache_entry", None)
+            if drop is not None and drop():
+                events.append("warm_cache_invalidated")
         events.append("warm_state_reset")
 
     # ------------------------------------------------------------------
@@ -885,6 +988,11 @@ class ServingSession:
         from repro.core import api
         sess = self.session
         if isinstance(sess.penalty, api.GroupPenalty):
+            return None
+        if isinstance(request, api.Update):
+            # replaying an Update on a fresh session of the ORIGINAL
+            # problem would double-apply the rows; the oracle rung
+            # re-solves the streamed problem instead
             return None
         if getattr(request, "sharded", False):
             return None
@@ -1012,6 +1120,36 @@ class ServingSession:
                 res = _result_like(res, beta, gap)
             return value._replace(beta=beta, best_result=res), sess
 
+        if isinstance(request, api.Select):
+            if value.beta is None:
+                return None
+            if getattr(sess, "_online", None) is not None:
+                Xd, yd = sess._prep.X, sess._prep.y   # zero pad rows exact
+            else:
+                Xd = jnp.asarray(self.problem.X)
+                yd = jnp.asarray(self.problem.y, Xd.dtype)
+            out = self._oracle_solve(Xd, yd, float(value.lam), None)
+            if out is None:
+                return None
+            beta, gap = out
+            res = value.best_result
+            if res is not None:
+                res = _result_like(res, beta, gap)
+            return value._replace(beta=beta, best_result=res), sess
+
+        if isinstance(request, api.Update):
+            prep = getattr(sess, "_prep", None)
+            lam = getattr(sess, "_last_lam", None)
+            if value is None or prep is None or lam is None:
+                return None
+            # the streamed problem lives in the session's padded prep;
+            # zero pad rows make the unscreened LS oracle exact
+            out = self._oracle_solve(prep.X, prep.y, float(lam), None)
+            if out is None:
+                return None
+            beta, gap = out
+            return _result_like(value, beta, gap), sess
+
         return None
 
     def _oracle_solve(self, X, y, lam: float, sample_w):
@@ -1056,6 +1194,8 @@ class ServingSession:
             return None
         if isinstance(self.session.penalty, api.GroupPenalty):
             return None
+        if isinstance(request, api.Update):
+            return None     # same double-apply hazard as _rung_grow
         X = np.asarray(self.problem.X)
         y = self.problem.y
         y64 = None if y is None else np.asarray(y, np.float64)

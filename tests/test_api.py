@@ -387,8 +387,12 @@ def test_lazy_public_surface_subprocess():
         "from repro import Problem, Scalar, Path, Fleet, CV, open_session\n"
         "from repro import open_server, ServerConfig, ServingFuture\n"
         "from repro import ScreenRule, resolve_screen_rule\n"
+        "from repro import Update, Select, SelectionReport\n"
+        "from repro import WarmCache, WarmCacheConfig\n"
         "light = {'repro.core.api', 'repro.core.server', "
-        "'repro.core.serving', 'repro.core.screen_rule'}\n"
+        "'repro.core.serving', 'repro.core.screen_rule', "
+        "'repro.core.online', 'repro.core.select', "
+        "'repro.core.warm_cache'}\n"
         "heavy = [m for m in sys.modules if m.startswith('repro.core.') "
         "and m not in light]\n"
         "assert not heavy, f'heavy imports: {heavy}'\n"
@@ -400,6 +404,11 @@ def test_lazy_public_surface_subprocess():
         "rule = resolve_screen_rule('hybrid')\n"
         "assert isinstance(rule, ScreenRule) and rule.post_check\n"
         "assert resolve_screen_rule(rule) is rule\n"
+        "upd = Update(rows=[[1.0, 2.0]], responses=[1.0])\n"
+        "sel = Select(lams=(0.5, 0.1), n_subsamples=4)\n"
+        "assert sel.rule == '1se' and SelectionReport._fields\n"
+        "cache = WarmCache(WarmCacheConfig(capacity=2, band=2.0))\n"
+        "assert len(cache) == 0 and cache.stats().hits == 0\n"
         "assert 'jax' not in sys.modules, 'jax imported eagerly'\n"
         "print('ok')\n"
     )

@@ -1,0 +1,454 @@
+"""Streaming & model-selection subsystem tests (DESIGN.md §14).
+
+What must hold:
+
+  * an online row stream (``Session.update``) matches the cold solve of
+    the concatenated design — allclose coefficients, identical support,
+    gap within the engine tolerance — across the jnp/gram inner grid;
+  * the steady-state stream adds ZERO new engine compilations (the
+    row-capacity padding keeps one ``_saif_jit`` key alive);
+  * sliding-window (ring) streams match the cold solve of the last
+    ``window`` rows, and the downdate conditioning guard catches
+    catastrophic cancellation with an exact recompute (event + parity);
+  * warm-cache entries stay KKT-certified through the serving layer
+    (32-seed sweep, zero safety violations) and the cache LRU/band/
+    invalidation semantics hold;
+  * ``Session.select`` returns a coherent SelectionReport (1-SE >= min
+    lambda, frequencies in [0, 1], one-compilation stability fleet)
+    end-to-end through the serving layer;
+  * the new request types validate with typed errors before any device
+    work.
+"""
+import numpy as np
+import pytest
+
+from repro.core.api import (Problem, Scalar, Select, Update, open_session,
+                            unified_compile_count)
+from repro.core.online import online_compile_count
+from repro.core.saif import SaifConfig
+from repro.core.serving import (NumericalError, RequestError, open_serving)
+from repro.core.warm_cache import (WarmCache, WarmCacheConfig,
+                                   problem_digest)
+
+from conftest import make_regression
+
+
+def _stream_problem(seed=0, n0=40, p=120, k=5, noise=0.1):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n0, p))
+    beta = np.zeros(p)
+    beta[:k] = rng.uniform(0.8, 1.6, k)
+    y = X @ beta + noise * rng.normal(size=n0)
+    return X, y, beta, rng
+
+
+def _batch(rng, beta, m, noise=0.1):
+    p = beta.shape[0]
+    Xn = rng.normal(size=(m, p))
+    return Xn, Xn @ beta + noise * rng.normal(size=m)
+
+
+# ---------------------------------------------------------------------------
+# online-update parity vs the cold concatenated solve
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("inner", ["jnp", "gram"])
+def test_update_parity_vs_cold(inner):
+    X, y, bt, rng = _stream_problem(seed=0)
+    lam = 0.2 * float(np.abs(X.T @ y).max())
+    cfg = SaifConfig(eps=1e-8, inner_backend=inner)
+    sess = open_session(Problem(X=X, y=y), cfg)
+    sess.solve(Scalar(lam))
+
+    Xs, ys = X, y
+    res = None
+    for _ in range(4):
+        Xn, yn = _batch(rng, bt, m=8)
+        res = sess.update(rows=Xn, responses=yn, lam=lam)
+        Xs = np.vstack([Xs, Xn])
+        ys = np.concatenate([ys, yn])
+
+    cold = open_session(Problem(X=Xs, y=ys), cfg).solve(Scalar(lam))
+    b1, b2 = np.asarray(res.beta), np.asarray(cold.beta)
+    assert float(res.gap) <= cfg.eps
+    assert np.allclose(b1, b2, atol=1e-6)
+    assert np.array_equal(np.flatnonzero(np.abs(b1) > 0),
+                          np.flatnonzero(np.abs(b2) > 0))
+
+
+def test_update_request_convenience_and_lam_default():
+    X, y, bt, rng = _stream_problem(seed=1)
+    lam = 0.25 * float(np.abs(X.T @ y).max())
+    sess = open_session(Problem(X=X, y=y),
+                        SaifConfig(eps=1e-8, inner_backend="gram"))
+    sess.solve(Scalar(lam))            # sets the session's last lambda
+    Xn, yn = _batch(rng, bt, m=4)
+    res = sess.update(rows=Xn, responses=yn)     # lam defaults to last
+    assert float(res.gap) <= 1e-8
+    # ingest-only, then the follow-up resolve sees the new rows
+    Xn2, yn2 = _batch(rng, bt, m=4)
+    assert sess.update(rows=Xn2, responses=yn2, resolve=False) is None
+    res2 = sess.solve(Scalar(lam))
+    cold = open_session(
+        Problem(X=np.vstack([X, Xn, Xn2]),
+                y=np.concatenate([y, yn, yn2])),
+        SaifConfig(eps=1e-8, inner_backend="gram")).solve(Scalar(lam))
+    assert np.allclose(np.asarray(res2.beta), np.asarray(cold.beta),
+                       atol=1e-6)
+
+
+def test_zero_engine_compiles_at_steady_state():
+    """A 10-update stream (fixed batch size, windowed ring => fixed
+    shapes) adds zero ``_saif_jit``-family keys and zero streaming-kernel
+    keys after the warm-up update."""
+    X, y, bt, rng = _stream_problem(seed=2, n0=64)
+    lam = 0.2 * float(np.abs(X.T @ y).max())
+    cfg = SaifConfig(eps=1e-8, inner_backend="gram")
+    sess = open_session(Problem(X=X, y=y), cfg)
+    sess.solve(Scalar(lam))
+    Xn, yn = _batch(rng, bt, m=8)
+    sess.update(rows=Xn, responses=yn, lam=lam, window=64)  # warm-up
+    c_engine = unified_compile_count()
+    c_online = online_compile_count()
+    for _ in range(10):
+        Xn, yn = _batch(rng, bt, m=8)
+        res = sess.update(rows=Xn, responses=yn, lam=lam, window=64)
+    assert unified_compile_count() == c_engine
+    assert online_compile_count() == c_online
+    assert float(res.gap) <= cfg.eps
+    assert sess._online.updates == 11
+
+
+def test_append_capacity_growth_is_logarithmic():
+    X, y, bt, rng = _stream_problem(seed=3, n0=32)
+    lam = 0.2 * float(np.abs(X.T @ y).max())
+    sess = open_session(Problem(X=X, y=y),
+                        SaifConfig(eps=1e-8, inner_backend="gram"))
+    sess.solve(Scalar(lam))
+    for _ in range(12):                      # 32 + 96 rows, cap 64 -> 128
+        Xn, yn = _batch(rng, bt, m=8)
+        sess.update(rows=Xn, responses=yn, lam=lam)
+    st = sess._online
+    assert st.grows == 1                     # one doubling for 4x rows
+    ev = sess.drain_events()
+    assert any(e.startswith("online_capacity_grown") for e in ev)
+
+
+# ---------------------------------------------------------------------------
+# sliding window: ring parity + downdate conditioning guard
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("inner", ["jnp", "gram"])
+def test_window_parity_vs_cold_tail(inner):
+    X, y, bt, rng = _stream_problem(seed=4, n0=64)
+    W = 64
+    lam = 0.2 * float(np.abs(X.T @ y).max())
+    cfg = SaifConfig(eps=1e-8, inner_backend=inner)
+    sess = open_session(Problem(X=X, y=y), cfg)
+    sess.solve(Scalar(lam))
+    rows_all, ys_all = [X], [y]
+    res = None
+    for _ in range(12):
+        Xn, yn = _batch(rng, bt, m=8)
+        rows_all.append(Xn)
+        ys_all.append(yn)
+        res = sess.update(rows=Xn, responses=yn, lam=lam, window=W)
+    Xs = np.vstack(rows_all)[-W:]
+    ys = np.concatenate(ys_all)[-W:]
+    cold = open_session(Problem(X=Xs, y=ys), cfg).solve(Scalar(lam))
+    b1, b2 = np.asarray(res.beta), np.asarray(cold.beta)
+    assert np.allclose(b1, b2, atol=1e-6)
+    assert np.array_equal(np.flatnonzero(np.abs(b1) > 0),
+                          np.flatnonzero(np.abs(b2) > 0))
+
+
+def test_downdate_conditioning_guard_rebuilds_exactly():
+    """Huge-magnitude rows leaving the window cancel essentially all the
+    incremental column mass; the guard must recompute the stats exactly
+    (event + rebuild counter) and parity must still hold."""
+    X, y, bt, rng = _stream_problem(seed=5, n0=32)
+    W = 32
+    lam = 0.2 * float(np.abs(X.T @ y).max())
+    cfg = SaifConfig(eps=1e-8, inner_backend="gram")
+    sess = open_session(Problem(X=X, y=y), cfg)
+    sess.solve(Scalar(lam))
+    # batch 1: pathological magnitude, fills half the ring (ingest-only
+    # — solving the contaminated window at the clean-scale lambda would
+    # activate everything and trip the window-vs-active guard)
+    Xb = 1e8 * rng.normal(size=(16, X.shape[1]))
+    yb = Xb @ bt
+    sess.update(rows=Xb, responses=yb, window=W, resolve=False)
+    sess.drain_events()
+    # stream normal rows until every pathological row leaves the window,
+    # then resolve on the clean tail
+    rows_all = [X, Xb]
+    ys_all = [y, yb]
+    res = None
+    for i in range(4):
+        Xn, yn = _batch(rng, bt, m=8)
+        rows_all.append(Xn)
+        ys_all.append(yn)
+        res = sess.update(rows=Xn, responses=yn, lam=lam, window=W,
+                          resolve=(i == 3))
+    assert sess._online.rebuilds >= 1
+    assert any(e == "online_downdate_rebuild"
+               for e in sess.drain_events())
+    Xs = np.vstack(rows_all)[-W:]
+    ys = np.concatenate(ys_all)[-W:]
+    cold = open_session(Problem(X=Xs, y=ys), cfg).solve(Scalar(lam))
+    b1, b2 = np.asarray(res.beta), np.asarray(cold.beta)
+    assert np.allclose(b1, b2, atol=1e-6)
+    assert np.array_equal(np.flatnonzero(np.abs(b1) > 0),
+                          np.flatnonzero(np.abs(b2) > 0))
+
+
+# ---------------------------------------------------------------------------
+# admission: typed errors before any device work
+# ---------------------------------------------------------------------------
+
+def test_update_validation_errors():
+    with pytest.raises(RequestError, match="non-empty"):
+        Update(rows=np.zeros((0, 3)), responses=np.zeros(0))
+    with pytest.raises(NumericalError, match="Update.rows"):
+        Update(rows=[[np.nan, 1.0]], responses=[1.0])
+    with pytest.raises(RequestError, match="responses"):
+        Update(rows=np.ones((2, 3)), responses=np.ones(3))
+    with pytest.raises(RequestError, match="window"):
+        Update(rows=np.ones((4, 3)), responses=np.ones(4), window=2)
+    with pytest.raises(RequestError, match="Update.lam"):
+        Update(rows=np.ones((1, 3)), responses=np.ones(1), lam=-1.0)
+
+
+def test_update_stream_admission_errors():
+    X, y, bt, rng = _stream_problem(seed=6, n0=24)
+    lam = 0.3 * float(np.abs(X.T @ y).max())
+    sess = open_session(Problem(X=X, y=y),
+                        SaifConfig(eps=1e-8, inner_backend="gram"))
+    sess.solve(Scalar(lam))
+    # window below the resident row count at entry
+    Xn, yn = _batch(rng, bt, m=4)
+    with pytest.raises(RequestError, match="resident row count"):
+        sess.update(Update(rows=Xn, responses=yn, lam=lam, window=8))
+    # enter, then change the window mid-stream
+    sess.update(rows=Xn, responses=yn, lam=lam, window=24)
+    with pytest.raises(RequestError, match="mid-stream"):
+        sess.update(Update(rows=Xn, responses=yn, lam=lam, window=32))
+    # wrong column count
+    with pytest.raises(RequestError, match="columns"):
+        sess.update(rows=np.ones((2, 7)), responses=np.ones(2), lam=lam)
+    # a first resolving update with no lambda anywhere
+    X2, y2, _, _ = _stream_problem(seed=7, n0=24)
+    s2 = open_session(Problem(X=X2, y=y2),
+                      SaifConfig(inner_backend="gram"))
+    with pytest.raises(RequestError, match="first resolving update"):
+        s2.update(rows=Xn, responses=yn)
+
+
+def test_select_validation_errors():
+    with pytest.raises(RequestError, match="non-empty"):
+        Select(lams=())
+    with pytest.raises(RequestError, match="n_folds"):
+        Select(lams=(0.1,), n_folds=1)
+    with pytest.raises(RequestError, match="rule"):
+        Select(lams=(0.1,), rule="2se")
+    with pytest.raises(RequestError, match="n_subsamples"):
+        Select(lams=(0.1,), n_subsamples=1)
+    with pytest.raises(RequestError, match="subsample_frac"):
+        Select(lams=(0.1,), subsample_frac=1.5)
+    with pytest.raises(RequestError, match="pi_threshold"):
+        Select(lams=(0.1,), pi_threshold=0.0)
+
+
+# ---------------------------------------------------------------------------
+# cross-request homotopy cache
+# ---------------------------------------------------------------------------
+
+def test_warm_cache_lru_band_and_invalidate():
+    cache = WarmCache(WarmCacheConfig(capacity=2, band=2.0))
+    d = "digest-a"
+    cache.store(d, 1.0, ("warm1",), 8)
+    # band: lam <= lam0 <= 2 lam
+    assert cache.lookup(d, 0.6).lam0 == 1.0
+    assert cache.lookup(d, 1.0).lam0 == 1.0       # exact repeat hits
+    assert cache.lookup(d, 0.4) is None           # 1.0 > 2 * 0.4
+    assert cache.lookup(d, 2.0) is None           # upward: not certified
+    assert cache.lookup("other", 0.6) is None
+    # closest eligible entry wins
+    cache.store(d, 0.8, ("warm2",), 8)
+    assert cache.lookup(d, 0.6).lam0 == 0.8
+    # LRU eviction at capacity
+    cache.store(d, 0.5, ("warm3",), 8)
+    assert len(cache) == 2
+    st = cache.stats()
+    assert st.evictions == 1 and st.puts == 3
+    # invalidate one entry, then the whole problem
+    assert cache.invalidate(d, 0.5) == 1
+    assert cache.invalidate(d) == 1
+    assert len(cache) == 0
+
+
+def test_problem_digest_is_content_keyed():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(8, 5))
+    y = rng.normal(size=8)
+    assert problem_digest(X, y) == problem_digest(X.copy(), y.copy())
+    assert problem_digest(X, y) != problem_digest(X + 1e-9, y)
+    assert problem_digest(X, y) != problem_digest(
+        X.astype(np.float32), y.astype(np.float32))
+
+
+@pytest.mark.parametrize("screen_rule", ["saif", "hybrid"])
+def test_warm_cache_hit_parity_and_certification(screen_rule):
+    """A nearby-lambda repeat enters through the cached Theorem-2 ball
+    and must return the cacheless session's support/coefficients with a
+    passing serving certificate."""
+    rng = np.random.default_rng(10)
+    X, y, _ = make_regression(rng, n=60, p=200, uniform=False)
+    lam_max = float(np.abs(X.T @ y).max())
+    cfg = SaifConfig(eps=1e-8, inner_backend="gram",
+                     screen_rule=screen_rule)
+    cache = WarmCache(WarmCacheConfig())
+    prob = Problem(X=X, y=y)
+
+    s1 = open_serving(prob, cfg, warm_cache=cache)
+    s1.solve(Scalar(0.3 * lam_max))
+    val, verdict = s1.solve(Scalar(0.21 * lam_max))
+    assert verdict.ok
+    assert any(e.startswith("warm_cache_hit") for e in verdict.events)
+    assert cache.stats().hits >= 1
+
+    bare = open_session(prob, cfg).solve(Scalar(0.21 * lam_max))
+    b1, b2 = np.asarray(val.beta), np.asarray(bare.beta)
+    assert np.allclose(b1, b2, atol=1e-7)
+    assert np.array_equal(np.flatnonzero(np.abs(b1) > 0),
+                          np.flatnonzero(np.abs(b2) > 0))
+
+
+def test_warm_cache_32_seed_safety_sweep():
+    """Acceptance sweep: across 32 seeds the cached warm entry must
+    produce a passing KKT certificate and the cacheless support — zero
+    safety violations. One shape => the engine compiles are shared."""
+    cfg = SaifConfig(eps=1e-8, inner_backend="gram")
+    cache = WarmCache(WarmCacheConfig(capacity=64))
+    violations = []
+    for seed in range(32):
+        rng = np.random.default_rng(1000 + seed)
+        X, y, _ = make_regression(rng, n=40, p=96, uniform=False)
+        lam_max = float(np.abs(X.T @ y).max())
+        prob = Problem(X=X, y=y)
+        ss = open_serving(prob, cfg, warm_cache=cache)
+        ss.solve(Scalar(0.35 * lam_max))
+        val, verdict = ss.solve(Scalar(0.25 * lam_max))
+        hit = any(e.startswith("warm_cache_hit") for e in verdict.events)
+        bare = open_session(prob, cfg).solve(Scalar(0.25 * lam_max))
+        same = np.array_equal(
+            np.flatnonzero(np.abs(np.asarray(val.beta)) > 0),
+            np.flatnonzero(np.abs(np.asarray(bare.beta)) > 0))
+        if not (verdict.ok and hit and same):
+            violations.append((seed, verdict.ok, hit, same))
+    assert not violations, violations
+    assert cache.stats().hits >= 32
+
+
+def test_warm_cache_skips_warm_and_screen_fn_sessions():
+    rng = np.random.default_rng(11)
+    X, y, _ = make_regression(rng, n=40, p=80, uniform=False)
+    lam_max = float(np.abs(X.T @ y).max())
+    cache = WarmCache()
+    sess = open_session(Problem(X=X, y=y),
+                        SaifConfig(inner_backend="gram"),
+                        warm_cache=cache)
+    sess.solve(Scalar(0.3 * lam_max))
+    assert len(cache) == 1
+    # warm=True continues the session's own state, not the cache
+    sess.solve(Scalar(0.2 * lam_max, warm=True))
+    assert cache.stats().hits == 0
+
+
+# ---------------------------------------------------------------------------
+# Session.select: 1-SE + stability selection
+# ---------------------------------------------------------------------------
+
+def test_select_end_to_end_through_serving():
+    rng = np.random.default_rng(20)
+    X, y, beta = make_regression(rng, n=80, p=120, frac_active=0.05,
+                                 noise=0.5, uniform=False)
+    lam_max = float(np.abs(X.T @ y).max())
+    lams = tuple(np.geomspace(0.5, 0.02, 8) * lam_max)
+    cfg = SaifConfig(eps=1e-7, inner_backend="gram")
+    ss = open_serving(Problem(X=X, y=y), cfg)
+    rep, verdict = ss.solve(Select(lams=lams, n_folds=4, n_subsamples=8,
+                                   seed=3))
+    assert verdict.ok
+    assert rep.rule == "1se"
+    assert rep.lam == rep.lam_1se >= rep.lam_min > 0
+    assert rep.lams.shape == rep.cv_mean.shape == rep.cv_se.shape
+    assert np.all(np.isfinite(rep.cv_mean)) and np.all(rep.cv_se >= 0)
+    assert rep.frequencies.shape == (X.shape[1],)
+    assert np.all((rep.frequencies >= 0) & (rep.frequencies <= 1))
+    assert np.array_equal(rep.stable_support,
+                          np.flatnonzero(rep.frequencies >= 0.6))
+    assert rep.beta is not None and rep.best_result is not None
+    assert float(rep.best_result.gap) <= 1e-7
+    # the true signal should dominate the stable support
+    truth = set(np.flatnonzero(np.abs(beta) > 0))
+    assert truth & set(rep.stable_support.tolist())
+
+
+def test_select_min_rule_and_no_stability_no_refit():
+    rng = np.random.default_rng(21)
+    X, y, _ = make_regression(rng, n=50, p=80, uniform=False)
+    lam_max = float(np.abs(X.T @ y).max())
+    lams = tuple(np.geomspace(0.5, 0.05, 5) * lam_max)
+    sess = open_session(Problem(X=X, y=y),
+                        SaifConfig(inner_backend="gram"))
+    rep = sess.select(Select(lams=lams, n_folds=3, rule="min",
+                             stability=False, refit=False))
+    assert rep.lam == rep.lam_min
+    assert rep.frequencies is None and rep.stable_support is None
+    assert rep.beta is None and rep.best_result is None
+
+
+def test_select_stability_fleet_compiles_once():
+    """A repeat select on the same session must add zero engine
+    compilations — the CV fold fleet and the B-subsample stability fleet
+    each own exactly one persistent key."""
+    rng = np.random.default_rng(22)
+    X, y, _ = make_regression(rng, n=48, p=64, uniform=False)
+    lam_max = float(np.abs(X.T @ y).max())
+    lams = tuple(np.geomspace(0.4, 0.05, 4) * lam_max)
+    sess = open_session(Problem(X=X, y=y),
+                        SaifConfig(inner_backend="gram"))
+    req = Select(lams=lams, n_folds=3, n_subsamples=6, seed=0)
+    rep1 = sess.select(req)
+    c0 = unified_compile_count()
+    rep2 = sess.select(req)
+    assert unified_compile_count() == c0
+    assert rep2.n_compilations == 0
+    assert rep1.lam == rep2.lam
+    assert np.array_equal(rep1.stable_support, rep2.stable_support)
+
+
+def test_select_on_streamed_session_uses_current_rows():
+    """select() after updates must score the streamed problem (the
+    logical rows), not the session's original design."""
+    X, y, bt, rng = _stream_problem(seed=30, n0=40, p=64, k=4)
+    lam = 0.25 * float(np.abs(X.T @ y).max())
+    cfg = SaifConfig(eps=1e-7, inner_backend="gram")
+    sess = open_session(Problem(X=X, y=y), cfg)
+    sess.solve(Scalar(lam))
+    Xs, ys = X, y
+    for _ in range(3):
+        Xn, yn = _batch(rng, bt, m=8)
+        sess.update(rows=Xn, responses=yn, lam=lam)
+        Xs = np.vstack([Xs, Xn])
+        ys = np.concatenate([ys, yn])
+    lams = tuple(np.geomspace(0.5, 0.05, 4)
+                 * float(np.abs(Xs.T @ ys).max()))
+    req = Select(lams=lams, n_folds=3, stability=False, seed=1)
+    rep = sess.select(req)
+    ref = open_session(Problem(X=Xs, y=ys), cfg).select(req)
+    assert np.allclose(rep.cv_mean, ref.cv_mean, rtol=1e-10)
+    assert rep.lam == ref.lam
+    assert np.allclose(np.asarray(rep.beta), np.asarray(ref.beta),
+                       atol=1e-7)
